@@ -1,0 +1,94 @@
+"""Benchmark harness — one function per paper table + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV (plus a table column).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run --quick    # skip slow model bench
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _model_step_bench():
+    """Throughput of one smoke train step per arch (CPU host numbers)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import get_config, list_archs
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model as M
+    from repro.models.sharding import make_policy
+    from repro.train.optimizer import OptConfig, init_opt_state
+    from repro.train.train_loop import make_train_step
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for arch in list_archs():
+        cfg = get_config(arch, smoke=True)
+        policy = make_policy(make_host_mesh(), cfg, batch=2, train=True)
+        opt = OptConfig(total_steps=100, warmup_steps=1,
+                        eightbit=cfg.opt_8bit)
+        step, _ = make_train_step(cfg, policy, opt, donate=False)
+        params = M.init_params(cfg, jax.random.key(0))
+        state = init_opt_state(params, opt)
+        B, T = 2, 64
+        batch = {"labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, T)),
+                                       jnp.int32)}
+        if cfg.frontend == "none":
+            batch["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+        else:
+            batch["embeds"] = jnp.asarray(
+                rng.normal(0, 1, (B, T, cfg.frontend_dim)), jnp.float32)
+            if cfg.rope_kind == "mrope":
+                pos = np.broadcast_to(
+                    np.arange(T)[None, :, None], (B, T, 3)).copy()
+                batch["positions"] = jnp.asarray(pos, jnp.int32)
+        # warmup + time
+        out = step(params, state, batch, jnp.asarray(0, jnp.int32))
+        jax.block_until_ready(out[2]["loss"])
+        t0 = time.perf_counter()
+        for i in range(3):
+            out = step(params, state, batch, jnp.asarray(i + 1, jnp.int32))
+        jax.block_until_ready(out[2]["loss"])
+        dt = (time.perf_counter() - t0) / 3
+        rows.append({
+            "table": "framework_smoke_train",
+            "name": f"{arch}:train_step_smoke",
+            "us_per_call": dt * 1e6,
+            "derived": f"tok/s={B*T/dt:.0f} loss={float(out[2]['loss']):.3f}",
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks.cipher_tables import (
+        bench_hw_sw_comparison,
+        bench_performance_table,
+        bench_resource_table,
+    )
+
+    rows = []
+    for name in ("hera-128a", "rubato-128l"):
+        rows += bench_performance_table(name)     # Tables I & II
+        rows += bench_resource_table(name)        # Tables III & IV
+    rows += bench_hw_sw_comparison()              # §V headline comparison
+    if not args.quick:
+        rows += _model_step_bench()
+
+    print("table,name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['table']},{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""End-to-end driver: train a language model on HHE-ENCRYPTED data.
+
+The paper's deployment scenario as a framework feature: the client encrypts
+examples with Rubato (cheap symmetric stream cipher, low ciphertext
+expansion); the pod regenerates stream keys at line rate (the accelerator
+this paper builds) and decrypts inside the train step.  Host RAM and the
+network only ever see Z_q ciphertext.
+
+Default: a ~10M-param granite-family model for 300 steps on CPU (loss
+decreases on the synthetic structured stream).  Scale knobs:
+    --layers 24 --d-model 640 --steps 300        (~100M params)
+
+    PYTHONPATH=src python examples/encrypted_training.py [--steps 300]
+"""
+
+import sys, pathlib
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cipher import make_cipher
+from repro.data.encrypted import EncryptedSource, make_decryptor
+from repro.data.pipeline import SyntheticLM
+from repro.launch.elastic import StragglerWatchdog
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.models.sharding import make_policy
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=320)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--plaintext", action="store_true",
+                    help="disable the HHE data plane (ablation)")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="encrypted-demo", family="dense",
+        num_layers=args.layers, d_model=args.d_model,
+        num_heads=args.d_model // 64, kv_heads=max(args.d_model // 128, 1),
+        d_ff=args.d_model * 3, vocab=args.vocab, remat=False,
+    )
+    n_params = cfg.param_count()
+    print(f"model: {args.layers}L d={args.d_model} ~{n_params/1e6:.1f}M params")
+
+    policy = make_policy(make_host_mesh(), cfg, batch=args.batch, train=True)
+    opt = OptConfig(lr=1e-3, total_steps=args.steps,
+                    warmup_steps=max(args.steps // 20, 5))
+
+    source = SyntheticLM(cfg, args.batch, args.seq, seed=0)
+    decryptor = None
+    if not args.plaintext:
+        cipher = make_cipher("rubato-128l", seed=1234)
+        source = EncryptedSource(source, cipher)
+        decryptor = make_decryptor(cipher)
+        print(f"data plane: Rubato Par-128L encrypted "
+              f"({source.blocks_per_batch()} keystream blocks/batch)")
+
+    step_fn, _ = make_train_step(cfg, policy, opt, decryptor=decryptor)
+    params = M.init_params(cfg, jax.random.key(0))
+    state = init_opt_state(params, opt)
+
+    watchdog = StragglerWatchdog()
+    losses = []
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = jax.tree.map(jnp.asarray, source.batch_at(step))
+        ts = time.time()
+        params, state, metrics = step_fn(
+            params, state, batch, jnp.asarray(step, jnp.int32))
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        watchdog.observe(step, time.time() - ts)
+        if step % 25 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss {loss:.4f}  "
+                  f"({(step+1)*args.batch*args.seq/(time.time()-t0):.0f} tok/s)")
+        if args.ckpt_dir and (step + 1) % 100 == 0:
+            ckpt.save(args.ckpt_dir, step + 1, (params, state),
+                      extra={"data_step": step + 1}, async_write=True)
+
+    first, last = np.mean(losses[:20]), np.mean(losses[-20:])
+    print(f"\nloss: first-20 avg {first:.4f} -> last-20 avg {last:.4f} "
+          f"({'DECREASED' if last < first - 0.05 else 'no clear decrease'})")
+    assert last < first, "training on encrypted data failed to learn"
+
+
+if __name__ == "__main__":
+    main()

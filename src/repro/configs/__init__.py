@@ -1,0 +1,6 @@
+"""Architecture registry: 10 assigned archs, full + smoke variants, plus the
+paper's own cipher workload configs (presto_cipher)."""
+
+from repro.configs.base import ModelConfig, LayerSpec, get_config, list_archs
+
+__all__ = ["ModelConfig", "LayerSpec", "get_config", "list_archs"]

@@ -1,0 +1,32 @@
+"""Presto core: the paper's contribution — CKKS-targeting HHE stream ciphers
+(HERA, Rubato) as composable JAX modules, with the decoupled-RNG producer/
+consumer split and the RtF transciphering scaffold.
+"""
+
+from repro.core.params import (
+    CipherParams,
+    HERA_128A,
+    RUBATO_128S,
+    RUBATO_128M,
+    RUBATO_128L,
+    get_params,
+)
+from repro.core.cipher import Cipher, make_cipher
+from repro.core.hera import hera_stream_key
+from repro.core.rubato import rubato_stream_key
+from repro.core.transcipher import transcipher, evaluate_decryption_circuit
+
+__all__ = [
+    "CipherParams",
+    "HERA_128A",
+    "RUBATO_128S",
+    "RUBATO_128M",
+    "RUBATO_128L",
+    "get_params",
+    "Cipher",
+    "make_cipher",
+    "hera_stream_key",
+    "rubato_stream_key",
+    "transcipher",
+    "evaluate_decryption_circuit",
+]

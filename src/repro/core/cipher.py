@@ -1,0 +1,127 @@
+"""Unified client-side cipher API: keystream / encrypt / decrypt.
+
+Producer/consumer split (the paper's T3, "RNG decoupling"):
+
+  * :meth:`Cipher.round_constant_stream` — the *producer*: XOF + rejection
+    sampling + Gaussian sampling.  Depends only on (nonce, block counters),
+    NOT on the key or message, so it can be dispatched concurrently with
+    the previous batch's compute (async dispatch on TPU) or precomputed.
+  * :meth:`Cipher.keystream` — the *consumer*: the round pipeline, taking
+    the constants as an explicit input.
+  * :meth:`Cipher.keystream_coupled` — paper's D1-style baseline: a single
+    computation that serializes XOF → sampling → rounds (for benchmarks).
+
+Message encoding: real vectors are fixed-point encoded, m_q = round(m·Δ)
+centered into Z_q; encryption is c = m_q + z, decryption m_q = c − z (the
+RtF client side).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rounds as R
+from repro.core.hera import hera_stream_key
+from repro.core.params import CipherParams, get_params
+from repro.core.rubato import rubato_stream_key
+from repro.crypto.sampler import (
+    DGaussTable,
+    discrete_gaussian,
+    uniform_mod_q_stream,
+    words_needed_uniform_stream,
+)
+from repro.crypto.xof import xof_words
+
+
+@dataclasses.dataclass
+class Cipher:
+    params: CipherParams
+    key: jnp.ndarray          # (n,) uint32 in Z_q — the symmetric secret
+    nonce: np.ndarray         # (16,) uint8, public
+
+    def __post_init__(self):
+        self.key = jnp.asarray(self.key, dtype=jnp.uint32)
+        if self.key.shape != (self.params.n,):
+            raise ValueError(f"key shape {self.key.shape} != ({self.params.n},)")
+        self.nonce = np.asarray(self.nonce, dtype=np.uint8).reshape(16)
+        self._gauss = (
+            DGaussTable.build(self.params.sigma) if self.params.n_noise else None
+        )
+
+    # ---------------- producer (decoupled RNG) ---------------------------
+    def round_constant_stream(self, block_ctrs):
+        """Sample all per-block randomness.  Returns dict(rc=..., noise=...).
+
+        rc: (lanes, n_round_constants) uint32; noise: (lanes, l) int32 or None.
+        """
+        p = self.params
+        n_u = p.n_round_constants
+        w_u = words_needed_uniform_stream(n_u)
+        total = w_u + 2 * p.n_noise
+        words = xof_words(p.xof, self.nonce, block_ctrs, total)
+        rc = uniform_mod_q_stream(words[..., :w_u], n_u, p.mod)
+        noise = None
+        if p.n_noise:
+            hi = words[..., w_u : w_u + p.n_noise]
+            lo = words[..., w_u + p.n_noise : w_u + 2 * p.n_noise]
+            noise = discrete_gaussian(hi, lo, self._gauss)
+        return {"rc": rc, "noise": noise}
+
+    # ---------------- consumer (round pipeline) --------------------------
+    def keystream_from_constants(self, rc, noise=None):
+        p = self.params
+        if p.kind == "hera":
+            rc = rc.reshape(rc.shape[:-1] + (p.n_arks, p.n))
+            return hera_stream_key(p, self.key, rc)
+        return rubato_stream_key(p, self.key, rc, noise)
+
+    def keystream(self, block_ctrs, constants=None):
+        """(lanes,) block counters -> (lanes, l) keystream."""
+        if constants is None:
+            constants = self.round_constant_stream(block_ctrs)
+        return self.keystream_from_constants(constants["rc"], constants["noise"])
+
+    def keystream_coupled(self, block_ctrs):
+        """D1-style baseline: RNG serialized with rounds inside one call."""
+        c = self.round_constant_stream(block_ctrs)
+        # optimization_barrier pins the ordering (no overlap), mirroring the
+        # software baseline that samples ALL constants before any round work.
+        c = jax.lax.optimization_barrier(
+            {k: v for k, v in c.items() if v is not None}
+        )
+        return self.keystream_from_constants(c["rc"], c.get("noise"))
+
+    # ---------------- encryption ----------------------------------------
+    def encode(self, m_real, delta: float):
+        p = self.params
+        mq = jnp.round(jnp.asarray(m_real, jnp.float32) * delta).astype(jnp.int32)
+        return p.mod.from_signed(mq)
+
+    def decode(self, m_q, delta: float):
+        return self.params.mod.to_signed(m_q).astype(jnp.float32) / delta
+
+    def encrypt(self, m_real, block_ctrs, delta: float = 1024.0, constants=None):
+        """Encrypt (lanes, l) real messages -> (lanes, l) uint32 ciphertext."""
+        z = self.keystream(block_ctrs, constants)
+        return self.params.mod.add(self.encode(m_real, delta), z)
+
+    def decrypt(self, c, block_ctrs, delta: float = 1024.0, constants=None):
+        z = self.keystream(block_ctrs, constants)
+        return self.decode(self.params.mod.sub(c, z), delta)
+
+
+def make_cipher(name: str, key=None, nonce=None, seed: int = 0) -> Cipher:
+    """Convenience constructor; random key/nonce from ``seed`` if omitted."""
+    p = get_params(name)
+    rng = np.random.default_rng(seed)
+    if key is None:
+        key = rng.integers(1, p.mod.q, size=(p.n,), dtype=np.uint32)
+    if nonce is None:
+        nonce = rng.integers(0, 256, size=(16,), dtype=np.uint8)
+    return Cipher(p, jnp.asarray(key, jnp.uint32), nonce)

@@ -1,0 +1,43 @@
+"""HERA stream-key generation (paper §III-A).
+
+    HERA(k) = Fin ∘ RF_{r-1} ∘ ... ∘ RF_1 ∘ ARK(k)       applied to ic
+    RF  = ARK ∘ Cube ∘ MixRows ∘ MixColumns
+    Fin = ARK ∘ MixRows ∘ MixColumns ∘ Cube ∘ MixRows ∘ MixColumns
+
+Round-constant accounting: (r+1) ARKs × n constants = 96 for Par-128a.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import rounds as R
+from repro.core.params import CipherParams
+
+
+def hera_stream_key(params: CipherParams, key, rc, ic=None):
+    """Generate keystream blocks.
+
+    key: (..., n) uint32 in Z_q (broadcastable against rc's batch dims).
+    rc:  (..., r+1, n) uint32 round constants (from the XOF producer — the
+         decoupled-RNG interface: constants are an *input*, so the producer
+         runs concurrently; see DESIGN.md T3).
+    Returns (..., n) uint32 keystream block.
+    """
+    if rc.shape[-2] != params.n_arks or rc.shape[-1] != params.n:
+        raise ValueError(f"rc shape {rc.shape} != (..., {params.n_arks}, {params.n})")
+    if ic is None:
+        ic = jnp.asarray(R.ic_vector(params))
+    x = jnp.broadcast_to(ic, rc.shape[:-2] + (params.n,))
+
+    x = R.ark(params, x, key, rc[..., 0, :])
+    for j in range(1, params.rounds):          # RF_1 .. RF_{r-1}
+        x = R.mrmc(params, x)                  # MixColumns then MixRows
+        x = R.cube(params, x)
+        x = R.ark(params, x, key, rc[..., j, :])
+    # Fin
+    x = R.mrmc(params, x)
+    x = R.cube(params, x)
+    x = R.mrmc(params, x)
+    x = R.ark(params, x, key, rc[..., params.rounds, :])
+    return x

@@ -1,0 +1,118 @@
+"""Cipher parameter sets for HERA and Rubato.
+
+Paper-benchmarked sets: HERA Par-128a (n=16, r=5, ~28-bit q, 96 round
+constants) and Rubato Par-128L (n=64, r=2, ~25-bit q, 188 = 64+64+60 round
+constants, truncation to l=60, AGN noise).  Moduli are Solinas primes of the
+matching bit width (the paper does not list exact production moduli); the
+mixing matrix for v != 4 is our documented circulant stand-in (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.crypto.modmath import Modulus, Q_HERA, Q_RUBATO
+
+
+@dataclasses.dataclass(frozen=True)
+class CipherParams:
+    name: str
+    kind: str          # "hera" | "rubato"
+    n: int             # state size (must be a perfect square)
+    l: int             # keystream length after truncation (hera: l == n)
+    rounds: int        # r
+    mod: Modulus
+    sigma: float = 0.0  # AGN sigma (rubato only; 0 disables)
+    xof: str = "aes"   # "aes" | "threefry"
+
+    def __post_init__(self):
+        v = math.isqrt(self.n)
+        if v * v != self.n:
+            raise ValueError(f"state size n={self.n} must be a perfect square")
+        if not (0 < self.l <= self.n):
+            raise ValueError("invalid truncation length")
+        if self.kind not in ("hera", "rubato"):
+            raise ValueError(f"unknown cipher kind {self.kind!r}")
+        if self.kind == "hera" and self.l != self.n:
+            raise ValueError("HERA does not truncate")
+        # matvec accumulation bound (DESIGN.md §2): v partial sums of < q
+        if self.v * 3 * self.mod.q >= 2**33:
+            raise ValueError("v*q too large for shift-add accumulation")
+
+    @property
+    def v(self) -> int:
+        return math.isqrt(self.n)
+
+    @property
+    def n_arks(self) -> int:
+        """ARK executions per stream key: initial + (r-1) RFs + final."""
+        return self.rounds + 1
+
+    @property
+    def n_round_constants(self) -> int:
+        """Total uniform round constants per stream key.
+
+        HERA: (r+1)*n (96 for Par-128a).  Rubato: r*n + l because the final
+        ARK feeds a truncation, so only l of its constants matter (188 for
+        Par-128L = 64+64+60), matching the paper's FIFO-depth accounting.
+        """
+        if self.kind == "hera":
+            return self.n_arks * self.n
+        return self.rounds * self.n + self.l
+
+    @property
+    def n_noise(self) -> int:
+        return self.l if (self.kind == "rubato" and self.sigma > 0) else 0
+
+    def mix_matrix(self) -> np.ndarray:
+        """M_v: circulant with first row [2, 3, 1, ..., 1] (paper's M_4).
+
+        For v=4 this is exactly the paper's matrix; v in {6, 8} uses the same
+        circulant family (small coefficients {1,2,3} => shift-add datapath).
+        """
+        first = [2, 3] + [1] * (self.v - 2)
+        rows = [np.roll(first, i) for i in range(self.v)]
+        return np.array(rows, dtype=np.int64)
+
+    def xof_words_per_block(self) -> int:
+        """uint32 XOF words one stream-key block consumes (constants+noise).
+
+        Uses the stream (compact) rejection sampler: ~1 word per constant +
+        a fixed safety pad — this reproduces the paper's accounting of ~37
+        AES invocations (~4700 bits) for Rubato Par-128L.
+        """
+        from repro.crypto.sampler import words_needed_uniform_stream
+
+        return words_needed_uniform_stream(self.n_round_constants) + 2 * self.n_noise
+
+
+HERA_128A = CipherParams(
+    name="hera-128a", kind="hera", n=16, l=16, rounds=5, mod=Q_HERA
+)
+
+# Rubato family: bigger state <-> fewer rounds (Rubato paper's S/M/L split).
+RUBATO_128S = CipherParams(
+    name="rubato-128s", kind="rubato", n=16, l=12, rounds=5, mod=Q_RUBATO,
+    sigma=1.6,
+)
+RUBATO_128M = CipherParams(
+    name="rubato-128m", kind="rubato", n=36, l=32, rounds=3, mod=Q_RUBATO,
+    sigma=1.6,
+)
+RUBATO_128L = CipherParams(
+    name="rubato-128l", kind="rubato", n=64, l=60, rounds=2, mod=Q_RUBATO,
+    sigma=1.6,
+)
+
+REGISTRY = {
+    p.name: p for p in (HERA_128A, RUBATO_128S, RUBATO_128M, RUBATO_128L)
+}
+
+
+def get_params(name: str) -> CipherParams:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown cipher {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]

@@ -1,0 +1,117 @@
+"""Shared round-function components for HERA and Rubato (pure JAX).
+
+State convention: a keystream block's state is a (..., n) uint32 vector in
+Z_q, viewed row-major as a (..., v, v) matrix per Eq. (1) of the paper.
+
+The MRMC module fuses MixColumns followed by MixRows:
+
+    MRMC(X) = MixRows(MixColumns(X)) = M_v (M_v X)^T ... = M_v X^T M_v^T   (paper §IV-B)
+
+and is transposition-invariant: MRMC(X^T) = (MRMC(X))^T (Eq. 2).  On TPU we
+exploit the same algebra the FPGA design does, but the "bubble" we eliminate
+is a relayout/HBM round-trip: `mrmc` computes M_v X M_v^T as two back-to-back
+small matvecs with NO materialized transpose between them, and the pure-JAX
+form below is exactly what the fused Pallas kernel implements blockwise.
+
+All multiplications by M_v coefficients ({1,2,3}) use the shift-add path
+(`Modulus.matvec_small`) — the paper's T4, no integer multiplier.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.params import CipherParams
+
+
+def ic_vector(params: CipherParams) -> np.ndarray:
+    """Initial (public) state constant: (1, 2, ..., n) mod q."""
+    return (np.arange(1, params.n + 1, dtype=np.uint32) % params.mod.q).astype(
+        np.uint32
+    )
+
+
+def ark(params: CipherParams, x, key, rc):
+    """Add-round-key with randomized key schedule: x + k ⊙ rc (mod q).
+
+    x: (..., m) state; key: (..., m) or (m,); rc: (..., m) round constants.
+    m may be n (normal) or l (the truncated final ARK of Rubato).
+    """
+    mod = params.mod
+    return mod.add(x, mod.mul(key, rc))
+
+
+def mix_columns(params: CipherParams, x):
+    """Y = M_v X  (matrix multiply on columns), state (..., n) row-major."""
+    mod = params.mod
+    v = params.v
+    X = x.reshape(x.shape[:-1] + (v, v))
+    # columns of X are X[..., :, c]; M @ X contracts the row index (axis -2)
+    Y = mod.matvec_small(params.mix_matrix(), X, axis=-2)
+    return Y.reshape(x.shape)
+
+
+def mix_rows(params: CipherParams, x):
+    """Y^T[..] rows: each row of X multiplied by M_v  => Y = X M_v^T."""
+    mod = params.mod
+    v = params.v
+    X = x.reshape(x.shape[:-1] + (v, v))
+    Y = mod.matvec_small(params.mix_matrix(), X, axis=-1)
+    return Y.reshape(x.shape)
+
+
+def mrmc(params: CipherParams, x):
+    """Fused MixRows∘MixColumns = M_v X M_v^T, no transpose materialized."""
+    mod = params.mod
+    v = params.v
+    M = params.mix_matrix()
+    X = x.reshape(x.shape[:-1] + (v, v))
+    Y = mod.matvec_small(M, X, axis=-2)   # M X
+    Z = mod.matvec_small(M, Y, axis=-1)   # (M X) M^T
+    return Z.reshape(x.shape)
+
+
+def mrmc_transposed(params: CipherParams, x_t):
+    """MRMC applied to a transposed (column-major) state.
+
+    By Eq. 2, MRMC(X^T) = (MRMC(X))^T — used by tests to verify the
+    transposition-invariance the data schedule exploits, and by the kernel
+    to accept either streaming order.
+    """
+    v = params.v
+    X = x_t.reshape(x_t.shape[:-1] + (v, v))
+    Xt = jnp.swapaxes(X, -1, -2)
+    out = mrmc(params, Xt.reshape(x_t.shape))
+    O = out.reshape(x_t.shape[:-1] + (v, v))
+    return jnp.swapaxes(O, -1, -2).reshape(x_t.shape)
+
+
+def cube(params: CipherParams, x):
+    """HERA nonlinearity: elementwise x^3 mod q."""
+    return params.mod.cube(x)
+
+
+def feistel(params: CipherParams, x):
+    """Rubato nonlinearity (type-3 Feistel, parallel form):
+
+        y_1 = x_1;  y_i = x_i + x_{i-1}^2   (original x values — not chained)
+    """
+    mod = params.mod
+    sq = mod.square(x[..., :-1])
+    shifted = jnp.concatenate(
+        [jnp.zeros_like(x[..., :1]), sq], axis=-1
+    )
+    return mod.add(x, shifted)
+
+
+def truncate(params: CipherParams, x):
+    """Tr_{n,l}: keep the first l elements."""
+    return x[..., : params.l]
+
+
+def agn(params: CipherParams, x, noise_signed):
+    """Add discrete-Gaussian noise (signed int32) to (..., l) state."""
+    mod = params.mod
+    e = mod.from_signed(noise_signed)
+    return mod.add(x, e)

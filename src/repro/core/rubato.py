@@ -1,0 +1,50 @@
+"""Rubato stream-key generation (paper §III-B).
+
+    Rubato(k) = AGN ∘ Fin ∘ RF_{r-1} ∘ ... ∘ RF_1 ∘ ARK(k)   applied to ic
+    RF  = ARK ∘ Feistel ∘ MixRows ∘ MixColumns
+    Fin = Tr ∘ ARK ∘ MixRows ∘ MixColumns ∘ Feistel ∘ MixRows ∘ MixColumns
+
+Round-constant accounting: r ARKs × n + final ARK × l (truncation makes the
+trailing n−l constants of the final ARK dead) = 64+64+60 = 188 for Par-128L,
+matching the paper's FIFO-depth discussion.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import rounds as R
+from repro.core.params import CipherParams
+
+
+def rubato_stream_key(params: CipherParams, key, rc, noise_signed, ic=None):
+    """Generate keystream blocks.
+
+    key: (..., n) uint32 in Z_q.
+    rc:  (..., r*n + l) flat uint32 round constants (decoupled-RNG input).
+    noise_signed: (..., l) int32 discrete-Gaussian samples (AGN), or None.
+    Returns (..., l) uint32 keystream block.
+    """
+    n, l, r = params.n, params.l, params.rounds
+    if rc.shape[-1] != params.n_round_constants:
+        raise ValueError(
+            f"rc last dim {rc.shape[-1]} != {params.n_round_constants}"
+        )
+    if ic is None:
+        ic = jnp.asarray(R.ic_vector(params))
+    x = jnp.broadcast_to(ic, rc.shape[:-1] + (n,))
+
+    x = R.ark(params, x, key, rc[..., 0:n])
+    for j in range(1, r):                      # RF_1 .. RF_{r-1}
+        x = R.mrmc(params, x)
+        x = R.feistel(params, x)
+        x = R.ark(params, x, key, rc[..., j * n : (j + 1) * n])
+    # Fin
+    x = R.mrmc(params, x)
+    x = R.feistel(params, x)
+    x = R.mrmc(params, x)
+    x = R.truncate(params, x)
+    x = R.ark(params, x, key[..., :l], rc[..., r * n : r * n + l])
+    if noise_signed is not None and params.sigma > 0:
+        x = R.agn(params, x, noise_signed)
+    return x

@@ -1,0 +1,147 @@
+"""RtF transciphering scaffold — the *server* side of HHE (paper §II).
+
+In the full RtF framework the server homomorphically evaluates the cipher's
+decryption circuit under FV, then runs CKKS HalfBoot.  Reproducing FV/CKKS
+is its own paper-scale system and explicitly out of scope (the paper under
+reproduction is the client-side accelerator).  What we build here is the
+part that constrains cipher design and that the paper reasons about:
+
+  * evaluation of the keystream circuit *as an arithmetic circuit* over Z_q
+    with multiplicative-depth tracking (`DepthTracked`) — this verifies the
+    paper's central claim that Rubato's Feistel (depth 1/round) is much
+    shallower than HERA's Cube (depth 2/round), which is what makes the
+    server-side FV evaluation cheap;
+  * the transciphering consistency contract: server-side keystream == the
+    client's, so (c − z) recovers the encoded message slots that HalfBoot
+    would carry into CKKS.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core import rounds as R
+from repro.core.cipher import Cipher
+from repro.core.params import CipherParams
+
+
+@dataclasses.dataclass
+class DepthTracked:
+    """A Z_q value paired with its multiplicative depth.
+
+    Mirrors FV noise-budget accounting: plaintext·ciphertext products (the
+    k ⊙ rc key schedule) and additions are depth-free; ciphertext×ciphertext
+    multiplies take max(depth_a, depth_b) + 1.
+    """
+
+    value: Any
+    depth: int = 0
+
+
+class CircuitMod:
+    """Adapter exposing the Modulus interface over DepthTracked values."""
+
+    def __init__(self, params: CipherParams):
+        self.params = params
+        self.mod = params.mod
+
+    def add(self, a: DepthTracked, b: DepthTracked) -> DepthTracked:
+        return DepthTracked(self.mod.add(a.value, b.value), max(a.depth, b.depth))
+
+    def mul_ct(self, a: DepthTracked, b: DepthTracked) -> DepthTracked:
+        return DepthTracked(
+            self.mod.mul(a.value, b.value), max(a.depth, b.depth) + 1
+        )
+
+    def mul_pt(self, a: DepthTracked, pt) -> DepthTracked:
+        """Plaintext multiply — depth-free in the FV accounting we mirror."""
+        return DepthTracked(self.mod.mul(a.value, pt), a.depth)
+
+
+def evaluate_decryption_circuit(cipher: Cipher, block_ctrs):
+    """Evaluate the stream-key circuit with depth tracking.
+
+    Returns (keystream, mult_depth).  HERA Par-128a: depth 2 per Cube × 5
+    nonlinear layers = 10.  Rubato Par-128L: depth 1 per Feistel × 2 = 2.
+    """
+    p = cipher.params
+    consts = cipher.round_constant_stream(block_ctrs)
+    cm = CircuitMod(p)
+    mod = p.mod
+
+    ic = jnp.broadcast_to(
+        jnp.asarray(R.ic_vector(p)), block_ctrs.shape + (p.n,)
+    )
+    key = jnp.broadcast_to(cipher.key, block_ctrs.shape + (p.n,))
+    # the key is the FV-encrypted input; everything derived from it carries depth
+    x = DepthTracked(ic, 0)
+    k = DepthTracked(key, 0)
+
+    def ark(x, rc):
+        return cm.add(x, cm.mul_pt(k, rc))
+
+    def ark_trunc(x, rc, l):
+        kt = DepthTracked(k.value[..., :l], k.depth)
+        return cm.add(x, DepthTracked(mod.mul(kt.value, rc), kt.depth))
+
+    def linear(fn, x):
+        return DepthTracked(fn(p, x.value), x.depth)
+
+    def cube(x):
+        sq = cm.mul_ct(x, x)
+        return cm.mul_ct(sq, x)
+
+    def feistel(x):
+        head = DepthTracked(x.value[..., :-1], x.depth)
+        sq = cm.mul_ct(head, head)
+        shifted = jnp.concatenate(
+            [jnp.zeros_like(x.value[..., :1]), sq.value], axis=-1
+        )
+        return DepthTracked(mod.add(x.value, shifted), max(x.depth, sq.depth))
+
+    rc = consts["rc"]
+    if p.kind == "hera":
+        rcs = rc.reshape(rc.shape[:-1] + (p.n_arks, p.n))
+        x = ark(x, rcs[..., 0, :])
+        for j in range(1, p.rounds):
+            x = linear(R.mrmc, x)
+            x = cube(x)
+            x = ark(x, rcs[..., j, :])
+        x = linear(R.mrmc, x)
+        x = cube(x)
+        x = linear(R.mrmc, x)
+        x = ark(x, rcs[..., p.rounds, :])
+        return x.value, x.depth
+
+    n, l, r = p.n, p.l, p.rounds
+    x = ark(x, rc[..., 0:n])
+    for j in range(1, r):
+        x = linear(R.mrmc, x)
+        x = feistel(x)
+        x = ark(x, rc[..., j * n : (j + 1) * n])
+    x = linear(R.mrmc, x)
+    x = feistel(x)
+    x = linear(R.mrmc, x)
+    x = DepthTracked(R.truncate(p, x.value), x.depth)
+    x = ark_trunc(x, rc[..., r * n : r * n + l], l)
+    # AGN noise is added by the *client*; the server's circuit stops here —
+    # the noise rides along inside the symmetric ciphertext (that is the
+    # point of Rubato: the cipher's own noise doubles as HE noise).
+    return x.value, x.depth
+
+
+def transcipher(cipher: Cipher, c, block_ctrs, delta: float = 1024.0):
+    """Server-side transciphering: symmetric ciphertext -> "CKKS slots".
+
+    Evaluates the decryption circuit (depth-tracked), subtracts the stream
+    key, and decodes fixed-point slots — the values HalfBoot would carry
+    into a CKKS ciphertext.  Returns (slots, mult_depth).
+    """
+    z, depth = evaluate_decryption_circuit(cipher, block_ctrs)
+    if cipher.params.kind == "rubato":
+        z = z  # already truncated to l
+    mq = cipher.params.mod.sub(c, z)
+    return cipher.decode(mq, delta), depth

@@ -1,0 +1,29 @@
+"""Cryptographic substrate for the Presto HHE cipher framework.
+
+Everything here is uint32-native (no 64-bit integers) so that it lowers
+cleanly to TPU VPU lanes — see DESIGN.md §2 "Modular arithmetic without
+64-bit".
+"""
+
+from repro.crypto.modmath import Modulus, Q_HERA, Q_RUBATO
+from repro.crypto.aes import (
+    aes128_encrypt_blocks,
+    aes128_key_expand,
+    aes_ctr_keystream,
+)
+from repro.crypto.xof import make_xof, xof_words
+from repro.crypto.sampler import uniform_mod_q, discrete_gaussian, DGaussTable
+
+__all__ = [
+    "Modulus",
+    "Q_HERA",
+    "Q_RUBATO",
+    "aes128_encrypt_blocks",
+    "aes128_key_expand",
+    "aes_ctr_keystream",
+    "make_xof",
+    "xof_words",
+    "uniform_mod_q",
+    "discrete_gaussian",
+    "DGaussTable",
+]

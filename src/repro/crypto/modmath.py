@@ -1,0 +1,216 @@
+"""uint32-native modular arithmetic over Z_q for q < 2^28.
+
+TPU has no native 64-bit integer multiply, so we never form a product wider
+than 32 bits.  The scheme (DESIGN.md §2):
+
+  * operands are split into L-bit limbs with L = ceil(qbits / 2) <= 14, so
+    every partial product is < 2^(2L) <= 2^28 < 2^31;
+  * q is required to be in "Solinas-friendly" position: R = 2^(2L) mod q must
+    satisfy R * 2^L + 2^(2L) < 2^32 so that the shift-reduce step also stays
+    inside uint32.  The shipped primes (2^28 - 2^16 + 1 and 2^25 - 2^14 + 1)
+    satisfy this with huge margin.
+
+Reduction never uses integer division: every intermediate has a small static
+bound k*q, and we reduce with a branchless conditional-subtract chain of
+ceil(log2(k)) + 1 steps.  This is the TPU analogue of the paper's shift-add /
+no-DSP datapath: adds, compares and selects only.
+
+All public ops are jax-traceable and operate elementwise on uint32 arrays
+whose values are in [0, q).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+
+
+def _is_prime(n: int) -> bool:
+    if n < 2:
+        return False
+    for p in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        if n % p == 0:
+            return n == p
+    # deterministic Miller-Rabin for n < 3.3e24 with these bases
+    d, s = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        s += 1
+    for a in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(s - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class Modulus:
+    """Static description of a prime modulus q < 2^28 plus limb constants."""
+
+    q: int
+
+    def __post_init__(self):
+        if not (2 < self.q < 2**28):
+            raise ValueError(f"q={self.q} out of supported range (2, 2^28)")
+        if not _is_prime(self.q):
+            raise ValueError(f"q={self.q} must be prime")
+        # Safety envelope for the limb scheme (checked, not assumed).
+        if self.R * (1 << self.L) + (1 << (2 * self.L)) >= 2**32:
+            raise ValueError(
+                f"q={self.q}: R=2^(2L) mod q = {self.R} too large for the "
+                "uint32 limb scheme; pick a Solinas-form prime"
+            )
+
+    # ---- static (Python int) derived constants -------------------------
+    @property
+    def bits(self) -> int:
+        return self.q.bit_length()
+
+    @property
+    def L(self) -> int:
+        """Limb width in bits."""
+        return (self.bits + 1) // 2
+
+    @property
+    def mask(self) -> int:
+        return (1 << self.L) - 1
+
+    @property
+    def R(self) -> int:
+        """2^(2L) mod q — the shift-reduce constant."""
+        return (1 << (2 * self.L)) % self.q
+
+    # ---- reduction helpers ---------------------------------------------
+    def reduce(self, x, bound: int):
+        """Reduce x (values < bound) into [0, q) with conditional subtracts.
+
+        ``bound`` is a static Python int.  Uses ceil(log2(bound/q)) steps,
+        each subtracting the largest power-of-two multiple of q that can
+        still be present.
+        """
+        q = self.q
+        k = (bound + q - 1) // q  # x < k*q
+        m = 1
+        while m * 2 < k:
+            m *= 2
+        # subtract m*q, m/2*q, ..., q
+        while m >= 1:
+            mq = jnp.uint32(m * q)
+            x = jnp.where(x >= mq, x - mq, x)
+            m //= 2
+        return x
+
+    # ---- arithmetic ------------------------------------------------------
+    def add(self, x, y):
+        return self.reduce(x + y, 2 * self.q)
+
+    def sub(self, x, y):
+        return self.reduce(x + jnp.uint32(self.q) - y, 2 * self.q)
+
+    def neg(self, x):
+        return self.reduce(jnp.uint32(self.q) - x, 2 * self.q)
+
+    def _shiftL(self, v):
+        """v * 2^L mod q for v in [0, q)."""
+        a = v >> self.L          # < 2^(bits - L) <= 2^L
+        b = v & jnp.uint32(self.mask)
+        # a * R < 2^L * R ; b << L < 2^(2L); sum < 2^32 by __post_init__ check
+        t = a * jnp.uint32(self.R) + (b << self.L)
+        bound = (1 << self.L) * self.R + (1 << (2 * self.L))
+        return self.reduce(t, bound)
+
+    def mul(self, x, y):
+        """x*y mod q via 2x2 limb decomposition; inputs in [0, q)."""
+        m = jnp.uint32(self.mask)
+        xl, xh = x & m, x >> self.L
+        yl, yh = y & m, y >> self.L
+        two_l = 1 << (2 * self.L)
+        p0 = self.reduce(xl * yl, two_l)
+        p1 = self.reduce(xl * yh + xh * yl, 2 * two_l)
+        p2 = self.reduce(xh * yh, two_l)
+        t1 = self._shiftL(p1)                    # p1 * 2^L
+        t2 = self._shiftL(self._shiftL(p2))      # p2 * 2^(2L)
+        return self.reduce(p0 + t1 + t2, 3 * self.q)
+
+    def square(self, x):
+        return self.mul(x, x)
+
+    def cube(self, x):
+        return self.mul(self.mul(x, x), x)
+
+    def mul_small(self, x, c: int):
+        """x * c mod q for a small static constant c (shift-add datapath).
+
+        This is the paper's T4: the MixColumns/MixRows matrix has entries in
+        {1, 2, 3}, so products are realized as adds, never multiplies.
+        Requires c * q < 2^32.
+        """
+        if c * self.q >= 2**32:
+            raise ValueError("constant too large for shift-add path")
+        if c == 0:
+            return jnp.zeros_like(x)
+        if c == 1:
+            return x
+        acc = x
+        for _ in range(c - 1):
+            acc = acc + x
+        return self.reduce(acc, c * self.q)
+
+    def matvec_small(self, mat: np.ndarray, x, axis: int = -1):
+        """y = mat @ x mod q along ``axis`` where mat has small int entries.
+
+        mat: (v, v) numpy int array with entries in {0..3}.  x: uint32 array
+        whose ``axis`` dim has size v.  Implemented as shift-add accumulation
+        with partial-sum bounds checked statically: accumulator stays < 2^32
+        because v * 3 * q is verified at trace time (reduce interleaved when
+        it would not be).
+        """
+        v = mat.shape[0]
+        x = jnp.moveaxis(x, axis, -1)
+        outs = []
+        for i in range(v):
+            acc = None
+            bound = 0
+            for j in range(v):
+                c = int(mat[i, j])
+                if c == 0:
+                    continue
+                term = self.mul_small(x[..., j], c)  # < q
+                if acc is None:
+                    acc, bound = term, self.q
+                else:
+                    if bound + self.q >= 2**32:
+                        acc = self.reduce(acc, bound)
+                        bound = self.q
+                    acc = acc + term
+                    bound += self.q
+            outs.append(self.reduce(acc, bound))
+        y = jnp.stack(outs, axis=-1)
+        return jnp.moveaxis(y, -1, axis)
+
+    def from_signed(self, e):
+        """Map signed int32 values (|e| < q) into [0, q)."""
+        q = jnp.int32(self.q)
+        return jnp.where(e < 0, e + q, e).astype(U32)
+
+    def to_signed(self, x):
+        """Centered representative in (-q/2, q/2]."""
+        half = jnp.uint32(self.q // 2)
+        xi = x.astype(jnp.int32)
+        return jnp.where(x > half, xi - jnp.int32(self.q), xi)
+
+
+# Shipped Solinas primes (verified prime in __post_init__).
+Q_HERA = Modulus(2**28 - 2**16 + 1)    # 268369921, 28-bit (HERA Par-128a scale)
+Q_RUBATO = Modulus(2**25 - 2**14 + 1)  # 33538049, 25-bit (Rubato Par-128L scale)

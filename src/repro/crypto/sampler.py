@@ -1,0 +1,128 @@
+"""Samplers driven by XOF words: uniform-mod-q (rejection) and discrete
+Gaussian (inverse-CDF with a lambda/2-bit fixed-point table, per the paper's
+§IV-D and [Micciancio-Walter'17]).
+
+JAX needs static shapes, so rejection sampling uses a fixed overdraw of
+``OVERDRAW`` candidates per constant and selects the first accepted one.
+For the shipped Solinas primes the per-candidate rejection probability is
+(2^bits - q) / 2^bits < 2.5e-4, so P(all 4 rejected) < 4e-15 per constant —
+negligible, and if it ever happens we fall back to the (infinitesimally
+biased) last candidate mod q.  DESIGN.md §8 records this deviation from the
+spec's unbounded loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto.modmath import Modulus
+
+OVERDRAW = 4
+
+
+def uniform_mod_q(words, mod: Modulus):
+    """Map XOF words to uniform elements of Z_q by masked rejection.
+
+    words: uint32 array (..., n, OVERDRAW) — OVERDRAW candidates per output.
+    Returns (..., n) uint32 in [0, q).
+    """
+    if words.shape[-1] != OVERDRAW:
+        raise ValueError(f"expected trailing overdraw dim {OVERDRAW}")
+    mask = jnp.uint32((1 << mod.bits) - 1)
+    cand = words & mask
+    ok = cand < jnp.uint32(mod.q)
+    # index of first accepted candidate (argmax of boolean picks first True)
+    first = jnp.argmax(ok, axis=-1)
+    any_ok = jnp.any(ok, axis=-1)
+    picked = jnp.take_along_axis(cand, first[..., None], axis=-1)[..., 0]
+    fallback = cand[..., -1] % jnp.uint32(mod.q)
+    return jnp.where(any_ok, picked, fallback)
+
+
+def words_needed_uniform(n: int) -> int:
+    return n * OVERDRAW
+
+
+# Safety pad for the stream sampler: P(more than STREAM_PAD rejections out of
+# a few hundred draws at p < 2.5e-4) is < 1e-40.
+STREAM_PAD = 16
+
+
+def uniform_mod_q_stream(words, n_out: int, mod: Modulus):
+    """XOF-economical rejection sampling: consume a flat word stream.
+
+    This matches the real cipher's accounting (~1 XOF word per constant, the
+    paper's "37 AES invocations" for Rubato Par-128L) instead of the 4x
+    overdraw of :func:`uniform_mod_q`.  words: (..., n_out + STREAM_PAD)
+    uint32.  Accepted words are compacted (stable order) and the first
+    ``n_out`` are returned; with < 1e-40 probability fewer than n_out are
+    accepted, in which case rejected slots fall back to word % q.
+    """
+    if words.shape[-1] < n_out + STREAM_PAD:
+        raise ValueError("need n_out + STREAM_PAD words")
+    mask = jnp.uint32((1 << mod.bits) - 1)
+    cand = words & mask
+    ok = cand < jnp.uint32(mod.q)
+    order = jnp.argsort(jnp.logical_not(ok), axis=-1, stable=True)
+    sorted_cand = jnp.take_along_axis(cand, order, axis=-1)[..., :n_out]
+    sorted_ok = jnp.take_along_axis(ok, order, axis=-1)[..., :n_out]
+    fallback = sorted_cand % jnp.uint32(mod.q)
+    return jnp.where(sorted_ok, sorted_cand, fallback)
+
+
+def words_needed_uniform_stream(n: int) -> int:
+    return n + STREAM_PAD
+
+
+@dataclasses.dataclass(frozen=True)
+class DGaussTable:
+    """Inverse-CDF table for a centered discrete Gaussian, sigma given.
+
+    Thresholds are 64-bit fixed point stored as (hi, lo) uint32 pairs so the
+    comparison runs in uint32 lanes (lambda/2 = 64-bit precision for
+    lambda = 128, matching the paper).  Support is [-tail, +tail] with
+    tail = ceil(10 sigma) (mass beyond is < 2^-70 for sigma <= 4).
+    """
+
+    sigma: float
+    tail: int
+    hi: np.ndarray  # (2*tail,) uint32 — cumulative thresholds, ascending
+    lo: np.ndarray
+
+    @staticmethod
+    def build(sigma: float) -> "DGaussTable":
+        tail = int(math.ceil(10 * sigma))
+        xs = np.arange(-tail, tail + 1)
+        # unnormalized discrete Gaussian mass
+        w = np.exp(-(xs.astype(np.float64) ** 2) / (2 * sigma**2))
+        p = w / w.sum()
+        cdf = np.cumsum(p)[:-1]  # 2*tail interior thresholds
+        fixed = np.floor(cdf * float(2**64)).astype(np.float64)
+        fixed = np.minimum(fixed, float(2**64 - 1))
+        hi = (fixed / 2**32).astype(np.uint64).astype(np.uint32)
+        lo = (fixed % 2**32).astype(np.uint64).astype(np.uint32)
+        return DGaussTable(sigma=sigma, tail=tail, hi=hi, lo=lo)
+
+
+def discrete_gaussian(words_hi, words_lo, table: DGaussTable):
+    """Sample signed ints from the discrete Gaussian via inverse CDF.
+
+    words_hi/lo: uint32 arrays of identical shape (the 64-bit uniform draw).
+    Returns int32 samples in [-tail, tail].
+    """
+    hi_t = jnp.asarray(table.hi)  # (T,)
+    lo_t = jnp.asarray(table.lo)
+    u_hi = words_hi[..., None]
+    u_lo = words_lo[..., None]
+    # u >= threshold  (64-bit lexicographic compare in uint32 lanes)
+    ge = (u_hi > hi_t) | ((u_hi == hi_t) & (u_lo >= lo_t))
+    idx = jnp.sum(ge.astype(jnp.int32), axis=-1)  # in [0, 2*tail]
+    return idx - jnp.int32(table.tail)
+
+
+def words_needed_gauss(n: int) -> int:
+    return 2 * n

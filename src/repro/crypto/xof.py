@@ -1,0 +1,89 @@
+"""Extendable-output functions (XOF) for round-constant / noise sampling.
+
+Two backends:
+
+  * ``aes`` — the paper's choice (§IV-D): AES-128 in CTR mode keyed by the
+    public nonce.  Conformance default.  128 bits / block, exactly the
+    producer the paper's "RNG decoupling" feeds through the FIFO.
+  * ``threefry`` — beyond-paper TPU-native fast path: JAX's counter-based
+    threefry2x32 PRF (add/xor/rotate only; no byte tables, no gathers).
+    Same interface, different stream.  See EXPERIMENTS.md §Perf.
+
+Convention (documented in DESIGN.md §8): the XOF for block counter ``ctr``
+under public nonce ``nc`` (128-bit) is
+    AES-CTR(key = nc, counter_block = nc[0:12] || (ctr << 16 | i))
+i.e. each cipher block counter owns a 2^16-block counter subspace, giving
+up to 2^20 bytes of XOF output per keystream block — vastly more than the
+~4.7 kb the ciphers draw (37 AES blocks for Rubato Par-128L).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto import aes as aes_mod
+
+_CTR_SPACE = 1 << 16  # AES blocks reserved per (nonce, cipher-block) pair
+
+
+def _words_from_blocks(blocks_u8):
+    """(n, 16) uint8 -> (n*4,) uint32, little-endian within each word."""
+    b = blocks_u8.reshape(-1, 4, 4).astype(jnp.uint32)
+    w = b[..., 0] | (b[..., 1] << 8) | (b[..., 2] << 16) | (b[..., 3] << 24)
+    return w.reshape(-1)
+
+
+def aes_xof_words(nonce: np.ndarray, block_ctrs, n_words: int):
+    """uint32 XOF words for a batch of cipher-block counters.
+
+    nonce: 16-byte numpy array (public).  block_ctrs: (lanes,) uint32 array.
+    Returns (lanes, n_words) uint32.
+    """
+    nonce = np.asarray(nonce, dtype=np.uint8).reshape(16)
+    rk = jnp.asarray(aes_mod.aes128_key_expand(nonce))
+    n_blocks = (n_words + 3) // 4
+
+    def per_lane(ctr):
+        base = ctr * jnp.uint32(_CTR_SPACE)
+        idx = base + jnp.arange(n_blocks, dtype=jnp.uint32)
+        b0 = (idx >> 24).astype(jnp.uint8)
+        b1 = (idx >> 16).astype(jnp.uint8)
+        b2 = (idx >> 8).astype(jnp.uint8)
+        b3 = idx.astype(jnp.uint8)
+        ctr_bytes = jnp.stack([b0, b1, b2, b3], axis=-1)
+        prefix = jnp.broadcast_to(jnp.asarray(nonce[:12]), (n_blocks, 12))
+        blocks = jnp.concatenate([prefix, ctr_bytes], axis=-1)
+        ks = aes_mod.aes128_encrypt_blocks(blocks, rk)
+        return _words_from_blocks(ks)[:n_words]
+
+    return jax.vmap(per_lane)(jnp.asarray(block_ctrs, dtype=jnp.uint32))
+
+
+def threefry_xof_words(nonce: np.ndarray, block_ctrs, n_words: int):
+    """TPU-native counter-PRF XOF (beyond-paper fast path)."""
+    nonce = np.asarray(nonce, dtype=np.uint8).reshape(16)
+    seed = int.from_bytes(nonce.tobytes()[:8], "little")
+    root = jax.random.key(seed & 0x7FFFFFFFFFFFFFFF)
+
+    def per_lane(ctr):
+        k = jax.random.fold_in(root, ctr)
+        return jax.random.bits(k, (n_words,), dtype=jnp.uint32)
+
+    return jax.vmap(per_lane)(jnp.asarray(block_ctrs, dtype=jnp.uint32))
+
+
+_BACKENDS = {"aes": aes_xof_words, "threefry": threefry_xof_words}
+
+
+def make_xof(kind: str):
+    if kind not in _BACKENDS:
+        raise ValueError(f"unknown XOF backend {kind!r}; have {list(_BACKENDS)}")
+    return _BACKENDS[kind]
+
+
+def xof_words(kind: str, nonce, block_ctrs, n_words: int):
+    return make_xof(kind)(nonce, block_ctrs, n_words)

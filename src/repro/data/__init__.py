@@ -1,0 +1,2 @@
+"""Data plane: deterministic shard-aware pipeline + the HHE-encrypted batch
+path (the paper's cipher as a first-class framework feature)."""

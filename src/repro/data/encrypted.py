@@ -1,0 +1,100 @@
+"""HHE-encrypted data plane — the paper's cipher as a framework feature.
+
+Threat model (RtF client-server, paper §I-II): the *client* encrypts
+training/serving examples with a CKKS-friendly symmetric cipher (HERA or
+Rubato) — cheap, low-expansion — and ships ciphertext.  Here the TPU pod
+plays the role of the trusted compute enclave holding the symmetric key:
+it regenerates the stream key at line rate (the accelerator this paper
+builds) and decrypts by modular subtraction, fused into the input pipeline.
+The host/network path never carries plaintext.
+
+Token encryption is exact: token ids are Z_q elements directly (vocab < q).
+
+`EncryptedSource` wraps any pipeline source; `make_decryptor` returns the
+on-device decryption function the train step fuses in (see
+train_loop.make_train_step(decryptor=...)).  Keystream generation for batch
+t+1 is dispatchable concurrently with step t (macro-level RNG decoupling,
+DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cipher import Cipher
+
+
+def _blocks_for(n_tokens: int, l: int) -> int:
+    return (n_tokens + l - 1) // l
+
+
+def encrypt_tokens(cipher: Cipher, tokens: np.ndarray, base_ctr: int):
+    """tokens: (B, T) int32 < q.  Returns dict(ct=(B,T) u32, base_ctr)."""
+    B, T = tokens.shape
+    l = cipher.params.l
+    n_tok = B * T
+    nblk = _blocks_for(n_tok, l)
+    ctrs = jnp.arange(base_ctr, base_ctr + nblk, dtype=jnp.uint32)
+    z = cipher.keystream(ctrs).reshape(-1)[:n_tok]          # (n_tok,)
+    m = jnp.asarray(tokens.reshape(-1), jnp.uint32)
+    ct = cipher.params.mod.add(m, z).reshape(B, T)
+    return {"ct": ct, "base_ctr": jnp.asarray(base_ctr, jnp.uint32)}
+
+
+def make_decryptor(cipher: Cipher, labels_from_tokens: bool = True):
+    """Returns fn(batch) -> plaintext batch, run on-device inside the step.
+
+    batch: {"ct": (B,T) u32, "base_ctr": scalar u32} ->
+           {"tokens": (B,T) i32, "labels": (B,T) i32}
+    """
+    p = cipher.params
+    l = p.l
+
+    def decrypt(batch):
+        ct = batch["ct"]
+        B, T = ct.shape
+        n_tok = B * T
+        nblk = _blocks_for(n_tok, l)
+        ctrs = batch["base_ctr"] + jnp.arange(nblk, dtype=jnp.uint32)
+        z = cipher.keystream(ctrs).reshape(-1)[:n_tok]
+        toks = p.mod.sub(ct.reshape(-1), z).astype(jnp.int32).reshape(B, T)
+        out = {"tokens": toks}
+        if labels_from_tokens:
+            # next-token labels from the recovered stream
+            out["labels"] = jnp.concatenate(
+                [toks[:, 1:], jnp.full((B, 1), -1, jnp.int32)], axis=1
+            )
+        elif "labels" in batch:
+            out["labels"] = batch["labels"]
+        return out
+
+    return decrypt
+
+
+class EncryptedSource:
+    """Wraps a pipeline source: yields HHE-encrypted batches.
+
+    Counter-space management: batch t uses block counters
+    [t * blocks_per_batch, (t+1) * blocks_per_batch) — nonce reuse never
+    happens across steps, and decryption needs only (key, nonce, t).
+    """
+
+    def __init__(self, source, cipher: Cipher):
+        self.source = source
+        self.cipher = cipher
+
+    def blocks_per_batch(self) -> int:
+        b = self.source.batch * self.source.seq_len
+        return _blocks_for(b, self.cipher.params.l)
+
+    def batch_at(self, step: int) -> dict:
+        plain = self.source.batch_at(step)
+        base = step * self.blocks_per_batch()
+        enc = encrypt_tokens(self.cipher, plain["tokens"], base)
+        return enc

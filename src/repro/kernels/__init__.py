@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the compute hot-spots the paper accelerates.
+
+Layout convention (DESIGN.md §2): kernels are *lane-major* — the keystream
+lane/batch dimension is the trailing (128-wide vector lane) axis, and the
+small cipher-state dimension n ∈ {16, 36, 64} lives on sublanes.  This is
+the TPU analogue of the paper's "8 parallel lanes": state elements map to
+functional units (sublanes, unrolled), lanes map to SIMD width.
+
+Each kernel directory has:
+  <name>.py — pl.pallas_call with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (padding, layout, dtype handling)
+  ref.py    — pure-jnp oracle the kernel is validated against (interpret=True)
+"""
+
+from repro.kernels.mrmc.ops import mrmc_kernel_apply
+from repro.kernels.keystream.ops import keystream_kernel_apply
+from repro.kernels.aes.ops import aes_ctr_kernel_apply
+
+__all__ = [
+    "mrmc_kernel_apply",
+    "keystream_kernel_apply",
+    "aes_ctr_kernel_apply",
+]

@@ -1,0 +1,3 @@
+from repro.kernels.aes.ops import aes_ctr_kernel_apply
+
+__all__ = ["aes_ctr_kernel_apply"]

@@ -1,0 +1,117 @@
+"""Pallas kernel: batched AES-128-CTR keystream — the XOF producer.
+
+Hardware adaptation of the paper's §IV-D choice (AES over SHAKE256 for
+throughput): on TPU, the byte-table S-box lookup is the hostile operation
+(gathers don't vectorize on the VPU), so SubBytes is re-expressed as a
+one-hot × table **matmul on the MXU** — exact, because both the one-hot
+matrix and the table values (≤255) are exactly representable in f32.
+ShiftRows is a static sublane permutation; MixColumns is xtime bitwise
+algebra in uint32 lanes; AddRoundKey is an XOR against a replicated round
+key.  Counter-mode blocks are built in-kernel from the lane counter.
+
+Layout: lane-major (16 state bytes on sublanes, CTR lanes on vector lanes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.crypto.aes import _SBOX_NP, _SHIFTROWS_PERM
+
+BLK = 128  # counters per grid step
+
+
+def _sub_bytes_mxu(state, sbox):
+    """S-box via one-hot matmul: state (16, BLK) u32, sbox (256,) f32."""
+    idx = state.astype(jnp.int32)
+    # one-hot (16, BLK, 256) f32; contraction over the 256 axis on the MXU
+    iota = jax.lax.broadcasted_iota(jnp.int32, (16, state.shape[1], 256), 2)
+    onehot = (iota == idx[..., None]).astype(jnp.float32)
+    out = jax.lax.dot_general(
+        onehot, sbox,
+        dimension_numbers=(((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(jnp.uint32)
+
+
+def _xtime(x):
+    m = jnp.uint32(0xFF)
+    hi = (x & jnp.uint32(0x80)) != 0
+    return ((x << 1) & m) ^ jnp.where(hi, jnp.uint32(0x1B), jnp.uint32(0))
+
+
+def _shift_rows(state):
+    rows = [state[int(i)] for i in _SHIFTROWS_PERM]
+    return jnp.stack(rows, axis=0)
+
+
+def _mix_columns(state):
+    cols = []
+    for c in range(4):
+        a0, a1, a2, a3 = (state[4 * c + r] for r in range(4))
+        x0, x1, x2, x3 = _xtime(a0), _xtime(a1), _xtime(a2), _xtime(a3)
+        cols += [
+            x0 ^ (x1 ^ a1) ^ a2 ^ a3,
+            a0 ^ x1 ^ (x2 ^ a2) ^ a3,
+            a0 ^ a1 ^ x2 ^ (x3 ^ a3),
+            (x0 ^ a0) ^ a1 ^ a2 ^ x3,
+        ]
+    return jnp.stack(cols, axis=0)
+
+
+def _aes_kernel(rk_ref, nonce_ref, sbox_ref, ctr_ref, o_ref):
+    rk = rk_ref[...]        # (11, 16, 1) u32
+    nonce = nonce_ref[...]  # (12, 1) u32
+    sbox = sbox_ref[...][:, 0]  # (256,) f32
+    ctr = ctr_ref[...]      # (1, BLK) u32
+
+    blk = ctr.shape[-1]
+    ctr_rows = jnp.concatenate(
+        [
+            (ctr >> 24) & jnp.uint32(0xFF),
+            (ctr >> 16) & jnp.uint32(0xFF),
+            (ctr >> 8) & jnp.uint32(0xFF),
+            ctr & jnp.uint32(0xFF),
+        ],
+        axis=0,
+    )                                           # (4, BLK)
+    state = jnp.concatenate(
+        [jnp.broadcast_to(nonce, (12, blk)), ctr_rows], axis=0
+    )                                           # (16, BLK)
+
+    state = state ^ rk[0]
+    for rnd in range(1, 10):
+        state = _sub_bytes_mxu(state, sbox)
+        state = _shift_rows(state)
+        state = _mix_columns(state)
+        state = state ^ rk[rnd]
+    state = _sub_bytes_mxu(state, sbox)
+    state = _shift_rows(state)
+    o_ref[...] = state ^ rk[10]
+
+
+def aes_ctr_pallas(rk_u32, nonce_u32, counters, *, interpret: bool):
+    """rk_u32: (11,16,1) u32; nonce_u32: (12,1) u32; counters: (1, lanes) u32
+    with lanes % BLK == 0.  Returns (16, lanes) u32 keystream bytes."""
+    lanes = counters.shape[-1]
+    assert lanes % BLK == 0, lanes
+    sbox = jnp.asarray(_SBOX_NP.astype(np.float32))[:, None]  # (256, 1)
+    return pl.pallas_call(
+        _aes_kernel,
+        grid=(lanes // BLK,),
+        in_specs=[
+            pl.BlockSpec((11, 16, 1), lambda i: (0, 0, 0)),
+            pl.BlockSpec((12, 1), lambda i: (0, 0)),
+            pl.BlockSpec((256, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, BLK), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((16, BLK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((16, lanes), jnp.uint32),
+        interpret=interpret,
+    )(rk_u32, nonce_u32, sbox, counters)

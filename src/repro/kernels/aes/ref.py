@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the AES-CTR kernel: the FIPS-validated crypto.aes."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto import aes as aes_mod
+
+
+def aes_ctr_ref(round_keys, nonce12, counters):
+    """round_keys: (11,16) u8; nonce12: (12,) u8; counters: (lanes,) u32.
+    Returns (lanes, 16) uint8 keystream blocks (big-endian counter)."""
+    counters = jnp.asarray(counters, jnp.uint32)
+    lanes = counters.shape[0]
+    b = jnp.stack(
+        [
+            (counters >> 24).astype(jnp.uint8),
+            (counters >> 16).astype(jnp.uint8),
+            (counters >> 8).astype(jnp.uint8),
+            counters.astype(jnp.uint8),
+        ],
+        axis=-1,
+    )
+    prefix = jnp.broadcast_to(
+        jnp.asarray(np.asarray(nonce12, np.uint8)), (lanes, 12)
+    )
+    blocks = jnp.concatenate([prefix, b], axis=-1)
+    return aes_mod.aes128_encrypt_blocks(blocks, jnp.asarray(round_keys))

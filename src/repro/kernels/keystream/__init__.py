@@ -1,0 +1,3 @@
+from repro.kernels.keystream.ops import keystream_kernel_apply, presto_keystream
+
+__all__ = ["keystream_kernel_apply", "presto_keystream"]

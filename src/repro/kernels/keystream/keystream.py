@@ -1,0 +1,137 @@
+"""Pallas kernel: fully fused HERA/Rubato stream-key generation.
+
+This is the accelerator itself (paper §IV), re-architected for TPU:
+
+  * T1 (vectorization + function overlapping) → the *entire* r-round cipher
+    is one kernel; the state lives in VMEM/vregs from initial ARK to final
+    output.  Between "functional modules" (ARK, MRMC, Cube/Feistel) there is
+    no HBM traffic at all — the strongest possible form of the paper's
+    module-overlap: on TPU, modules are fused ops on register-resident data.
+  * T2 (MRMC transposition-invariance) → MixColumns/MixRows execute as one
+    algebraic unit M_v·X·M_vᵀ with no transpose materialization or relayout
+    (see kernels/mrmc/mrmc.py, shared implementation).
+  * T3 (RNG decoupling) → round constants are an *input* streamed through
+    `BlockSpec` grid pipelining.  Pallas double-buffers input blocks: while
+    block i computes, block i+1's constants are DMA'd HBM→VMEM — the FIFO
+    between the AES producer and the round consumer, depth 2, in hardware.
+  * T4 (shift-add) → no integer multiply in the linear layers; the modular
+    multiplies that remain (key schedule, Cube/Feistel) use the 14-bit limb
+    scheme, uint32 only.
+
+Layout: lane-major (state dim on sublanes, keystream lanes on vector lanes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.params import CipherParams
+
+from repro.crypto.modmath import Modulus
+from repro.kernels.mrmc.mrmc import mrmc_matrix_apply
+
+BLK = 128  # keystream lanes per grid step
+
+
+def _feistel(mod: Modulus, x):
+    """y_1 = x_1; y_i = x_i + x_{i-1}^2 — on (n, BLK) lane-major state."""
+    sq = mod.mul(x[:-1], x[:-1])
+    shifted = jnp.concatenate([jnp.zeros_like(x[:1]), sq], axis=0)
+    return mod.add(x, shifted)
+
+
+def _keystream_kernel(params: CipherParams, with_noise: bool, *refs):
+    if with_noise:
+        key_ref, rc_ref, noise_ref, o_ref = refs
+    else:
+        key_ref, rc_ref, o_ref = refs
+        noise_ref = None
+
+    p = params
+    mod = p.mod
+    mat = p.mix_matrix()
+    n, l, v, r = p.n, p.l, p.v, p.rounds
+
+    key = key_ref[...]          # (n, 1) — broadcasts against (n, BLK)
+    rc = rc_ref[...]            # (n_round_constants, BLK)
+    # ic = (1, ..., n) built in-kernel (n < q, so no reduction needed)
+    x = jax.lax.broadcasted_iota(
+        jnp.uint32, (n, rc.shape[-1]), 0
+    ) + jnp.uint32(1)
+
+    def ark(x, rc_slice, keyv):
+        return mod.add(x, mod.mul(keyv, rc_slice))
+
+    def mrmc(x):
+        X = x.reshape(v, v, -1)
+        return mrmc_matrix_apply(mod, mat, X).reshape(n, -1)
+
+    if p.kind == "hera":
+        rcs = [rc[i * n : (i + 1) * n] for i in range(p.n_arks)]
+        x = ark(x, rcs[0], key)
+        for j in range(1, r):
+            x = mrmc(x)
+            x = mod.cube(x)
+            x = ark(x, rcs[j], key)
+        x = mrmc(x)
+        x = mod.cube(x)
+        x = mrmc(x)
+        x = ark(x, rcs[r], key)
+        o_ref[...] = x
+        return
+
+    # rubato
+    x = ark(x, rc[0:n], key)
+    for j in range(1, r):
+        x = mrmc(x)
+        x = _feistel(mod, x)
+        x = ark(x, rc[j * n : (j + 1) * n], key)
+    x = mrmc(x)
+    x = _feistel(mod, x)
+    x = mrmc(x)
+    x = x[:l]
+    x = ark(x, rc[r * n : r * n + l], key[:l])
+    if noise_ref is not None:
+        e = noise_ref[...]
+        x = mod.add(x, mod.reduce(
+            jnp.where(e < 0, e + jnp.int32(mod.q), e).astype(jnp.uint32),
+            2 * mod.q,
+        ))
+    o_ref[...] = x
+
+
+def keystream_pallas(params: CipherParams, key_n1, rc_cl, noise_ll=None, *,
+                     interpret: bool):
+    """key_n1: (n, 1) u32; rc_cl: (n_consts, lanes) u32;
+    noise_ll: (l, lanes) int32 or None.  lanes % BLK == 0.
+    Returns (l, lanes) u32 keystream (lane-major)."""
+    p = params
+    lanes = rc_cl.shape[-1]
+    assert lanes % BLK == 0, lanes
+    nc = p.n_round_constants
+    with_noise = noise_ll is not None
+    grid = (lanes // BLK,)
+
+    in_specs = [
+        pl.BlockSpec((p.n, 1), lambda i: (0, 0)),       # key: replicated
+        pl.BlockSpec((nc, BLK), lambda i: (0, i)),      # constants: streamed
+    ]
+    args = [key_n1, rc_cl]
+    if with_noise:
+        in_specs.append(pl.BlockSpec((p.l, BLK), lambda i: (0, i)))
+        args.append(noise_ll)
+
+    kernel = functools.partial(_keystream_kernel, p, with_noise)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((p.l, BLK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((p.l, lanes), jnp.uint32),
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,49 @@
+"""Public jit'd wrappers for the fused keystream kernel.
+
+`keystream_kernel_apply` — kernel consumer with explicit constants (matches
+ref.py signature).  `presto_keystream` — the full D3 pipeline: pure-JAX XOF
+producer (decoupled RNG) feeding the fused Pallas consumer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cipher import Cipher
+from repro.core.params import CipherParams
+from repro.kernels.keystream.keystream import BLK, keystream_pallas
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("params", "interpret"))
+def keystream_kernel_apply(params: CipherParams, key, rc, noise=None,
+                           interpret: bool | None = None):
+    """key: (n,) u32; rc: (lanes, n_round_constants) u32; noise: (lanes, l)
+    int32 or None.  Returns (lanes, l) u32 keystream blocks."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    lanes = rc.shape[0]
+    pad = (-lanes) % BLK
+    rc_p = jnp.pad(rc, ((0, pad), (0, 0))).T          # (n_consts, lanes_p)
+    noise_p = None
+    if noise is not None and params.n_noise:
+        noise_p = jnp.pad(noise, ((0, pad), (0, 0))).T  # (l, lanes_p)
+    out = keystream_pallas(
+        params, key[:, None], rc_p, noise_p, interpret=interpret
+    )
+    return out.T[:lanes]
+
+
+def presto_keystream(cipher: Cipher, block_ctrs, interpret: bool | None = None):
+    """Full accelerator pipeline: XOF producer -> fused kernel consumer."""
+    consts = cipher.round_constant_stream(block_ctrs)
+    return keystream_kernel_apply(
+        cipher.params, cipher.key, consts["rc"], consts["noise"],
+        interpret=interpret,
+    )

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused keystream kernel: the core cipher itself."""
+
+from __future__ import annotations
+
+from repro.core.hera import hera_stream_key
+from repro.core.params import CipherParams
+from repro.core.rubato import rubato_stream_key
+
+
+def keystream_ref(params: CipherParams, key, rc, noise=None):
+    """key: (n,) u32; rc: (lanes, n_round_constants) u32; noise: (lanes, l)
+    int32 or None.  Returns (lanes, l) u32 keystream blocks."""
+    if params.kind == "hera":
+        rcs = rc.reshape(rc.shape[:-1] + (params.n_arks, params.n))
+        return hera_stream_key(params, key, rcs)
+    return rubato_stream_key(params, key, rc, noise)

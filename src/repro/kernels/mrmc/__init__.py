@@ -1,0 +1,3 @@
+from repro.kernels.mrmc.ops import mrmc_kernel_apply
+
+__all__ = ["mrmc_kernel_apply"]

@@ -1,0 +1,94 @@
+"""Pallas kernel: fused MixRows∘MixColumns (MRMC) = M_v · X · M_vᵀ mod q.
+
+The paper's T2+T4 in kernel form:
+
+  * T2 (transposition-invariance / bubble elimination): MixColumns and
+    MixRows execute back-to-back on a VMEM-resident state — there is no
+    transpose materialization, relayout, or HBM round-trip between them
+    (the FPGA design's "bubble" maps to exactly those on TPU).
+  * T4 (shift-add): M_v entries ∈ {1,2,3}, so every "multiplication" is an
+    add chain with branchless conditional-subtract reduction — the kernel
+    contains no integer multiply at all.
+
+Layout: lane-major — state block is (v, v, BLK) uint32 with the keystream
+lane on the 128-wide vector lane axis, state rows/cols unrolled on sublanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.params import CipherParams
+from repro.crypto.modmath import Modulus
+
+BLK = 128  # keystream lanes per grid step (one full vector-lane width)
+
+
+def _scale_small(mod: Modulus, x, c: int):
+    """c·x mod q for c ∈ {0..3} as adds + conditional subtract (no multiply)."""
+    if c == 0:
+        return jnp.zeros_like(x)
+    acc = x
+    for _ in range(c - 1):
+        acc = acc + x
+    return mod.reduce(acc, c * mod.q)
+
+
+def _combine(mod: Modulus, terms):
+    """Sum of already-reduced terms (< q each) with interleaved reduction."""
+    acc, bound = None, 0
+    for t in terms:
+        if acc is None:
+            acc, bound = t, mod.q
+        else:
+            if bound + mod.q >= 2**32:
+                acc = mod.reduce(acc, bound)
+                bound = mod.q
+            acc = acc + t
+            bound += mod.q
+    return mod.reduce(acc, bound)
+
+
+def mrmc_matrix_apply(mod: Modulus, mat: np.ndarray, x):
+    """Apply M·X·Mᵀ to x of shape (v, v, ...) — shared by this kernel and
+    the fused keystream kernel (state stays wherever it lives; VMEM here)."""
+    v = mat.shape[0]
+    # MixColumns: a[i] = Σ_j M[i,j] · x[j]   (x[j] is state row j: (v, ...))
+    a = [
+        _combine(mod, [_scale_small(mod, x[j], int(mat[i, j])) for j in range(v)])
+        for i in range(v)
+    ]
+    a = jnp.stack(a, axis=0)  # (v, v, ...)
+    # MixRows: y[:, c] = Σ_j M[c,j] · a[:, j]
+    y = [
+        _combine(mod, [_scale_small(mod, a[:, j], int(mat[c, j])) for j in range(v)])
+        for c in range(v)
+    ]
+    return jnp.stack(y, axis=1)  # (v, v, ...)
+
+
+def _mrmc_kernel(mat: np.ndarray, q: int, x_ref, o_ref):
+    mod = Modulus(q)
+    o_ref[...] = mrmc_matrix_apply(mod, mat, x_ref[...])
+
+
+def mrmc_pallas(params: CipherParams, x_vvl, *, interpret: bool):
+    """x_vvl: (v, v, lanes) uint32, lanes % BLK == 0.  Returns same shape."""
+    v = params.v
+    lanes = x_vvl.shape[-1]
+    assert lanes % BLK == 0, lanes
+    grid = (lanes // BLK,)
+    kernel = functools.partial(_mrmc_kernel, params.mix_matrix(), params.mod.q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((v, v, BLK), lambda i: (0, 0, i))],
+        out_specs=pl.BlockSpec((v, v, BLK), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((v, v, lanes), jnp.uint32),
+        interpret=interpret,
+    )(x_vvl)

@@ -1,0 +1,33 @@
+"""Public jit'd wrapper for the MRMC kernel: row-major (lanes, n) API,
+lane padding, layout transform to/from the kernel's lane-major (v, v, BLK)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import CipherParams
+from repro.kernels.mrmc.mrmc import BLK, mrmc_pallas
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("params", "interpret"))
+def mrmc_kernel_apply(params: CipherParams, x, interpret: bool | None = None):
+    """x: (lanes, n) uint32 row-major states -> (lanes, n) MRMC output."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    lanes, n = x.shape
+    v = params.v
+    assert n == params.n
+    pad = (-lanes) % BLK
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    # (lanes_p, n) -> (v, v, lanes_p): row-major state onto sublanes
+    x_vvl = xp.reshape(lanes + pad, v, v).transpose(1, 2, 0)
+    o = mrmc_pallas(params, x_vvl, interpret=interpret)
+    out = o.transpose(2, 0, 1).reshape(lanes + pad, n)
+    return out[:lanes]

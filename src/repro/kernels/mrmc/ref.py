@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the MRMC kernel: delegates to the core round module
+(single source of truth for cipher semantics)."""
+
+from __future__ import annotations
+
+from repro.core import rounds as R
+from repro.core.params import CipherParams
+
+
+def mrmc_ref(params: CipherParams, x):
+    """x: (lanes, n) uint32 row-major states -> (lanes, n) MRMC output."""
+    return R.mrmc(params, x)

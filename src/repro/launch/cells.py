@@ -1,0 +1,128 @@
+"""The (architecture × input-shape) cell matrix.
+
+Shapes (assigned):
+    train_4k     seq 4096,   global_batch 256  -> train_step
+    prefill_32k  seq 32768,  global_batch 32   -> prefill (forward for
+                                                  encoder-only archs)
+    decode_32k   seq 32768,  global_batch 128  -> decode_step (1 new token,
+                                                  cache of seq_len)
+    long_500k    seq 524288, global_batch 1    -> decode_step; only for
+                                                  sub-quadratic archs
+
+`input_specs` returns ShapeDtypeStruct stand-ins for every input — weak-type
+correct, shardable, zero allocation (the dry-run lowers against these).
+Skips (DESIGN.md §5): long_500k only for mamba2/jamba; hubert (encoder-only)
+has no decode shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, get_config, list_archs
+from repro.models import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+SUBQUADRATIC = {"mamba2-2.7b", "jamba-1.5-large"}
+
+
+def cell_applicable(arch: str, shape_name: str):
+    """Returns (applicable, reason_if_not)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode" and not cfg.causal:
+        return False, "encoder-only arch has no autoregressive decode step"
+    if shape_name == "long_500k" and arch not in SUBQUADRATIC:
+        return False, ("full-attention arch: 500k context needs sub-quadratic "
+                       "attention (see DESIGN.md §5)")
+    return True, ""
+
+
+def all_cells():
+    """Every (arch, shape) incl. skips: [(arch, shape, applicable, reason)]."""
+    out = []
+    for arch in list_archs():
+        for sname in SHAPES:
+            ok, why = cell_applicable(arch, sname)
+            out.append((arch, sname, ok, why))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input stand-ins
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_input_specs(cfg: ModelConfig, B: int, T: int, *, train: bool):
+    d = {}
+    if cfg.frontend == "none":
+        d["tokens"] = _sds((B, T), jnp.int32)
+    else:
+        d["embeds"] = _sds((B, T, cfg.frontend_dim), jnp.bfloat16)
+        if cfg.rope_kind == "mrope":
+            d["positions"] = _sds((B, T, 3), jnp.int32)
+    if train:
+        d["labels"] = _sds((B, T), jnp.int32)
+    return d
+
+
+def params_specs_abstract(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(M.init_params, cfg), jax.random.key(0)
+    )
+
+
+def cache_specs_abstract(cfg: ModelConfig, B: int, max_len: int):
+    return jax.eval_shape(
+        functools.partial(M.init_cache, cfg, B, max_len)
+    )
+
+
+def input_specs(arch: str, shape_name: str, *, opt=None, smoke: bool = False):
+    """All inputs for the cell's step function, as ShapeDtypeStructs.
+
+    train  -> (params, opt_state, batch, step_idx)
+    prefill-> (params, batch)
+    decode -> (params, cache, tokens, cur_len)
+    """
+    cfg = get_config(arch, smoke=smoke)
+    shape = SHAPES[shape_name]
+    B, T = shape.global_batch, shape.seq_len
+    params = params_specs_abstract(cfg)
+    if shape.kind == "train":
+        from repro.train.optimizer import OptConfig, init_opt_state
+        opt = opt or OptConfig(eightbit=cfg.opt_8bit)
+        opt_state = jax.eval_shape(
+            functools.partial(init_opt_state, cfg=opt), params
+        )
+        batch = batch_input_specs(cfg, B, T, train=True)
+        return (params, opt_state, batch, _sds((), jnp.int32))
+    if shape.kind == "prefill":
+        batch = batch_input_specs(cfg, B, T, train=False)
+        return (params, batch)
+    # decode
+    cache = cache_specs_abstract(cfg, B, T)
+    tokens = _sds((B, 1), jnp.int32)
+    return (params, cache, tokens, _sds((), jnp.int32))

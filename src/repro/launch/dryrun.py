@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-2.7b \
+        --shape long_500k --multi-pod both
+    PYTHONPATH=src python -m repro.launch.dryrun --out dryrun_results.json
+
+The XLA_FLAGS line above MUST stay the first statement: jax locks the device
+count at first init.  (Do not set this flag anywhere else — smoke tests and
+benches see 1 device.)
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, list_archs
+from repro.launch import cells as C
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.sharding import make_policy
+from repro.serve.serve_loop import make_decode_step, make_prefill_step
+from repro.train.optimizer import OptConfig
+from repro.train.train_loop import make_train_step
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum operand bytes of every collective op in an HLO module text.
+
+    Builds a name -> bytes table from op definitions, then looks up the
+    operands of each collective.  while-bodies appear once (see roofline.py
+    for trip-count correction)."""
+    dtype_bytes = {
+        "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+        "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+        "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    }
+
+    def shape_bytes(ty: str) -> int:
+        # e.g. "bf16[16,4096]{1,0}" or tuple "(f32[2], f32[2])"
+        total = 0
+        for m in re.finditer(r"(\w+)\[([\d,]*)\]", ty):
+            dt, dims = m.group(1), m.group(2)
+            if dt not in dtype_bytes:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * dtype_bytes[dt]
+        return total
+
+    defs = {}
+    op_lines = []
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+(\S+)\(",
+                     line)
+        if not m:
+            continue
+        name, ty, opname = m.group(1), m.group(2), m.group(3)
+        defs[name] = shape_bytes(ty)
+        op_lines.append((name, ty, opname, line))
+
+    total = 0
+    counts = Counter()
+    per_kind = Counter()
+    for name, ty, opname, line in op_lines:
+        kind = next((c for c in COLLECTIVES if opname.startswith(c)), None)
+        if kind is None:
+            continue
+        # operand names inside the call parens
+        call = line.split(opname + "(", 1)[1]
+        operands = re.findall(r"%?([\w.\-]+)", call.split(")")[0])
+        b = sum(defs.get(o, 0) for o in operands if o in defs)
+        if b == 0:
+            b = shape_bytes(ty)  # fallback: output size
+        total += b
+        counts[kind] += 1
+        per_kind[kind] += b
+    return total, dict(counts), dict(per_kind)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False):
+    """Build the step function for a cell and lower it.  Returns lowered."""
+    cfg = get_config(arch, smoke=smoke)
+    shape = C.SHAPES[shape_name]
+    train = shape.kind == "train"
+    policy = make_policy(mesh, cfg, batch=shape.global_batch, train=train)
+
+    if shape.kind == "train":
+        opt = OptConfig(eightbit=cfg.opt_8bit)
+        # microbatch=4: gradient-accumulation scan — bounds per-token temps
+        # and amortizes the single per-step gradient reduction (DESIGN.md §6)
+        step, _ = make_train_step(cfg, policy, opt, donate=True, microbatch=4)
+        specs = C.input_specs(arch, shape_name, opt=opt, smoke=smoke)
+        with policy.mesh:
+            return step.lower(*specs), policy
+    if shape.kind == "prefill":
+        if not cfg.causal:
+            # encoder-only: "prefill" is a full forward (no cache)
+            from repro.train.train_loop import batch_specs, _shard
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            pspecs = M.param_specs(cfg, policy)
+            bspecs = batch_specs(cfg, policy, train=False)
+            fn = jax.jit(
+                lambda p, b: M.forward_train(cfg, p, b)[0],
+                in_shardings=(_shard(policy.mesh, pspecs),
+                              _shard(policy.mesh, bspecs)),
+            )
+        else:
+            fn = make_prefill_step(cfg, policy, shape.seq_len)
+        specs = C.input_specs(arch, shape_name, smoke=smoke)
+        with policy.mesh:
+            return fn.lower(*specs), policy
+    # decode
+    fn = make_decode_step(cfg, policy)
+    specs = C.input_specs(arch, shape_name, smoke=smoke)
+    with policy.mesh:
+        return fn.lower(*specs), policy
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_tag: str):
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag}
+    try:
+        lowered, policy = lower_cell(arch, shape_name, mesh)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ca = compiled.cost_analysis()
+        ma = compiled.memory_analysis()
+        cbytes, ccounts, ckinds = collective_bytes(compiled.as_text())
+        alias = getattr(ma, "alias_size_in_bytes", 0)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "flops": ca.get("flops", 0.0),
+            "bytes": ca.get("bytes accessed", 0.0),
+            "collective_bytes": cbytes,
+            "collective_counts": ccounts,
+            "collective_bytes_by_kind": ckinds,
+            "arg_bytes_per_dev": ma.argument_size_in_bytes,
+            "out_bytes_per_dev": ma.output_size_in_bytes,
+            "tmp_bytes_per_dev": ma.temp_size_in_bytes,
+            "alias_bytes_per_dev": alias,
+            # donated inputs alias their outputs — don't double count
+            "peak_bytes_per_dev": (
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - alias
+            ),
+            "tp": (policy.tp_a, policy.tp_b, policy.sp),
+            "fsdp": policy.fsdp,
+            "seq_shard": policy.seq_shard_data,
+        })
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-2000:]})
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.multi_pod in ("single", "both"):
+        meshes.append(("1pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.multi_pod in ("multi", "both"):
+        meshes.append(("2pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    results = []
+    for arch, sname, ok, why in C.all_cells():
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and sname != args.shape:
+            continue
+        if not ok:
+            for tag, _ in meshes:
+                results.append({"arch": arch, "shape": sname, "mesh": tag,
+                                "ok": True, "skipped": True, "reason": why})
+            print(f"SKIP  {arch:18s} {sname:12s} ({why})")
+            continue
+        for tag, mesh in meshes:
+            rec = run_cell(arch, sname, mesh, tag)
+            results.append(rec)
+            if rec["ok"]:
+                print(
+                    f"PASS  {arch:18s} {sname:12s} {tag:12s} "
+                    f"compile={rec['compile_s']:6.1f}s "
+                    f"flops/dev={rec['flops']:.3e} "
+                    f"peak/dev={rec['peak_bytes_per_dev']/1e9:6.2f}GB "
+                    f"coll={rec['collective_bytes']/1e9:8.3f}GB"
+                )
+            else:
+                print(f"FAIL  {arch:18s} {sname:12s} {tag:12s} {rec['error']}")
+                if args.verbose:
+                    print(rec.get("trace", ""))
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    n_fail = sum(1 for r in results if not r.get("ok"))
+    n_skip = sum(1 for r in results if r.get("skipped"))
+    print(f"\n{len(results)} cells: {len(results)-n_fail-n_skip} passed, "
+          f"{n_skip} skipped-by-design, {n_fail} FAILED -> {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,106 @@
+"""Elastic scaling + straggler mitigation (DESIGN.md §6).
+
+Elasticity model: the mesh is rebuilt from surviving devices after a node
+failure — the data/pod axes shrink to the largest supported configuration,
+and the checkpoint restore path (train/checkpoint.py) reshards onto the new
+mesh (restore takes arbitrary NamedShardings).  Because the data pipeline is
+a pure function of (seed, step), no data-state migration is needed.
+
+Straggler mitigation: at SPMD scale a straggler shows up as a slow step for
+*everyone* (collectives synchronize).  The watchdog tracks a per-step-time
+EMA; a sustained regression beyond `threshold`× flags a straggler event, and
+the deployment policy is checkpoint -> evict -> elastic restart (hot-spare
+promotion), which this module's `ElasticPlan` encodes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+SUPPORTED_DP = (32, 16, 8, 4, 2, 1)  # data-axis sizes we can shrink to
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    mesh_shape: tuple
+    axis_names: tuple
+    n_devices: int
+    dropped: int
+
+
+def plan_mesh(available_devices: int, *, model: int = 16,
+              multi_pod: bool = False) -> ElasticPlan:
+    """Largest supported mesh from the surviving device count.
+
+    The model axis is preserved (TP degree is baked into layer shardings);
+    elasticity happens on the data/pod axes.
+    """
+    per_pod = available_devices if not multi_pod else available_devices // 2
+    usable_dp = 0
+    for dp in SUPPORTED_DP:
+        if dp * model <= per_pod:
+            usable_dp = dp
+            break
+    if usable_dp == 0:
+        raise RuntimeError(
+            f"{available_devices} devices cannot host model axis {model}"
+        )
+    if multi_pod:
+        shape = (2, usable_dp, model)
+        names = ("pod", "data", "model")
+        used = 2 * usable_dp * model
+    else:
+        shape = (usable_dp, model)
+        names = ("data", "model")
+        used = usable_dp * model
+    return ElasticPlan(shape, names, used, available_devices - used)
+
+
+def build_mesh(plan: ElasticPlan) -> Mesh:
+    devs = np.array(jax.devices()[: plan.n_devices]).reshape(plan.mesh_shape)
+    return Mesh(devs, plan.axis_names)
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """EMA step-time monitor; flags sustained slowdowns."""
+
+    alpha: float = 0.1
+    threshold: float = 1.8
+    patience: int = 5
+    warmup: int = 10
+
+    _ema: Optional[float] = None
+    _strikes: int = 0
+    _steps: int = 0
+    events: List[dict] = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, step_time_s: float) -> bool:
+        """Returns True if a straggler event fires at this step."""
+        self._steps += 1
+        if self._ema is None:
+            self._ema = step_time_s
+            return False
+        fired = False
+        if (self._steps > self.warmup
+                and step_time_s > self.threshold * self._ema):
+            self._strikes += 1
+            if self._strikes >= self.patience:
+                fired = True
+                self.events.append({
+                    "step": step, "step_time": step_time_s,
+                    "ema": self._ema, "action": "checkpoint+evict+restart",
+                })
+                self._strikes = 0
+        else:
+            self._strikes = 0
+            # only fold healthy steps into the EMA
+            self._ema = (1 - self.alpha) * self._ema + self.alpha * step_time_s
+        return fired

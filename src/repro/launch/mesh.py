@@ -1,0 +1,20 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (device count is locked at first jax init; the dry-run sets
+XLA_FLAGS before importing jax)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for smoke tests / CPU examples."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,365 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+
+"""Roofline analysis — probe-composed, exact FLOP accounting.
+
+XLA's cost_analysis counts EVERY while-loop body ONCE (verified): that
+includes the scan over layer groups, the flash-attention KV scan, the SSD
+chunk scan, the CE chunk scan and the microbatch scan.  So the roofline is
+assembled from PROBES compiled with `probe_unroll=True` configs (all inner
+scans unrolled -> every FLOP visible):
+
+  train:   total = mb * (G * group_bwd + embed_bwd + ce_bwd) + optimizer
+  prefill: total = G * group_fwd + embed_fwd + head_fwd(last token)
+  decode:  total = G * group_decode + embed + head     (via 1-group step
+           minus embed/head probes)
+
+Each probe runs under the SAME mesh and shardings as the real cell, so
+collective bytes (parsed per-device from the probe HLO) compose the same
+way.  Memory numbers come from the full-step dry-run (dryrun_results.json).
+
+Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI.
+
+    T_comp = FLOPs_per_dev / 197e12
+    T_mem  = Bytes_per_dev / 819e9      (bytes-accessed upper bound: XLA
+             counts every op's operands; on-chip fusion reduces real HBM
+             traffic, so true T_mem is lower — see EXPERIMENTS.md)
+    T_coll = CollBytes_per_dev / 50e9
+
+MFU-proxy = T_comp / max(terms); useful = MODEL_FLOPS / (FLOPs_per_dev * chips).
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.launch import cells as C
+from repro.launch.dryrun import collective_bytes, lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.sharding import make_policy
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+MICROBATCH = 4  # must match dryrun.lower_cell
+
+
+def _cost(compiled):
+    ca = compiled.cost_analysis()
+    cb, _, _ = collective_bytes(compiled.as_text())
+    return {"flops": ca.get("flops", 0.0),
+            "bytes": ca.get("bytes accessed", 0.0),
+            "coll": float(cb)}
+
+
+def _zero():
+    return {"flops": 0.0, "bytes": 0.0, "coll": 0.0}
+
+
+def _add(*costs, scales=None):
+    scales = scales or [1.0] * len(costs)
+    out = _zero()
+    for c, s in zip(costs, scales):
+        for k in out:
+            out[k] += s * c[k]
+    return out
+
+
+def _shard(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+class CellProber:
+    def __init__(self, arch: str, shape_name: str, mesh):
+        from repro.train.train_loop import act_shardings
+        self.cfg = get_config(arch)
+        self.shape = C.SHAPES[shape_name]
+        self.train = self.shape.kind == "train"
+        self.policy = make_policy(mesh, self.cfg,
+                                  batch=self.shape.global_batch,
+                                  train=self.train)
+        self.mesh = self.policy.mesh
+        # 1-group model with all inner scans unrolled
+        self.cfg1 = dataclasses.replace(
+            self.cfg, num_layers=len(self.cfg.group), probe_unroll=True)
+        self.acts = act_shardings(self.cfg1, self.policy)
+        self.B = (self.shape.global_batch // MICROBATCH if self.train
+                  else self.shape.global_batch)
+        self.T = self.shape.seq_len
+        bs = tuple(self.policy.batch_spec())
+        self.x_spec = P(bs[0], bs[1], self.policy.tp_full)
+        self.tok_spec = P(*bs)
+
+    def _compile(self, fn, args, in_specs):
+        jf = jax.jit(fn, in_shardings=_shard(self.mesh, in_specs))
+        with self.mesh:
+            return _cost(jf.lower(*args).compile())
+
+    # ------------------------------------------------------------------
+    def group_probe(self):
+        cfg1, policy = self.cfg1, self.policy
+        pspecs = M.param_specs(cfg1, policy)["blocks"]
+        params = C.params_specs_abstract(cfg1)["blocks"]
+        x = jax.ShapeDtypeStruct((self.B, self.T, cfg1.d_model), jnp.bfloat16)
+        pos = jax.ShapeDtypeStruct(
+            (self.B, self.T) + ((3,) if cfg1.rope_kind == "mrope" else ()),
+            jnp.int32)
+        from repro.models import attention as A
+
+        def apply_group(blocks, x, pos):
+            cos, sin = (A.rope_angles(cfg1, pos)
+                        if cfg1.rope_kind != "none" else (None, None))
+            aux = jnp.zeros((), jnp.float32)
+            for spec, p in zip(cfg1.group, blocks):
+                fn = functools.partial(
+                    lambda sp, pp, xx: M._block_apply(
+                        cfg1, sp, pp, xx, cos, sin, shardings=self.acts)[::2],
+                    spec)
+                if cfg1.remat and self.train:
+                    fn = jax.checkpoint(
+                        fn, policy=jax.checkpoint_policies.nothing_saveable)
+                x, a = fn(p, x)
+                aux = aux + a
+            return x, aux
+
+        # strip the leading group dim from stacked params
+        blocks1 = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), params)
+        bspecs1 = jax.tree.map(
+            lambda s: P(*tuple(s)[1:]), pspecs,
+            is_leaf=lambda x: isinstance(x, P))
+
+        if self.train:
+            def probe(blocks, x, pos):
+                def lf(b, xx):
+                    y, aux = apply_group(b, xx, pos)
+                    return jnp.sum(y.astype(jnp.float32) ** 2) + aux
+                return jax.grad(lf, argnums=(0, 1))(blocks, x)
+        else:
+            probe = apply_group
+        return self._compile(
+            probe, (blocks1, jax.ShapeDtypeStruct((self.B, self.T, self.cfg.d_model), jnp.bfloat16), pos),
+            (bspecs1, self.x_spec, self.tok_spec if pos.ndim == 2 else P(*(tuple(self.tok_spec) + (None,)))),
+        )
+
+    def embed_probe(self):
+        cfg1 = self.cfg1
+        Vp, D = cfg1.vocab_padded, cfg1.d_model
+        emb = jax.ShapeDtypeStruct((Vp, D), jnp.dtype(
+            jnp.bfloat16 if cfg1.param_dtype == "bfloat16" else jnp.float32))
+        espec = self.policy.spec("embed", cfg1)
+        if cfg1.frontend != "none":
+            fr = jax.ShapeDtypeStruct((self.B, self.T, cfg1.frontend_dim),
+                                      jnp.bfloat16)
+            proj = jax.ShapeDtypeStruct((cfg1.frontend_dim, D), emb.dtype)
+
+            def fwd(e, w):
+                return jnp.einsum("btf,fd->btd", e, w.astype(e.dtype))
+
+            if self.train:
+                probe = lambda e, w: jax.grad(
+                    lambda ww: jnp.sum(fwd(e, ww).astype(jnp.float32)))(w)
+            else:
+                probe = fwd
+            return self._compile(
+                probe, (fr, proj),
+                (P(*(tuple(self.tok_spec) + (None,))),
+                 self.policy.spec("frontend", cfg1)))
+        toks = jax.ShapeDtypeStruct((self.B, self.T), jnp.int32)
+
+        def fwd(e, t):
+            return e[t]
+
+        if self.train:
+            probe = lambda e, t: jax.grad(
+                lambda ee: jnp.sum(ee[t].astype(jnp.float32)))(e)
+        else:
+            probe = fwd
+        return self._compile(probe, (emb, toks), (espec, self.tok_spec))
+
+    def head_probe(self, n_tokens=None):
+        """CE head (train: fwd+bwd over one chunk x n_chunks) or last-token
+        logits (serve)."""
+        cfg1, policy = self.cfg1, self.policy
+        D = cfg1.d_model
+        head_dt = jnp.dtype(
+            jnp.bfloat16 if cfg1.param_dtype == "bfloat16" else jnp.float32)
+        if cfg1.tie_embeddings:
+            w = jax.ShapeDtypeStruct((cfg1.vocab_padded, D), head_dt)
+            wspec = policy.spec("embed", cfg1)
+            logits_fn = lambda x, w: jnp.einsum(
+                "btd,vd->btv", x, w.astype(x.dtype)).astype(jnp.float32)
+        else:
+            w = jax.ShapeDtypeStruct((D, cfg1.vocab_padded), head_dt)
+            wspec = policy.spec("head", cfg1)
+            logits_fn = lambda x, w: jnp.einsum(
+                "btd,dv->btv", x, w.astype(x.dtype)).astype(jnp.float32)
+
+        if self.train:
+            CE_CHUNKS = 8
+            Tc = self.T // CE_CHUNKS
+            x = jax.ShapeDtypeStruct((self.B, Tc, D), jnp.bfloat16)
+            lab = jax.ShapeDtypeStruct((self.B, Tc), jnp.int32)
+
+            def probe(x, w, lab):
+                def lf(x, w):
+                    lg = logits_fn(x, w)
+                    lz = jax.nn.logsumexp(lg, axis=-1)
+                    io = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 2)
+                    ll = jnp.sum(jnp.where(io == lab[..., None], lg, 0.0), -1)
+                    return jnp.sum(lz - ll)
+                return jax.grad(lf, argnums=(0, 1))(x, w)
+
+            c = self._compile(probe, (x, w, lab),
+                              (self.x_spec, wspec, self.tok_spec))
+            return _add(c, scales=[CE_CHUNKS])
+        # serve: last-token logits only
+        x = jax.ShapeDtypeStruct((self.B, 1, D), jnp.bfloat16)
+        return self._compile(lambda x, w: logits_fn(x, w), (x, w),
+                             (P(tuple(self.x_spec)[0], None, None), wspec))
+
+    def opt_probe(self):
+        from repro.train.optimizer import OptConfig, adamw_update, init_opt_state, opt_state_specs
+        cfg = self.cfg
+        opt = OptConfig(eightbit=cfg.opt_8bit)
+        params = C.params_specs_abstract(cfg)
+        pspecs = M.param_specs(cfg, self.policy)
+        ostate = jax.eval_shape(functools.partial(init_opt_state, cfg=opt),
+                                params)
+        ospecs = opt_state_specs(pspecs, params, opt)
+        gspecs = pspecs
+
+        def probe(p, g, s):
+            return adamw_update(p, g, s, jnp.asarray(1, jnp.int32), opt)[:2]
+
+        grads = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape, jnp.bfloat16 if cfg.param_dtype == "bfloat16"
+                else jnp.float32), params)
+        return self._compile(probe, (params, grads, ostate),
+                             (pspecs, gspecs, ospecs))
+
+    def decode_probe(self):
+        """Full 1-group decode step (embed + 1 group + head)."""
+        from repro.serve.serve_loop import make_decode_step
+        cfg1 = self.cfg1
+        fn = make_decode_step(cfg1, self.policy)
+        params1 = C.params_specs_abstract(cfg1)
+        cache1 = C.cache_specs_abstract(cfg1, self.shape.global_batch, self.T)
+        toks = jax.ShapeDtypeStruct((self.shape.global_batch, 1), jnp.int32)
+        cl = jax.ShapeDtypeStruct((), jnp.int32)
+        with self.policy.mesh:
+            return _cost(fn.lower(params1, cache1, toks, cl).compile())
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = C.SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze_cell(arch: str, shape_name: str, mesh, chips: int,
+                 mem_rec: dict | None = None):
+    cfg = get_config(arch)
+    pr = CellProber(arch, shape_name, mesh)
+    G = cfg.num_groups
+    if pr.shape.kind == "train":
+        total = _add(pr.group_probe(), pr.embed_probe(), pr.head_probe(),
+                     scales=[MICROBATCH * G, MICROBATCH, MICROBATCH])
+        total = _add(total, pr.opt_probe())
+    elif pr.shape.kind == "prefill":
+        total = _add(pr.group_probe(), pr.embed_probe(),
+                     scales=[G, 1])
+        if cfg.causal:
+            total = _add(total, pr.head_probe())
+    else:
+        one = pr.decode_probe()
+        head = pr.head_probe()
+        per_group = {k: max(one[k] - head[k], 0.0) for k in one}
+        total = _add(one, per_group, scales=[1, G - 1])
+
+    t_comp = total["flops"] / PEAK_FLOPS
+    t_mem = total["bytes"] / HBM_BW
+    t_coll = total["coll"] / ICI_BW
+    dominant = max((("compute", t_comp), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops(arch, shape_name)
+    rec = {
+        "arch": arch, "shape": shape_name, "chips": chips,
+        "flops_per_dev": total["flops"], "bytes_per_dev": total["bytes"],
+        "coll_bytes_per_dev": total["coll"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "step_time_s": max(t_comp, t_mem, t_coll),
+        "mfu_proxy": t_comp / max(t_comp, t_mem, t_coll),
+        "model_flops": mf,
+        "useful_ratio": mf / max(total["flops"] * chips, 1.0),
+        "tp": (pr.policy.tp_a, pr.policy.tp_b, pr.policy.sp),
+    }
+    if mem_rec:
+        rec["peak_bytes_per_dev"] = mem_rec.get("peak_bytes_per_dev")
+        rec["fits_16GB"] = (mem_rec.get("peak_bytes_per_dev", 0) < 16e9)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="dryrun_results.json")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="roofline_results.json")
+    args = ap.parse_args()
+
+    try:
+        with open(args.dryrun) as f:
+            dr = {(r["arch"], r["shape"]): r for r in json.load(f)
+                  if r.get("ok") and not r.get("skipped")
+                  and r["mesh"] == "1pod_16x16"}
+    except FileNotFoundError:
+        dr = {}
+
+    mesh = make_production_mesh(multi_pod=False)
+    out = []
+    for arch, sname, ok, why in C.all_cells():
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and sname != args.shape:
+            continue
+        if not ok:
+            continue
+        try:
+            rec = analyze_cell(arch, sname, mesh, 256,
+                               mem_rec=dr.get((arch, sname)))
+            out.append(rec)
+            print(f"{arch:18s} {sname:12s} dom={rec['dominant']:10s} "
+                  f"Tc={rec['t_compute_s']:.2e} Tm={rec['t_memory_s']:.2e} "
+                  f"Tx={rec['t_collective_s']:.2e} "
+                  f"mfu~{rec['mfu_proxy']:.2f} useful={rec['useful_ratio']:.2f}")
+        except Exception as e:
+            import traceback
+            print(f"{arch:18s} {sname:12s} FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b --smoke \
+        --steps 50 --batch 8 --seq 128 --encrypted --cipher rubato-128l
+
+Production use targets the (16,16)/(2,16,16) meshes; on this CPU container
+use --smoke (reduced config, host mesh).  Includes: checkpoint/restart
+(--ckpt-dir, auto-resume), straggler watchdog, deterministic resumable data,
+optional HHE-encrypted data plane.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.encrypted import EncryptedSource, make_decryptor
+from repro.data.pipeline import make_source
+from repro.core.cipher import make_cipher
+from repro.launch.elastic import StragglerWatchdog
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model as M
+from repro.models.sharding import make_policy
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_loop import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--encrypted", action="store_true",
+                    help="HHE-encrypted data plane")
+    ap.add_argument("--cipher", default="rubato-128l")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    policy = make_policy(mesh, cfg, batch=args.batch, train=True)
+    opt = OptConfig(lr=args.lr, eightbit=cfg.opt_8bit,
+                    total_steps=args.steps, warmup_steps=max(args.steps // 20, 5))
+
+    source = make_source(cfg, args.batch, args.seq, seed=args.seed)
+    decryptor = None
+    if args.encrypted:
+        cipher = make_cipher(args.cipher, seed=args.seed)
+        source = EncryptedSource(source, cipher)
+        decryptor = make_decryptor(cipher)
+
+    step_fn, _specs = make_train_step(
+        cfg, policy, opt, microbatch=args.microbatch, decryptor=decryptor,
+    )
+
+    params = M.init_params(cfg, jax.random.key(args.seed))
+    opt_state = init_opt_state(params, opt)
+    start_step = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), start_step, extra = ckpt.restore(
+            args.ckpt_dir, (params, opt_state)
+        )
+        print(f"resumed from step {start_step}")
+
+    watchdog = StragglerWatchdog()
+    t_log = time.time()
+    for step in range(start_step, args.steps):
+        batch = source.batch_at(step)
+        batch = jax.tree.map(jnp.asarray, batch)
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(
+            params, opt_state, batch, jnp.asarray(step, jnp.int32)
+        )
+        jax.block_until_ready(metrics["loss"])
+        dt = time.time() - t0
+        if watchdog.observe(step, dt):
+            print(f"[watchdog] straggler event at step {step}: {dt:.2f}s")
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  {dt*1e3:.0f} ms  "
+                  f"({time.time()-t_log:.1f}s total)")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1, (params, opt_state),
+                      extra={"data_step": step + 1}, async_write=True)
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, (params, opt_state),
+                  extra={"data_step": args.steps})
+    print("done")
+    return params
+
+
+if __name__ == "__main__":
+    main()

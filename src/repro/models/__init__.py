@@ -1,0 +1,4 @@
+"""Pure-JAX LM substrate: dense / MoE / SSM / hybrid transformer stacks with
+scan-over-layers, GQA attention (RoPE / M-RoPE / softcap / sliding window),
+capacity-based MoE, Mamba2 SSD — plus the sharding policy that maps every
+architecture onto the production mesh."""

@@ -1,0 +1,200 @@
+"""GQA attention: RoPE / M-RoPE, logit softcap, sliding window, blockwise
+causal-efficient computation, and single-token decode against a KV cache.
+
+Blockwise attention uses *static* chunk pairs: q chunks are a Python loop,
+and for each q chunk only the causally (and window-) reachable KV chunks are
+touched — so compiled FLOPs match true causal cost (no masked-out half), and
+peak memory is one (q_chunk × k_chunk) score block.  Online softmax combines
+blocks in f32.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_angles(cfg: ModelConfig, positions):
+    """positions: (B, T) int32 (std) or (B, T, 3) (mrope).
+    Returns (cos, sin) of shape (B, T, hd/2) f32."""
+    hd = cfg.resolved_head_dim
+    half = hd // 2
+    inv_freq = 1.0 / (
+        cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    if cfg.rope_kind == "mrope":
+        if positions.ndim == 2:
+            positions = positions[..., None] * jnp.ones(
+                (3,), dtype=positions.dtype
+            )
+        secs = cfg.mrope_sections
+        assert sum(secs) == half, (secs, half)
+        sec_id = jnp.concatenate(
+            [jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(secs)]
+        )                                            # (half,)
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sec_id, positions.shape[:-1] + (half,)),
+            axis=-1,
+        )                                            # (B, T, half)
+        ang = pos * inv_freq
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, T, ..., hd); cos/sin: (B, T, hd/2) — rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    shape = cos.shape[:2] + (1,) * (x.ndim - 3) + (half,)
+    c = cos.reshape(shape)
+    s = sin.reshape(shape)
+    xf = x.astype(jnp.float32)
+    x1f, x2f = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (training / prefill)
+# ---------------------------------------------------------------------------
+def _soft_cap(scores, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(scores / cap) * cap
+    return scores
+
+
+def _auto_q_chunk(n: int) -> int:
+    c = max(512, n // 8)
+    return min(c, 2048, n)
+
+
+def _auto_k_chunk(n: int) -> int:
+    return min(1024, n)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
+                        softcap: float = 0.0, q_chunk: int = 0,
+                        k_chunk: int = 0, unroll: bool = False):
+    """q: (B, T, K, G, hd); k, v: (B, S, K, hd).  Returns (B, T, K, G, hd).
+
+    Flash-style: a static Python loop over q chunks, and per q chunk a
+    `lax.scan` over exactly the causally (and window-) reachable KV chunks
+    with a `jax.checkpoint`-ed body, so
+
+      * compiled FLOPs match true causal/window cost (future chunks are
+        statically absent, the KV scan length is a Python int per q chunk),
+      * peak memory is ONE (q_chunk × k_chunk) score block — the backward
+        recomputes score blocks instead of saving them (flash backward),
+      * HLO size is O(num_q_chunks), compile-friendly at 500k context.
+    """
+    B, T, K, G, hd = q.shape
+    S = k.shape[1]
+    q_chunk = min(q_chunk or _auto_q_chunk(T), T)
+    k_chunk = min(k_chunk or _auto_k_chunk(S), S)
+    nq = math.ceil(T / q_chunk)
+    assert T % q_chunk == 0 and S % k_chunk == 0, (T, S, q_chunk, k_chunk)
+    scale = 1.0 / math.sqrt(hd)
+    nk_total = S // k_chunk
+
+    def block_update(qi, q_lo, kj, vj, k_lo, carry):
+        """One online-softmax update; k_lo may be traced (scan) or static."""
+        acc, m, l = carry
+        s = jnp.einsum(
+            "btkgd,bskd->btkgs", qi, kj, preferred_element_type=jnp.float32,
+        ) * scale
+        s = _soft_cap(s, softcap)
+        if causal or window:
+            qpos = q_lo + jnp.arange(q_chunk)[:, None]
+            kpos = k_lo + jnp.arange(k_chunk)[None, :]
+            ok = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                ok &= kpos <= qpos
+            if window:
+                ok &= kpos >= qpos - window
+            s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "btkgs,bskd->btkgd", p.astype(v.dtype), vj,
+            preferred_element_type=jnp.float32,
+        )
+        l = l * alpha + p.sum(axis=-1)
+        return acc, m_new, l
+
+    out_chunks = []
+    for i in range(nq):
+        q_lo = i * q_chunk
+        qi = q[:, q_lo : q_lo + q_chunk]
+        # statically reachable KV chunk range for this q chunk
+        last = min((q_lo + q_chunk - 1) // k_chunk, nk_total - 1) \
+            if causal else nk_total - 1
+        first = max(0, (q_lo - window) // k_chunk) if window else 0
+        n_blocks = last - first + 1
+        carry = (
+            jnp.zeros((B, q_chunk, K, G, hd), jnp.float32),
+            jnp.full((B, q_chunk, K, G), NEG_INF, jnp.float32),
+            jnp.zeros((B, q_chunk, K, G), jnp.float32),
+        )
+        if n_blocks <= 2 or unroll:
+            for j in range(first, last + 1):
+                kj = k[:, j * k_chunk : (j + 1) * k_chunk]
+                vj = v[:, j * k_chunk : (j + 1) * k_chunk]
+                carry = block_update(qi, q_lo, kj, vj, j * k_chunk, carry)
+        else:
+            ks = k[:, first * k_chunk : (last + 1) * k_chunk].reshape(
+                B, n_blocks, k_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+            vs = v[:, first * k_chunk : (last + 1) * k_chunk].reshape(
+                B, n_blocks, k_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+            offs = (first + jnp.arange(n_blocks)) * k_chunk
+
+            @jax.checkpoint
+            def body(carry, xs):
+                kj, vj, k_lo = xs
+                return block_update(qi, q_lo, kj, vj, k_lo, carry), None
+
+            carry, _ = jax.lax.scan(body, carry, (ks, vs, offs))
+        acc, m, l = carry
+        out_chunks.append(
+            (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype))
+    return jnp.concatenate(out_chunks, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token vs. cache)
+# ---------------------------------------------------------------------------
+def decode_attention(q, k_cache, v_cache, cur_len, *, window: int = 0,
+                     softcap: float = 0.0):
+    """q: (B, 1, K, G, hd); caches: (B, S, K, hd); cur_len: scalar int32 —
+    number of valid cache positions (including the token just written)."""
+    B, _, K, G, hd = q.shape
+    S = k_cache.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum(
+        "bukgd,bskd->bkgs", q, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    s = _soft_cap(s, softcap)
+    kpos = jnp.arange(S)
+    ok = kpos < cur_len
+    if window:
+        ok &= kpos >= cur_len - 1 - window
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out[:, None].astype(q.dtype)

@@ -1,0 +1,71 @@
+"""Common layers: RMSNorm, gated MLP, embeddings, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def pdtype_of(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def rms_norm(x, scale, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def gated_mlp(x, wi_g, wi_u, wo, unroll: bool = False):
+    """SwiGLU MLP.  x: (..., D); wi_*: (D, F); wo: (F, D).
+
+    For very large weights (jamba: 8192x24576) the FFN is computed in
+    F-chunks under a scanned, checkpointed body: bounds the residency of
+    FSDP-gathered weights and of their pre-reduce-scatter cotangents.
+    """
+    D, F = wi_g.shape
+    n_tokens = 1
+    for s in x.shape[:-1]:
+        n_tokens *= s
+    # chunking bounds FSDP-gather liveness during training; at decode
+    # (few tokens) it only adds weight-relayout permutes (§Perf iter B2)
+    if D * F <= (1 << 27) or n_tokens <= 1024:
+        h = jax.nn.silu(jnp.einsum("...d,df->...f", x, wi_g)) * jnp.einsum(
+            "...d,df->...f", x, wi_u
+        )
+        return jnp.einsum("...f,fd->...d", h, wo)
+
+    n_chunks = 4
+    while F % n_chunks:
+        n_chunks //= 2
+
+    @jax.checkpoint
+    def chunk(acc, ws):
+        g, u, o = ws
+        h = jax.nn.silu(jnp.einsum("...d,df->...f", x, g)) * jnp.einsum(
+            "...d,df->...f", x, u
+        )
+        return acc + jnp.einsum("...f,fd->...d", h, o).astype(acc.dtype), None
+
+    split = lambda w, ax: jnp.stack(jnp.split(w, n_chunks, axis=ax))
+    acc0 = jnp.zeros(x.shape, jnp.float32)
+    xs = (split(wi_g, 1), split(wi_u, 1), split(wo, 0))
+    if unroll:
+        acc = acc0
+        for i in range(n_chunks):
+            acc, _ = chunk(acc, jax.tree.map(lambda a: a[i], xs))
+    else:
+        acc, _ = jax.lax.scan(chunk, acc0, xs)
+    return acc.astype(x.dtype)
+
+
+def normal_init(key, shape, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,135 @@
+"""Mamba2 SSD (state-space duality) block: chunked parallel scan for
+training/prefill, O(1) recurrent update for decode.
+
+Math follows the SSD formulation: within a chunk (length L) the output is an
+attention-like quadratic form masked by the cumulative decay; across chunks
+a small recurrent state (B, heads, head_dim, state) is carried by a scan.
+All decay/softplus math runs in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def causal_conv(u, w):
+    """Depthwise causal conv.  u: (B, T, C); w: (W, C).  Returns (B, T, C).
+
+    Uses the conv primitive with feature_group_count=C — a pad-and-add
+    formulation materializes W shifted copies of u (4x the byte traffic,
+    EXPERIMENTS.md §Perf iter A4)."""
+    W, C = w.shape
+    out = jax.lax.conv_general_dilated(
+        u.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],      # (W, 1, C): depthwise
+        window_strides=(1,),
+        padding=[(W - 1, 0)],                   # causal left pad
+        dimension_numbers=("NTC", "TIO", "NTC"),
+        feature_group_count=C,
+    )
+    return out.astype(u.dtype)
+
+
+def conv_decode(u_t, conv_state, w):
+    """One-step conv.  u_t: (B, C); conv_state: (B, W-1, C) past inputs.
+    Returns (y_t, new_state)."""
+    W = w.shape[0]
+    window = jnp.concatenate([conv_state, u_t[:, None]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window, w)
+    return y, window[:, 1:]
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None, unroll: bool = False):
+    """SSD forward.
+
+    x:  (B, T, H, P) value heads (f32 or bf16)
+    dt: (B, T, H)    discretization steps (post-softplus, f32)
+    A:  (H,)         negative decay rates (f32)
+    Bm: (B, T, S)    input projections (shared across heads, ngroups=1)
+    Cm: (B, T, S)    output projections
+    h0: (B, H, P, S) initial state or None
+    Returns (y: (B, T, H, P), h_final: (B, H, P, S)).
+    """
+    Bsz, T, H, P = x.shape
+    S = Bm.shape[-1]
+    L = min(chunk, T)
+    assert T % L == 0, (T, L)
+    NC = T // L
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = dtf * A  # (B, T, H), negative
+
+    def ch(a):
+        return a.reshape((Bsz, NC, L) + a.shape[2:])
+
+    x_c, dt_c, dA_c = ch(xf), ch(dtf), ch(dA)
+    B_c, C_c = ch(Bm.astype(jnp.float32)), ch(Cm.astype(jnp.float32))
+
+    A_cs = jnp.cumsum(dA_c, axis=2)                     # (B,NC,L,H)
+    A_end = A_cs[:, :, -1]                              # (B,NC,H)
+
+    # ---- intra-chunk (quadratic, attention-like) ----
+    # decay[b,c,h,l,m] = exp(A_cs[l] - A_cs[m]) for l >= m
+    # The (B,NC,L,L,H) tensors dominate the memory roofline term for SSM
+    # archs (EXPERIMENTS.md §Perf iter A3): the score product is formed in
+    # bf16 (decays are in [0,1], the product is numerically tame) and only
+    # the einsum accumulates in f32.
+    diff = A_cs[:, :, :, None, :] - A_cs[:, :, None, :, :]   # (B,NC,L,L,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcls,bcms->bclm", C_c, B_c)             # (B,NC,L,L)
+    scores = cb[..., None] * decay * dt_c[:, :, None, :, :]  # (B,NC,L,L,H)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", scores, x_c)
+
+    # ---- chunk states ----
+    w_state = jnp.exp(A_end[:, :, None, :] - A_cs) * dt_c    # (B,NC,L,H)
+    states = jnp.einsum("bclh,bcls,bclhp->bchps", w_state, B_c, x_c)
+
+    # ---- inter-chunk recurrence ----
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, S), jnp.float32)
+
+    def step(h, inputs):
+        C_k, A_cs_k, A_end_k, S_k = inputs
+        y_in = jnp.einsum("bls,bhps->blhp", C_k, h)          # (B,L,H,P)
+        y_in = y_in * jnp.exp(A_cs_k)[..., None]             # decay to pos l
+        h_next = h * jnp.exp(A_end_k)[:, :, None, None] + S_k
+        return h_next, y_in
+
+    xs = (
+        C_c.transpose(1, 0, 2, 3),
+        A_cs.transpose(1, 0, 2, 3),
+        A_end.transpose(1, 0, 2),
+        states.transpose(1, 0, 2, 3, 4),
+    )
+    if unroll:
+        h = h0
+        ys = []
+        for c in range(NC):
+            h, y_c = step(h, jax.tree.map(lambda a: a[c], xs))
+            ys.append(y_c)
+        h_final, y_inter = h, jnp.stack(ys, 0)
+    else:
+        h_final, y_inter = jax.lax.scan(step, h0, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4).reshape(Bsz, T, H, P)
+
+    y = (y_intra.reshape(Bsz, T, H, P) + y_inter).astype(x.dtype)
+    return y, h_final
+
+
+def ssd_decode(x_t, dt_t, A, B_t, C_t, h):
+    """One-token recurrent update.
+
+    x_t: (B, H, P); dt_t: (B, H); B_t/C_t: (B, S); h: (B, H, P, S).
+    Returns (y_t: (B, H, P), h_next)."""
+    xf = x_t.astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    decay = jnp.exp(dtf * A)                                  # (B, H)
+    inc = jnp.einsum("bh,bs,bhp->bhps", dtf, B_t.astype(jnp.float32), xf)
+    h_next = h * decay[:, :, None, None] + inc
+    y = jnp.einsum("bs,bhps->bhp", C_t.astype(jnp.float32), h_next)
+    return y.astype(x_t.dtype), h_next

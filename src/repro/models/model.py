@@ -1,0 +1,610 @@
+"""Model assembly: parameter templates, init, sharding specs, and the three
+entry points every architecture exposes:
+
+    forward_train(cfg, params, batch)            -> (logits, aux_loss)
+    prefill(cfg, params, batch, max_len)         -> (last_logits, cache)
+    decode_step(cfg, params, cache, tok, cur_len)-> (logits, cache)
+
+Layer heterogeneity is a repeating group of LayerSpecs; parameters for each
+slot are stacked over `num_groups` and the stack is consumed by lax.scan
+(HLO size O(1) in depth — essential for fast compiles at 512 devices).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention as A
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models.layers import dtype_of, gated_mlp, normal_init, pdtype_of, rms_norm
+from repro.models.sharding import ShardingPolicy
+
+PyTree = Any
+
+
+# ===========================================================================
+# Parameter templates: single source of truth for shapes / roles / init
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    role: str                  # key into ShardingPolicy.spec
+    scale: float = 0.02
+    dtype: Optional[str] = None  # override (e.g. f32 for norms/router)
+    init: str = "normal"       # "normal" | "zeros" | "ssm_dt" | "ssm_alog"
+
+
+def _attn_slot_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    G = cfg.num_groups
+    D, H, K = cfg.d_model, cfg.num_heads, cfg.kv_heads
+    hd = cfg.resolved_head_dim
+    out_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+    d = {
+        "norm": ParamDef((G, D), "norm", dtype="float32", init="zeros"),
+        "wq": ParamDef((G, D, H, hd), "wq"),
+        "wk": ParamDef((G, D, K, hd), "wkv"),
+        "wv": ParamDef((G, D, K, hd), "wkv"),
+        "wo": ParamDef((G, H, hd, D), "wo", scale=out_scale),
+    }
+    if cfg.sandwich_norm:
+        d["post_norm"] = ParamDef((G, D), "norm", dtype="float32", init="zeros")
+    return d
+
+
+def _mamba_slot_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    G = cfg.num_groups
+    D, di, st, h, w = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                       cfg.ssm_heads, cfg.conv_width)
+    out_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+    d = {
+        "norm": ParamDef((G, D), "norm", dtype="float32", init="zeros"),
+        "w_x": ParamDef((G, D, di), "ssm_in"),
+        "w_z": ParamDef((G, D, di), "ssm_in"),
+        "w_B": ParamDef((G, D, st), "ssm_in_state"),
+        "w_C": ParamDef((G, D, st), "ssm_in_state"),
+        "w_dt": ParamDef((G, D, h), "ssm_dt"),
+        "conv_x": ParamDef((G, w, di), "ssm_conv", scale=0.1),
+        "conv_B": ParamDef((G, w, st), "ssm_conv", scale=0.1),
+        "conv_C": ParamDef((G, w, st), "ssm_conv", scale=0.1),
+        "dt_bias": ParamDef((G, h), "ssm_vec", dtype="float32", init="ssm_dt"),
+        "A_log": ParamDef((G, h), "ssm_vec", dtype="float32", init="ssm_alog"),
+        "D_skip": ParamDef((G, h), "ssm_vec", dtype="float32", init="zeros"),
+        "gate_norm": ParamDef((G, di), "ssm_vec", dtype="float32", init="zeros"),
+        "w_out": ParamDef((G, di, D), "ssm_out", scale=out_scale),
+    }
+    if cfg.sandwich_norm:
+        d["post_norm"] = ParamDef((G, D), "norm", dtype="float32", init="zeros")
+    return d
+
+
+def _ffn_slot_defs(cfg: ModelConfig, moe: bool) -> Dict[str, ParamDef]:
+    G, D, F = cfg.num_groups, cfg.d_model, cfg.d_ff
+    out_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+    d: Dict[str, ParamDef] = {
+        "norm2": ParamDef((G, D), "norm", dtype="float32", init="zeros"),
+    }
+    if cfg.sandwich_norm:
+        d["post_norm2"] = ParamDef((G, D), "norm", dtype="float32", init="zeros")
+    if moe:
+        E = cfg.num_experts
+        d.update({
+            "router": ParamDef((G, D, E), "router", dtype="float32"),
+            "e_wi_g": ParamDef((G, E, D, F), "expert_wi"),
+            "e_wi_u": ParamDef((G, E, D, F), "expert_wi"),
+            "e_wo": ParamDef((G, E, F, D), "expert_wo", scale=out_scale),
+        })
+        if cfg.dense_residual:
+            d.update({
+                "wi_g": ParamDef((G, D, F), "wi"),
+                "wi_u": ParamDef((G, D, F), "wi"),
+                "wo_m": ParamDef((G, F, D), "wo_mlp", scale=out_scale),
+            })
+    else:
+        if cfg.mlp_gated:
+            d.update({
+                "wi_g": ParamDef((G, D, F), "wi"),
+                "wi_u": ParamDef((G, D, F), "wi"),
+                "wo_m": ParamDef((G, F, D), "wo_mlp", scale=out_scale),
+            })
+        else:
+            d.update({
+                "wi_u": ParamDef((G, D, F), "wi"),
+                "wo_m": ParamDef((G, F, D), "wo_mlp", scale=out_scale),
+            })
+    return d
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    """Nested dict of ParamDef mirroring the params pytree."""
+    defs: Dict[str, Any] = {}
+    D, Vp = cfg.d_model, cfg.vocab_padded
+    if cfg.frontend == "none":
+        defs["embed"] = ParamDef((Vp, D), "embed")
+    else:
+        defs["embed"] = ParamDef((Vp, D), "embed")      # text side still exists
+        defs["frontend_proj"] = ParamDef((cfg.frontend_dim, D), "frontend")
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((D, Vp), "head")
+    defs["final_norm"] = ParamDef((D,), "norm", dtype="float32", init="zeros")
+
+    blocks = []
+    for spec in cfg.group:
+        slot: Dict[str, ParamDef] = {}
+        if spec.kind == "attn":
+            slot.update(_attn_slot_defs(cfg))
+        else:
+            slot.update(_mamba_slot_defs(cfg))
+        if cfg.d_ff > 0:
+            slot.update(_ffn_slot_defs(cfg, spec.moe))
+        blocks.append(slot)
+    defs["blocks"] = blocks
+    return defs
+
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    defs = param_defs(cfg)
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(key, len(leaves))
+    pdt = pdtype_of(cfg)
+
+    def mk(d: ParamDef, k):
+        dt = jnp.dtype(d.dtype) if d.dtype else pdt
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ssm_dt":
+            # dt_bias ~ softplus^-1(uniform(1e-3, 1e-1))
+            u = jax.random.uniform(k, d.shape, jnp.float32,
+                                   math.log(1e-3), math.log(1e-1))
+            dtv = jnp.exp(u)
+            return (dtv + jnp.log(-jnp.expm1(-dtv))).astype(dt)
+        if d.init == "ssm_alog":
+            a = jax.random.uniform(k, d.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(a).astype(dt)
+        return normal_init(k, d.shape, dt, d.scale)
+
+    return jax.tree.unflatten(treedef, [mk(d, k) for d, k in zip(leaves, keys)])
+
+
+def param_specs(cfg: ModelConfig, policy: ShardingPolicy) -> PyTree:
+    defs = param_defs(cfg)
+
+    def to_spec(d: ParamDef):
+        base = policy.spec(d.role, cfg)
+        # block-stacked params have a leading group dim: prepend None
+        if d.role not in ("embed", "head", "frontend", "norm", "scalar") and \
+                len(d.shape) > len(base):
+            from jax.sharding import PartitionSpec as P
+            return P(*((None,) + tuple(base)))
+        return base
+
+    return jax.tree.map(
+        to_spec, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+
+
+# ===========================================================================
+# Forward pass
+# ===========================================================================
+def _embed_inputs(cfg: ModelConfig, params, batch):
+    dt = dtype_of(cfg)
+    if cfg.frontend != "none" and "embeds" in batch:
+        x = jnp.einsum(
+            "btf,fd->btd", batch["embeds"].astype(dt),
+            params["frontend_proj"].astype(dt),
+        )
+    else:
+        x = params["embed"].astype(dt)[batch["tokens"]]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    return x
+
+
+def _positions(cfg: ModelConfig, batch, T: int):
+    if "positions" in batch:
+        return batch["positions"]
+    B = (batch.get("tokens") if "tokens" in batch else batch["embeds"]).shape[0]
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    return pos
+
+
+def _attn_apply(cfg: ModelConfig, spec: LayerSpec, p, x, cos, sin,
+                cache_kv=None, cur_len=None, shardings=None):
+    """Returns (attn_out, new_kv) — new_kv is (k, v) for cache building."""
+    dt = dtype_of(cfg)
+    B, T, D = x.shape
+    H, K = cfg.num_heads, cfg.kv_heads
+    hd = cfg.resolved_head_dim
+    G = H // K
+    q = jnp.einsum("btd,dnh->btnh", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dkh->btkh", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dkh->btkh", x, p["wv"].astype(dt))
+    if cfg.rope_kind != "none":
+        q = A.apply_rope(q, cos, sin)
+        k = A.apply_rope(k, cos, sin)
+    q = q.reshape(B, T, K, G, hd)
+    # pin head sharding: without this GSPMD may replicate the score tensors
+    q = _wsc(q, shardings, "q")
+    k = _wsc(k, shardings, "kv")
+    v = _wsc(v, shardings, "kv")
+
+    if cache_kv is None:
+        o = A.blockwise_attention(
+            q, k, v, causal=cfg.causal, window=spec.window,
+            softcap=cfg.attn_softcap, unroll=cfg.probe_unroll,
+        )
+        new_kv = (k, v)
+    else:
+        k_cache, v_cache = cache_kv
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cur_len - 1, axis=1
+        ) if T == 1 else k_cache
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cur_len - 1, axis=1
+        ) if T == 1 else v_cache
+        o = A.decode_attention(
+            q, k_cache, v_cache, cur_len, window=spec.window,
+            softcap=cfg.attn_softcap,
+        )
+        new_kv = (k_cache, v_cache)
+    o = o.reshape(B, T, H, hd)
+    out = jnp.einsum("btnh,nhd->btd", o, p["wo"].astype(dt))
+    return out, new_kv
+
+
+def _mamba_apply(cfg: ModelConfig, p, x, cache=None, cur_len=None,
+                 shardings=None):
+    """Mamba2 block.  Returns (out, new_cache)."""
+    dt_ = dtype_of(cfg)
+    B, T, D = x.shape
+    h, hd, st = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xz = _wsc(jnp.einsum("btd,de->bte", x, p["w_x"].astype(dt_)),
+              shardings, "ssm_inner")
+    z = _wsc(jnp.einsum("btd,de->bte", x, p["w_z"].astype(dt_)),
+             shardings, "ssm_inner")
+    Bm = jnp.einsum("btd,ds->bts", x, p["w_B"].astype(dt_))
+    Cm = jnp.einsum("btd,ds->bts", x, p["w_C"].astype(dt_))
+    dt_raw = jnp.einsum("btd,dh->bth", x, p["w_dt"].astype(dt_))
+    dtv = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    Aneg = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    w = cfg.conv_width
+    if cache is None:
+        # NOTE: conv tail must be taken from the *pre-activation* conv inputs
+        xz_tail = xz[:, T - (w - 1):]
+        B_tail = Bm[:, T - (w - 1):]
+        C_tail = Cm[:, T - (w - 1):]
+        xc = jax.nn.silu(M2.causal_conv(xz, p["conv_x"].astype(dt_)))
+        Bc = jax.nn.silu(M2.causal_conv(Bm, p["conv_B"].astype(dt_)))
+        Cc = jax.nn.silu(M2.causal_conv(Cm, p["conv_C"].astype(dt_)))
+        xh = xc.reshape(B, T, h, hd)
+        y, h_state = M2.ssd_chunked(xh, dtv, Aneg, Bc, Cc, cfg.ssm_chunk,
+                                    unroll=cfg.probe_unroll)
+        new_cache = {
+            "h": h_state,
+            "conv_x": xz_tail, "conv_B": B_tail, "conv_C": C_tail,
+        }
+    else:
+        # single-token decode
+        xt, cs_x = M2.conv_decode(xz[:, 0], cache["conv_x"], p["conv_x"].astype(dt_))
+        Bt, cs_B = M2.conv_decode(Bm[:, 0], cache["conv_B"], p["conv_B"].astype(dt_))
+        Ct, cs_C = M2.conv_decode(Cm[:, 0], cache["conv_C"], p["conv_C"].astype(dt_))
+        xt, Bt, Ct = jax.nn.silu(xt), jax.nn.silu(Bt), jax.nn.silu(Ct)
+        xh = xt.reshape(B, 1, h, hd)
+        y1, h_next = M2.ssd_decode(
+            xh[:, 0], dtv[:, 0], Aneg, Bt, Ct,
+            cache["h"].astype(jnp.float32),
+        )
+        y = y1[:, None]
+        new_cache = {"h": h_next, "conv_x": cs_x, "conv_B": cs_B, "conv_C": cs_C}
+
+    # D skip-connection (per head, broadcast over head_dim)
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, T, h * hd)
+    gated = y * jax.nn.silu(z)
+    gated = rms_norm(gated, p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", gated.astype(dt_), p["w_out"].astype(dt_))
+    return out, new_cache
+
+
+def _ffn_apply(cfg: ModelConfig, spec: LayerSpec, p, x, shardings=None):
+    """Dense or MoE FFN.  Returns (out, aux_loss)."""
+    dt = dtype_of(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.moe:
+        policy = shardings.get("_policy") if shardings else None
+        if policy is not None:
+            y, aux = MOE.moe_ffn_sharded(
+                cfg, x, p["router"], p["e_wi_g"].astype(dt),
+                p["e_wi_u"].astype(dt), p["e_wo"].astype(dt), policy,
+            )
+        else:
+            y, aux = MOE.moe_ffn(
+                cfg, x, p["router"], p["e_wi_g"].astype(dt),
+                p["e_wi_u"].astype(dt), p["e_wo"].astype(dt),
+            )
+        if cfg.dense_residual:
+            y = y + gated_mlp(x, p["wi_g"].astype(dt), p["wi_u"].astype(dt),
+                              p["wo_m"].astype(dt), unroll=cfg.probe_unroll)
+    elif cfg.mlp_gated:
+        y = gated_mlp(x, p["wi_g"].astype(dt), p["wi_u"].astype(dt),
+                      p["wo_m"].astype(dt), unroll=cfg.probe_unroll)
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["wi_u"].astype(dt)))
+        y = jnp.einsum("...f,fd->...d", h, p["wo_m"].astype(dt))
+    return y, aux
+
+
+def _block_apply(cfg: ModelConfig, spec: LayerSpec, p, x, cos, sin,
+                 cache=None, cur_len=None, shardings=None):
+    """One layer: (attn|mamba) + optional FFN, pre-norm residual.
+    Returns (x, new_cache, aux)."""
+    h_in = rms_norm(x, p["norm"], cfg.norm_eps)
+    if spec.kind == "attn":
+        mix, new_cache = _attn_apply(
+            cfg, spec, p, h_in, cos, sin,
+            cache_kv=None if cache is None else (cache["k"], cache["v"]),
+            cur_len=cur_len, shardings=shardings,
+        )
+        if cache is not None:
+            new_cache = {"k": new_cache[0], "v": new_cache[1]}
+    else:
+        mix, new_cache = _mamba_apply(
+            cfg, p, h_in, cache=cache, cur_len=cur_len, shardings=shardings
+        )
+    if cfg.sandwich_norm:
+        mix = rms_norm(mix, p["post_norm"], cfg.norm_eps)
+    x = x + mix
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff > 0:
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        y, aux = _ffn_apply(cfg, spec, p, h2, shardings=shardings)
+        if cfg.sandwich_norm:
+            y = rms_norm(y, p["post_norm2"], cfg.norm_eps)
+        x = x + y
+    return x, new_cache, aux
+
+
+def _wsc(x, shardings, name):
+    """with_sharding_constraint if a spec was provided for ``name``."""
+    if shardings is not None and shardings.get(name) is not None:
+        return jax.lax.with_sharding_constraint(x, shardings[name])
+    return x
+
+
+def _logits(cfg: ModelConfig, params, x, shardings=None):
+    dt = dtype_of(cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(dt))
+    else:
+        logits = jnp.einsum("btd,dv->btv", x, params["head"].astype(dt))
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return _wsc(logits, shardings, "logits")
+
+
+def forward_hidden(cfg: ModelConfig, params, batch, shardings=None):
+    """Run the layer stack.  Returns (hidden (B,T,D), aux_loss)."""
+    x = _embed_inputs(cfg, params, batch)
+    B, T, _ = x.shape
+    pos = _positions(cfg, batch, T)
+    cos, sin = (A.rope_angles(cfg, pos) if cfg.rope_kind != "none"
+                else (None, None))
+
+    blocks = tuple(params["blocks"])
+    x = _wsc(x, shardings, "acts")
+
+    def layer_fn(spec, p, x):
+        x, _, a = _block_apply(cfg, spec, p, x, cos, sin,
+                               shardings=shardings)
+        # layer-boundary activations are the only backward residuals; keep
+        # them sharded over both dp and the model axes (DESIGN.md §6)
+        return _wsc(x, shardings, "acts"), a
+
+    def group_body(carry, gp):
+        x, aux = carry
+        for i, (spec, p) in enumerate(zip(cfg.group, gp)):
+            fn = functools.partial(layer_fn, spec)
+            if cfg.remat:
+                # PER-LAYER remat: the group backward recomputes one layer
+                # at a time, so peak residency is a single layer's
+                # intermediates even for jamba's 8-layer groups
+                fn = jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.nothing_saveable
+                )
+            x, a = fn(p, x)
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(
+        group_body, (x, jnp.zeros((), jnp.float32)), blocks
+    )
+    return x, aux / cfg.num_layers
+
+
+def forward_train(cfg: ModelConfig, params, batch, shardings=None):
+    """Full-sequence forward.  Returns (logits (B,T,Vp) f32, aux_loss)."""
+    x, aux = forward_hidden(cfg, params, batch, shardings)
+    return _logits(cfg, params, x, shardings), aux
+
+
+def _ce_terms(cfg: ModelConfig, params, x, labels, shardings):
+    """(nll_sum, valid_count) for one chunk — full logits never escape."""
+    logits = _logits(cfg, params, x, shardings)
+    valid = (labels >= 0) & (labels < cfg.vocab)
+    labels_c = jnp.clip(labels, 0, cfg.vocab_padded - 1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot contraction instead of take_along_axis: keeps the gather local
+    # when the vocab dim is sharded (take_along would all-gather the logits)
+    viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(
+        jnp.where(viota == labels_c[..., None], logits, 0.0), axis=-1
+    )
+    nll = (logz - ll) * valid
+    return nll.sum(), valid.sum()
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, aux_weight: float = 0.01,
+            shardings=None, ce_chunks: int = 8):
+    """CE loss with T-chunked head+softmax: the (B, T_chunk, V) logits block
+    is materialized (and rematerialized in backward) one chunk at a time —
+    the full (B, T, V) tensor never exists."""
+    x, aux = forward_hidden(cfg, params, batch, shardings)
+    labels = batch["labels"]
+    B, T, D = x.shape
+    while T % ce_chunks:
+        ce_chunks //= 2
+    if ce_chunks <= 1:
+        ns, nv = _ce_terms(cfg, params, x, labels, shardings)
+    elif cfg.probe_unroll:
+        C = T // ce_chunks
+        ns = jnp.zeros((), jnp.float32)
+        nv = jnp.zeros((), jnp.int32)
+        for i in range(ce_chunks):
+            s_, v_ = _ce_terms(cfg, params, x[:, i * C:(i + 1) * C],
+                               labels[:, i * C:(i + 1) * C], shardings)
+            ns, nv = ns + s_, nv + v_
+    else:
+        C = T // ce_chunks
+        xc = x.reshape(B, ce_chunks, C, D).transpose(1, 0, 2, 3)
+        lc = labels.reshape(B, ce_chunks, C).transpose(1, 0, 2)
+
+        def chunk_body(carry, xs):
+            xi, li = xs
+            s, v = jax.checkpoint(
+                lambda a, b: _ce_terms(cfg, params, a, b, shardings)
+            )(xi, li)
+            return (carry[0] + s, carry[1] + v), None
+
+        (ns, nv), _ = jax.lax.scan(
+            chunk_body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+            (xc, lc),
+        )
+    loss = ns / jnp.maximum(nv, 1)
+    return loss + aux_weight * aux, (loss, aux)
+
+
+# ===========================================================================
+# Serving: cache init / prefill / decode
+# ===========================================================================
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    """Cache pytree: per slot, stacked over groups (leading G dim)."""
+    dt = dtype_of(cfg)
+    G = cfg.num_groups
+    K, hd = cfg.kv_heads, cfg.resolved_head_dim
+    slots = []
+    for spec in cfg.group:
+        if spec.kind == "attn":
+            slots.append({
+                "k": jnp.zeros((G, batch, max_len, K, hd), dt),
+                "v": jnp.zeros((G, batch, max_len, K, hd), dt),
+            })
+        else:
+            slots.append({
+                "h": jnp.zeros(
+                    (G, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32,
+                ),
+                "conv_x": jnp.zeros((G, batch, cfg.conv_width - 1, cfg.d_inner), dt),
+                "conv_B": jnp.zeros((G, batch, cfg.conv_width - 1, cfg.ssm_state), dt),
+                "conv_C": jnp.zeros((G, batch, cfg.conv_width - 1, cfg.ssm_state), dt),
+            })
+    return tuple(slots)
+
+
+def cache_specs(cfg: ModelConfig, policy: ShardingPolicy) -> PyTree:
+    from jax.sharding import PartitionSpec as P
+    slots = []
+    for spec in cfg.group:
+        if spec.kind == "attn":
+            c = policy.cache_spec()
+            s = P(*((None,) + tuple(c)))
+            slots.append({"k": s, "v": s})
+        else:
+            h = policy.ssm_cache_spec()
+            hs = P(*((None,) + tuple(h)))
+            conv = P(None, policy.dp if not policy.seq_shard_data else None,
+                     None, policy.tp_full)
+            slots.append({
+                "h": hs, "conv_x": conv,
+                "conv_B": P(None, conv[1], None, None),
+                "conv_C": P(None, conv[1], None, None),
+            })
+    return tuple(slots)
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int, shardings=None):
+    """Forward over a prompt, building the cache.  Returns (last_logits,
+    cache, cur_len)."""
+    x = _embed_inputs(cfg, params, batch)
+    B, T, _ = x.shape
+    pos = _positions(cfg, batch, T)
+    cos, sin = (A.rope_angles(cfg, pos) if cfg.rope_kind != "none"
+                else (None, None))
+    x = _wsc(x, shardings, "acts")
+
+    def group_body(x, gp):
+        caches = []
+        for spec, p in zip(cfg.group, gp):
+            x, nc, _ = _block_apply(cfg, spec, p, x, cos, sin,
+                                    shardings=shardings)
+            if spec.kind == "attn":
+                k, v = nc
+                pad = max_len - T
+                caches.append({
+                    "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                })
+            else:
+                caches.append(nc)
+        x = _wsc(x, shardings, "acts")
+        return x, tuple(caches)
+
+    x, cache = jax.lax.scan(group_body, x, tuple(params["blocks"]))
+    logits = _logits(cfg, params, x[:, -1:], shardings)
+    return logits, cache, jnp.asarray(T, jnp.int32)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, cur_len,
+                shardings=None):
+    """One decode step.  tokens: (B, 1) int32 (or embeds for frontends);
+    cur_len: int32 — length *including* the new token.  Returns
+    (logits (B,1,Vp), new_cache)."""
+    batch = {"tokens": tokens}
+    x = _embed_inputs(cfg, params, batch)
+    B, T, _ = x.shape
+    pos = jnp.broadcast_to(cur_len - 1, (B, 1)).astype(jnp.int32)
+    if cfg.rope_kind == "mrope":
+        pos = pos[..., None] * jnp.ones((3,), jnp.int32)
+    cos, sin = (A.rope_angles(cfg, pos) if cfg.rope_kind != "none"
+                else (None, None))
+
+    def group_body(x, scanned):
+        gp, gcache = scanned
+        new_caches = []
+        for spec, p, c in zip(cfg.group, gp, gcache):
+            x, nc, _ = _block_apply(cfg, spec, p, x, cos, sin,
+                                    cache=c, cur_len=cur_len,
+                                    shardings=shardings)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(
+        group_body, x, (tuple(params["blocks"]), cache)
+    )
+    return _logits(cfg, params, x, shardings), new_cache

@@ -1,0 +1,260 @@
+"""Sharding policy: maps (arch config × mesh) to PartitionSpecs.
+
+Physical production mesh axes: ("data", "model") = (16, 16), multi-pod adds
+a leading "pod".  Per-arch we *refine* the model axis into three logical
+sub-axes ("tp_a", "tp_b", "sp"):
+
+  tp     = tp_a * tp_b = largest divisor of |model| dividing num_heads
+  tp_a   = gcd(kv_heads, tp)   — KV heads shard here
+  tp_b   = tp / tp_a           — query groups shard here; KV is *replicated*
+                                 across tp_b (Megatron-style GQA replication)
+  sp     = |model| / tp        — leftover; joins tp for feature-dim (MLP,
+                                 vocab, expert) sharding, and shards the
+                                 sequence dim where useful
+
+This guarantees GSPMD divisibility for every assigned arch (verified in
+tests): e.g. qwen2-vl (28 heads) gets tp=4, sp=4; arctic (56 heads) tp=8,
+sp=2; everything else tp=16, sp=1.
+
+FSDP: when parameters (+ optimizer state) per chip would exceed the HBM
+budget, weights are additionally sharded over "data" (ZeRO-3 via GSPMD:
+all-gather per scan step in forward, reduce-scatter of grads in backward).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+HBM_PER_CHIP = 16e9  # TPU v5e-class
+
+
+def _largest_div(n: int, cap: int) -> int:
+    """Largest divisor of ``cap`` (a power of two) that divides n."""
+    d = cap
+    while d > 1 and n % d:
+        d //= 2
+    return d
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh                     # refined mesh
+    has_pod: bool
+    tp_a: int
+    tp_b: int
+    sp: int
+    fsdp: bool                     # shard params over "data" too
+    seq_shard_data: bool = False   # shard sequence (not batch) over dp
+    # decode with huge models: instead of FSDP (re-gathering weights every
+    # token!), keep weights STATIONARY by shard­ing their output-feature
+    # dims over "data" and psum-ing tiny activations (§Perf iter B1)
+    weight_stationary: bool = False
+
+    # ---- axis tuples -----------------------------------------------------
+    @property
+    def dp(self) -> Tuple[str, ...]:
+        return ("pod", "data") if self.has_pod else ("data",)
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.dp]))
+
+    @property
+    def tp_full(self) -> Tuple[str, ...]:
+        return ("tp_a", "tp_b", "sp")
+
+    @property
+    def tp_heads(self) -> Tuple[str, ...]:
+        return ("tp_a", "tp_b")
+
+    @property
+    def model_size(self) -> int:
+        return self.tp_a * self.tp_b * self.sp
+
+    def _fs(self):
+        """The FSDP axis (or None)."""
+        return "data" if self.fsdp else None
+
+    # ---- parameter specs ---------------------------------------------------
+    def spec(self, role: str, cfg: ModelConfig) -> P:
+        fs = self._fs()
+        E_axes, F_axes = self._expert_axes(cfg)
+        if self.weight_stationary:
+            # big matrices: feature dim takes BOTH the tp axes and "data";
+            # attention weights stay FSDP (they're small; head layout is
+            # delicate).  Contractions produce activation-sized partials
+            # that psum over "data" — per-token bytes, not per-weight.
+            wide = tuple(self.tp_full) + ("data",)
+            f_wide = (tuple(F_axes) if F_axes else ()) + ("data",)
+            table = {
+                "embed": P(self.tp_full, None),
+                "head": P(None, wide),
+                "frontend": P(None, wide),
+                "wq": P(fs, self.tp_heads, None),
+                "wkv": P(fs, "tp_a", None),
+                "wo": P(self.tp_heads, None, fs),
+                "wi": P(None, wide),
+                "wo_mlp": P(wide, None),
+                "router": P(None, None),
+                "expert_wi": P(E_axes, None, f_wide),
+                "expert_wo": P(E_axes, f_wide, None),
+                "ssm_in": P(None, wide),
+                "ssm_in_state": P(None, self.tp_full),
+                "ssm_dt": P(None, self.tp_full),
+                "ssm_conv": P(None, None),
+                "ssm_vec": P(self.tp_full),
+                "ssm_out": P(wide, None),
+                "norm": P(None),
+                "scalar": P(),
+            }
+            if role not in table:
+                raise KeyError(role)
+            return table[role]
+        table = {
+            # embeddings
+            "embed": P(self.tp_full, fs),            # (V, D)
+            "head": P(fs, self.tp_full),              # (D, V)
+            "frontend": P(fs, self.tp_full),          # (D_front, D)
+            # attention
+            "wq": P(fs, self.tp_heads, None),         # (D, H, hd)
+            "wkv": P(fs, "tp_a", None),                # (D, K, hd)
+            "wo": P(self.tp_heads, None, fs),          # (H, hd, D)
+            # dense mlp
+            "wi": P(fs, self.tp_full),                 # (D, F)
+            "wo_mlp": P(self.tp_full, fs),             # (F, D)
+            # moe
+            "router": P(fs, None),                     # (D, E)
+            "expert_wi": P(E_axes, fs, F_axes),        # (E, D, F)
+            "expert_wo": P(E_axes, F_axes, fs),        # (E, F, D)
+            # mamba
+            "ssm_in": P(fs, self.tp_full),             # (D, d_inner)
+            "ssm_in_state": P(fs, self.tp_full),       # (D, ssm_state*) small
+            "ssm_dt": P(fs, self.tp_full),             # (D, heads)
+            "ssm_conv": P(None, self.tp_full),         # (w, channels)
+            "ssm_vec": P(self.tp_full),                # (heads,)
+            "ssm_out": P(self.tp_full, fs),            # (d_inner, D)
+            # norms / scalars
+            "norm": P(None),
+            "scalar": P(),
+        }
+        if role not in table:
+            raise KeyError(role)
+        return table[role]
+
+    def expert_axes(self, cfg: ModelConfig):
+        """Public: (expert-dim axes, leftover feature-dim axes)."""
+        return self._expert_axes(cfg)
+
+    def _expert_axes(self, cfg: ModelConfig):
+        """Split tp axes between the expert dim and the FFN feature dim."""
+        if not cfg.num_experts:
+            return None, None
+        e_axes, rem = [], []
+        e = cfg.num_experts
+        prod = 1
+        for name, size in (("tp_a", self.tp_a), ("tp_b", self.tp_b),
+                           ("sp", self.sp)):
+            if size == 1:
+                continue
+            if e % (prod * size) == 0:
+                e_axes.append(name)
+                prod *= size
+            else:
+                rem.append(name)
+        return (tuple(e_axes) or None), (tuple(rem) or None)
+
+    # ---- activation specs --------------------------------------------------
+    def act(self, *dims) -> P:
+        return P(*dims)
+
+    def batch_spec(self) -> P:
+        """(B, T, ...) activations: batch over dp (or seq over dp)."""
+        if self.seq_shard_data:
+            return P(None, self.dp)
+        return P(self.dp, None)
+
+    def cache_spec(self) -> P:
+        """KV cache (B, S, K, hd)."""
+        if self.seq_shard_data:
+            return P(None, self.dp, "tp_a", None)
+        return P(self.dp, None, "tp_a", None)
+
+    def ssm_cache_spec(self) -> P:
+        """SSM state (B, heads, hd, state): heads over tp."""
+        if self.seq_shard_data:
+            return P(None, self.tp_full, None, None)
+        return P(self.dp, self.tp_full, None, None)
+
+
+def refine_mesh(mesh: Mesh, cfg: ModelConfig) -> Mesh:
+    """Split the physical "model" axis into ("tp_a","tp_b","sp")."""
+    names = list(mesh.axis_names)
+    if "model" not in names:
+        raise ValueError(f"mesh {names} lacks a 'model' axis")
+    model = mesh.shape["model"]
+    heads = cfg.num_heads or cfg.ssm_heads
+    tp = _largest_div(heads, model)
+    tp_a = math.gcd(cfg.kv_heads, tp) if cfg.kv_heads else tp
+    # keep tp_a a divisor of tp (it is: gcd with tp's divisor chain)
+    while tp % tp_a:
+        tp_a //= 2
+    tp_b = tp // tp_a
+    sp = model // tp
+    if cfg.num_heads and cfg.kv_heads:
+        g = cfg.num_heads // cfg.kv_heads
+        assert g % tp_b == 0, (cfg.name, g, tp_b)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    new_shape, new_names = [], []
+    for n in names:
+        if n == "model":
+            new_shape += [tp_a, tp_b, sp]
+            new_names += ["tp_a", "tp_b", "sp"]
+        else:
+            new_shape.append(axis_sizes[n])
+            new_names.append(n)
+    devices = mesh.devices.reshape(new_shape)
+    return Mesh(devices, tuple(new_names)), tp_a, tp_b, sp
+
+
+def make_policy(mesh: Mesh, cfg: ModelConfig, *, batch: int,
+                train: bool, seq_len: int = 0) -> ShardingPolicy:
+    refined, tp_a, tp_b, sp = refine_mesh(mesh, cfg)
+    has_pod = "pod" in refined.axis_names
+    dp_size = refined.shape["data"] * (refined.shape["pod"] if has_pod else 1)
+    model = tp_a * tp_b * sp
+
+    # FSDP decision: params (+opt state +grads) per chip under model-only
+    # sharding.  FSDP costs weight all-gathers on every microbatch fwd,
+    # remat-recompute AND bwd pass — ~5.9 s of ICI per train step for
+    # mamba2-2.7b (EXPERIMENTS.md §Perf iter A1) — so it is engaged only
+    # when model-sharded state would actually blow the HBM budget.
+    bytes_per_param = 4 if cfg.param_dtype == "float32" else 2
+    if train:
+        bytes_per_param += (2.1 if cfg.opt_8bit else 8)      # moments
+        bytes_per_param += 4 if cfg.param_dtype == "float32" else 2  # grads
+    per_chip = cfg.param_count() * bytes_per_param / model
+    fsdp = per_chip > 0.5 * HBM_PER_CHIP
+
+    # decode: if weights would need FSDP, keep them stationary instead —
+    # re-gathering hundreds of GB of weights per generated token is the
+    # worst possible use of ICI (§Perf iter B1)
+    weight_stationary = (not train) and fsdp
+    if weight_stationary:
+        fsdp = False
+
+    seq_shard = batch % dp_size != 0
+    if seq_shard and batch != 1:
+        raise ValueError(f"batch {batch} not shardable over dp={dp_size}")
+    return ShardingPolicy(
+        mesh=refined, has_pod=has_pod, tp_a=tp_a, tp_b=tp_b, sp=sp,
+        fsdp=fsdp, seq_shard_data=seq_shard,
+        weight_stationary=weight_stationary,
+    )

@@ -1,0 +1,2 @@
+"""Serving substrate: KV/SSM cache management, prefill and decode step
+factories with production shardings."""

@@ -1,0 +1,75 @@
+"""Prefill / decode step factories under pjit.
+
+`decode_*` / `long_*` dry-run cells lower exactly these: one new token
+against a KV (or SSM-state) cache of seq_len.  For long_500k (batch=1) the
+policy shards the *sequence* dimension of the cache across the data axis
+(flash-decode-style distributed attention); otherwise batch shards over dp
+and heads over tp_a."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.sharding import ShardingPolicy
+from repro.train.train_loop import act_shardings, batch_specs, _shard
+
+
+def make_prefill_step(cfg: ModelConfig, policy: ShardingPolicy, max_len: int):
+    mesh = policy.mesh
+    pspecs = M.param_specs(cfg, policy)
+    bspecs = batch_specs(cfg, policy, train=False)
+    cspecs = M.cache_specs(cfg, policy)
+    acts = act_shardings(cfg, policy)
+
+    def fn(params, batch):
+        return M.prefill(cfg, params, batch, max_len, shardings=acts)
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(_shard(mesh, pspecs), _shard(mesh, bspecs)),
+        out_shardings=(
+            NamedSharding(mesh, P(policy.dp if not policy.seq_shard_data else None)),
+            _shard(mesh, cspecs),
+            NamedSharding(mesh, P()),
+        ),
+    )
+    return jitted
+
+
+def make_decode_step(cfg: ModelConfig, policy: ShardingPolicy):
+    mesh = policy.mesh
+    pspecs = M.param_specs(cfg, policy)
+    cspecs = M.cache_specs(cfg, policy)
+    tok_spec = P(policy.dp, None) if not policy.seq_shard_data else P(None, None)
+    acts = act_shardings(cfg, policy)
+    if policy.seq_shard_data:
+        # batch=1 decode: logits (1,1,V) — shard vocab only
+        acts = {"acts": None,
+                "logits": NamedSharding(mesh, P(None, None, policy.tp_full))}
+
+    def fn(params, cache, tokens, cur_len):
+        return M.decode_step(cfg, params, cache, tokens, cur_len,
+                             shardings=acts)
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(
+            _shard(mesh, pspecs),
+            _shard(mesh, cspecs),
+            NamedSharding(mesh, tok_spec),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=(
+            NamedSharding(mesh, tok_spec),
+            _shard(mesh, cspecs),
+        ),
+        donate_argnums=(1,),   # cache updated in place
+    )
+    return jitted

@@ -1,0 +1,3 @@
+"""Training substrate: hand-rolled AdamW (f32 + 8-bit moment variants),
+train-step factory with microbatch accumulation and donation, gradient
+compression, and sharded checkpointing."""

@@ -1,0 +1,162 @@
+"""Train-step factory: loss + grad + AdamW under pjit with full sharding,
+microbatch gradient accumulation (compute/comm overlap: one gradient
+reduction per step regardless of microbatch count), buffer donation, and an
+optional HHE-encrypted data plane (batches arrive as Rubato/HERA ciphertext
+and are decrypted on-device by keystream subtraction — the paper's cipher
+fused into the input pipeline)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.sharding import ShardingPolicy
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state, opt_state_specs
+
+
+def batch_specs(cfg: ModelConfig, policy: ShardingPolicy, *, train: bool = True):
+    bs = policy.batch_spec()  # P(dp, None) or P(None, dp)
+    d: dict = {}
+    if cfg.frontend == "none":
+        d["tokens"] = bs
+    else:
+        d["embeds"] = P(*(tuple(bs) + (None,)))
+        if cfg.rope_kind == "mrope":
+            d["positions"] = P(*(tuple(bs) + (None,)))
+    if train:
+        d["labels"] = bs
+    return d
+
+
+def _shard(mesh, tree_specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def act_shardings(cfg: ModelConfig, policy: ShardingPolicy):
+    """Internal activation constraints: scan carries sharded over dp AND the
+    model axes (keeps per-step backward residuals ~50 MB/dev instead of
+    ~1 GB/dev), logits sharded over vocab, attention heads pinned to the tp
+    sub-axes (otherwise GSPMD may replicate the score tensors)."""
+    mesh = policy.mesh
+    bs = tuple(policy.batch_spec())  # (dp, None) or (None, dp)
+    b = bs[0] if not policy.seq_shard_data else None
+    t = bs[1] if not policy.seq_shard_data else bs[1]
+    # Scan carries stay D-sharded over the model axes: replicating them
+    # (tried as §Perf iter A2) tripled peak HBM (7.5 -> 21.8 GB for mamba2)
+    # without moving the collective term — REFUTED; the layer-boundary
+    # cotangent reshards are cheaper than the residual blow-up.
+    return {
+        "acts": NamedSharding(mesh, P(bs[0], bs[1], policy.tp_full)),
+        "logits": NamedSharding(mesh, P(bs[0], bs[1], policy.tp_full)),
+        # q: (B, T, K, G, hd); k/v: (B, T(kv), K, hd)
+        "q": NamedSharding(mesh, P(b, t, "tp_a", "tp_b", None)),
+        "kv": NamedSharding(mesh, P(b, t, "tp_a", None)),
+        # mamba inner activations: channels over the full model axes
+        "ssm_inner": NamedSharding(mesh, P(b, t, policy.tp_full)),
+        # MoE runs under shard_map (models/moe.py moe_ffn_sharded) — the
+        # policy rides along so layers can enter shard_map with the mesh
+        "_policy": policy,
+    }
+
+
+def make_train_step(cfg: ModelConfig, policy: ShardingPolicy,
+                    opt: OptConfig, *, microbatch: int = 1,
+                    decryptor=None, donate: bool = True):
+    """Returns (jitted_step, shardings dict).
+
+    step(params, opt_state, batch, step_idx) ->
+        (params, opt_state, metrics)
+
+    If ``decryptor`` is given (see data/encrypted.py), the batch carries
+    ciphertext + block counters and is decrypted on-device first.
+    """
+    mesh = policy.mesh
+    acts = act_shardings(cfg, policy)
+
+    def step_fn(params, opt_state, batch, step_idx):
+        if decryptor is not None:
+            batch = decryptor(batch)
+
+        def loss_of(p, b):
+            return M.loss_fn(cfg, p, b, shardings=acts)
+
+        if microbatch > 1:
+            def split(x):
+                # interleaved split: (B,) -> (B//m, m) -> (m, B//m) so every
+                # device contributes rows to every microbatch (keeps the dp
+                # sharding of the batch dim intact through the reshape)
+                b = x.shape[0]
+                xr = x.reshape((b // microbatch, microbatch) + x.shape[1:])
+                return jnp.moveaxis(xr, 1, 0)
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, b):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_of, has_aux=True)(params, b)
+                gsum = jax.tree.map(
+                    lambda a, x: a + x.astype(a.dtype), gsum, g)
+                return (gsum, lsum + l), None
+
+            # accumulate in f32 for f32 masters, in bf16 for bf16 masters —
+            # a second f32 copy of a 480B-param gradient tree is the
+            # difference between fitting 16 GB/chip or not
+            acc_dt = (jnp.bfloat16 if cfg.param_dtype == "bfloat16"
+                      else jnp.float32)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros((), jnp.float32)), mb
+            )
+            grads = jax.tree.map(lambda g: g / microbatch, gsum)
+            loss = lsum / microbatch
+        else:
+            (loss, (_, aux)), grads = jax.value_and_grad(
+                loss_of, has_aux=True
+            )(params, batch)
+
+        new_params, new_state, om = adamw_update(
+            params, grads, opt_state, step_idx, opt
+        )
+        metrics = {"loss": loss, **om}
+        return new_params, new_state, metrics
+
+    pspecs = M.param_specs(cfg, policy)
+    params_shapes = jax.eval_shape(
+        functools.partial(M.init_params, cfg), jax.random.key(0)
+    )
+    ospecs = opt_state_specs(pspecs, params_shapes, opt)
+    if decryptor is not None:
+        # encrypted batches: ciphertext shards like tokens, counter replicated
+        bspecs = {"ct": policy.batch_spec(), "base_ctr": P()}
+    else:
+        bspecs = batch_specs(cfg, policy, train=True)
+
+    in_sh = (
+        _shard(mesh, pspecs),
+        _shard(mesh, ospecs),
+        _shard(mesh, bspecs),
+        NamedSharding(mesh, P()),
+    )
+    out_sh = (
+        _shard(mesh, pspecs),
+        _shard(mesh, ospecs),
+        NamedSharding(mesh, P()),
+    )
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, {"params": pspecs, "opt": ospecs, "batch": bspecs}

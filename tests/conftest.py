@@ -1,0 +1,11 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here by design — smoke tests
+and benches must see 1 device (the 512-device override belongs ONLY to
+launch/dryrun.py and launch/roofline.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

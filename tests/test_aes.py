@@ -1,0 +1,64 @@
+"""AES-128 conformance (FIPS-197) and CTR keystream tests."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.crypto.aes import (
+    _SBOX_NP, aes128_encrypt_blocks, aes128_key_expand, aes_ctr_keystream,
+)
+
+
+def test_sbox_known_entries():
+    assert _SBOX_NP[0x00] == 0x63
+    assert _SBOX_NP[0x01] == 0x7C
+    assert _SBOX_NP[0x53] == 0xED
+    assert _SBOX_NP[0xFF] == 0x16
+    # S-box is a permutation
+    assert len(set(_SBOX_NP.tolist())) == 256
+
+
+def test_fips197_c1():
+    key = np.arange(16, dtype=np.uint8)
+    pt = np.frombuffer(bytes.fromhex("00112233445566778899aabbccddeeff"),
+                       np.uint8)
+    rk = aes128_key_expand(key)
+    ct = np.array(aes128_encrypt_blocks(jnp.asarray(pt)[None],
+                                        jnp.asarray(rk)))[0]
+    assert ct.tobytes().hex() == "69c4e0d86a7b0430d8cdb78070b4c55a"
+
+
+def test_fips197_appendix_b():
+    key = np.frombuffer(bytes.fromhex("2b7e151628aed2a6abf7158809cf4f3c"),
+                        np.uint8)
+    pt = np.frombuffer(bytes.fromhex("3243f6a8885a308d313198a2e0370734"),
+                       np.uint8)
+    rk = aes128_key_expand(key)
+    ct = np.array(aes128_encrypt_blocks(jnp.asarray(pt)[None],
+                                        jnp.asarray(rk)))[0]
+    assert ct.tobytes().hex() == "3925841d02dc09fbdc118597196a0b32"
+
+
+def test_key_expand_fips197_last_word():
+    # FIPS-197 A.1: last round key word for the appendix-B key is b6630ca6
+    key = np.frombuffer(bytes.fromhex("2b7e151628aed2a6abf7158809cf4f3c"),
+                        np.uint8)
+    rk = aes128_key_expand(key)
+    assert rk[10, 12:16].tobytes().hex() == "b6630ca6"
+
+
+def test_ctr_keystream_batched_matches_single(rng):
+    key = rng.integers(0, 256, 16, dtype=np.uint8)
+    rk = aes128_key_expand(key)
+    nonce = rng.integers(0, 256, 12, dtype=np.uint8)
+    ks = np.array(aes_ctr_keystream(rk, nonce, 5, 8))
+    # block i equals encrypting nonce||ctr=5+i
+    for i in range(8):
+        ctr = 5 + i
+        blk = np.concatenate([
+            nonce,
+            np.array([(ctr >> 24) & 255, (ctr >> 16) & 255,
+                      (ctr >> 8) & 255, ctr & 255], np.uint8),
+        ])
+        want = np.array(aes128_encrypt_blocks(jnp.asarray(blk)[None],
+                                              jnp.asarray(rk)))[0]
+        np.testing.assert_array_equal(ks[i], want)

@@ -1,0 +1,118 @@
+"""Cipher system tests: the paper's structural claims + roundtrips."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    HERA_128A, RUBATO_128L, make_cipher, transcipher,
+)
+from repro.core import rounds as R
+from repro.core.params import get_params
+from repro.core.transcipher import evaluate_decryption_circuit
+
+ALL = ["hera-128a", "rubato-128s", "rubato-128m", "rubato-128l"]
+
+
+def test_round_constant_accounting_matches_paper():
+    # Presto §IV-C: HERA needs 96 round constants, Rubato Par-128L 188
+    assert HERA_128A.n_round_constants == 96
+    assert RUBATO_128L.n_round_constants == 188
+    # Rubato split: 64 + 64 + 60 (truncated final ARK)
+    assert RUBATO_128L.rounds * RUBATO_128L.n + RUBATO_128L.l == 188
+
+
+def test_multiplicative_depth_claims():
+    # HERA: 5 Cube layers x depth 2 = 10;  Rubato-128L: 2 Feistel x 1 = 2.
+    # This is THE property that makes Rubato cheap to transcipher (§III).
+    hera = make_cipher("hera-128a", seed=1)
+    _, depth = evaluate_decryption_circuit(hera, jnp.arange(2, dtype=jnp.uint32))
+    assert depth == 10
+    rub = make_cipher("rubato-128l", seed=1)
+    _, depth = evaluate_decryption_circuit(rub, jnp.arange(2, dtype=jnp.uint32))
+    assert depth == 2
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_mrmc_transposition_invariance(name, rng):
+    """Paper Eq. 2: MRMC(X^T) = (MRMC(X))^T — the property that licenses
+    row/column-major alternation."""
+    p = get_params(name)
+    v = p.v
+    x = rng.integers(0, p.mod.q, (7, p.n), dtype=np.uint32)
+    X = x.reshape(7, v, v)
+    xt = jnp.asarray(np.swapaxes(X, 1, 2).reshape(7, p.n))
+    lhs = np.array(R.mrmc(p, xt)).reshape(7, v, v)
+    rhs = np.swapaxes(
+        np.array(R.mrmc(p, jnp.asarray(x))).reshape(7, v, v), 1, 2)
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_mrmc_equals_composition(name, rng):
+    p = get_params(name)
+    x = jnp.asarray(rng.integers(0, p.mod.q, (5, p.n), dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.array(R.mrmc(p, x)),
+        np.array(R.mix_rows(p, R.mix_columns(p, x))))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_encrypt_decrypt_roundtrip(name, rng):
+    ci = make_cipher(name, seed=3)
+    ctrs = jnp.arange(6, dtype=jnp.uint32)
+    m = rng.uniform(-8, 8, (6, ci.params.l)).astype(np.float32)
+    ct = ci.encrypt(m, ctrs, delta=4096.0)
+    back = np.array(ci.decrypt(ct, ctrs, delta=4096.0))
+    assert np.abs(back - m).max() < 1 / 4096 + 1e-6
+
+
+def test_keystream_coupled_equals_decoupled():
+    ci = make_cipher("rubato-128l", seed=5)
+    ctrs = jnp.arange(4, dtype=jnp.uint32)
+    np.testing.assert_array_equal(
+        np.array(ci.keystream(ctrs)), np.array(ci.keystream_coupled(ctrs)))
+
+
+def test_keystream_depends_on_key_nonce_counter():
+    a = make_cipher("hera-128a", seed=1)
+    b = make_cipher("hera-128a", seed=2)
+    c0 = jnp.arange(2, dtype=jnp.uint32)
+    assert not np.array_equal(np.array(a.keystream(c0)),
+                              np.array(b.keystream(c0)))
+    assert not np.array_equal(np.array(a.keystream(c0)),
+                              np.array(a.keystream(c0 + 10)))
+
+
+def test_feistel_is_parallel_not_chained(rng):
+    p = get_params("rubato-128l")
+    x = rng.integers(0, p.mod.q, (3, p.n), dtype=np.uint32)
+    got = np.array(R.feistel(p, jnp.asarray(x)))
+    want = x.copy().astype(object)
+    want[:, 1:] = (x[:, 1:].astype(object)
+                   + (x[:, :-1].astype(object) ** 2)) % p.mod.q
+    np.testing.assert_array_equal(got, want.astype(np.uint32))
+
+
+def test_transcipher_recovers_slots():
+    ci = make_cipher("rubato-128l", seed=7)
+    ctrs = jnp.arange(3, dtype=jnp.uint32)
+    rng = np.random.default_rng(7)
+    m = rng.uniform(-4, 4, (3, ci.params.l)).astype(np.float32)
+    ct = ci.encrypt(m, ctrs)
+    slots, depth = transcipher(ci, ct, ctrs)
+    # server-side recovery is exact up to the cipher's own AGN noise
+    assert np.abs(np.array(slots) - m).max() < 10 * 1.6 / 1024 + 1 / 2048
+    assert depth == 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), ctr=st.integers(0, 2**20))
+def test_property_roundtrip_hera(seed, ctr):
+    ci = make_cipher("hera-128a", seed=seed)
+    ctrs = jnp.asarray([ctr], dtype=jnp.uint32)
+    rng = np.random.default_rng(seed)
+    m = rng.uniform(-2, 2, (1, 16)).astype(np.float32)
+    back = np.array(ci.decrypt(ci.encrypt(m, ctrs), ctrs))
+    assert np.abs(back - m).max() < 1e-3

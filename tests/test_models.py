@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step on
+CPU, asserting output shapes and no NaNs — plus decode consistency."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config, list_archs
+from repro.models import model as M
+from repro.models.sharding import make_policy
+from repro.launch.mesh import make_host_mesh
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_loop import make_train_step
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, B, T, rng, train=True):
+    batch = {}
+    if cfg.frontend == "none":
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    else:
+        batch["embeds"] = jnp.asarray(
+            rng.normal(0, 1, (B, T, cfg.frontend_dim)), jnp.float32)
+        if cfg.rope_kind == "mrope":
+            p = np.broadcast_to(np.arange(T)[None, :, None], (B, T, 3)).copy()
+            batch["positions"] = jnp.asarray(p, jnp.int32)
+    if train:
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_no_nan(arch, rng):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg, 2, 32, rng)
+    logits, aux = M.forward_train(cfg, params, batch)
+    assert logits.shape == (2, 32, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all())
+    loss, (ce, aux) = M.loss_fn(cfg, params, batch)
+    assert bool(jnp.isfinite(loss))
+    assert 0 < float(ce) < 2 * np.log(cfg.vocab_padded) + 5
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_one_train_step(arch, rng):
+    cfg = get_config(arch, smoke=True)
+    mesh = make_host_mesh()
+    policy = make_policy(mesh, cfg, batch=2, train=True)
+    opt = OptConfig(lr=1e-3, eightbit=cfg.opt_8bit, total_steps=10,
+                    warmup_steps=1)
+    step, _ = make_train_step(cfg, policy, opt, donate=False)
+    params = M.init_params(cfg, jax.random.key(0))
+    state = init_opt_state(params, opt)
+    batch = make_batch(cfg, 2, 32, rng)
+    new_params, new_state, metrics = step(
+        params, state, batch, jnp.asarray(0, jnp.int32))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    moved = any(
+        not np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a, smoke=True).causal
+                                  and get_config(a, smoke=True).frontend == "none"])
+def test_decode_matches_teacher_forcing(arch, rng):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(cfg, jax.random.key(1))
+    B, T, MAXLEN = 2, 16, 24
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, T + 4)), jnp.int32)
+    logits_full, _ = M.forward_train(cfg, params, {"tokens": toks})
+    logits_p, cache, cur = M.prefill(cfg, params, {"tokens": toks[:, :T]},
+                                     MAXLEN)
+    errs = [float(jnp.abs(logits_p[:, 0] - logits_full[:, T - 1]).max())]
+    for i in range(3):
+        cur = cur + 1
+        lg, cache = M.decode_step(cfg, params, cache,
+                                  toks[:, T + i : T + i + 1], cur)
+        errs.append(float(jnp.abs(lg[:, 0] - logits_full[:, T + i]).max()))
+    # MoE archs: token-choice capacity differs between batched prefill and
+    # single-token decode (a real semantic effect), so tolerance is looser
+    tol = 6e-2 if cfg.num_experts else 2e-2
+    assert max(errs) < tol, errs
+
+
+def test_param_count_analytic_matches_actual():
+    for arch in ARCHS:
+        cfg = get_config(arch, smoke=True)
+        params = M.init_params(cfg, jax.random.key(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        # analytic ignores a few tiny vectors; must agree within 2%
+        assert abs(actual - analytic) / actual < 0.02, (
+            arch, actual, analytic)
+
+
+def test_encoder_arch_is_bidirectional(rng):
+    """hubert: flipping future frames must change past outputs."""
+    cfg = get_config("hubert-xlarge", smoke=True)
+    params = M.init_params(cfg, jax.random.key(0))
+    e = rng.normal(0, 1, (1, 16, cfg.frontend_dim)).astype(np.float32)
+    l1, _ = M.forward_train(cfg, params, {"embeds": jnp.asarray(e)})
+    e2 = e.copy()
+    e2[:, -1] += 10.0
+    l2, _ = M.forward_train(cfg, params, {"embeds": jnp.asarray(e2)})
+    # output at position 0 changes => bidirectional attention
+    assert float(jnp.abs(l1[:, 0] - l2[:, 0]).max()) > 1e-4
+
+
+def test_causal_arch_ignores_future(rng):
+    cfg = get_config("deepseek-7b", smoke=True)
+    params = M.init_params(cfg, jax.random.key(0))
+    t1 = rng.integers(0, cfg.vocab, (1, 16)).astype(np.int32)
+    t2 = t1.copy()
+    t2[:, -1] = (t2[:, -1] + 7) % cfg.vocab
+    l1, _ = M.forward_train(cfg, params, {"tokens": jnp.asarray(t1)})
+    l2, _ = M.forward_train(cfg, params, {"tokens": jnp.asarray(t2)})
+    np.testing.assert_allclose(np.asarray(l1[:, :-1]), np.asarray(l2[:, :-1]),
+                               atol=1e-5)
+
+
+def test_gemma2_sliding_window_limits_reach(rng):
+    """gemma2 smoke: window=16 on even layers; with T far beyond the window
+    plus all-global layers removed this is hard to test directly, so check
+    the attention primitive instead."""
+    from repro.models.attention import blockwise_attention
+    B, T, K, G, hd = 1, 64, 1, 1, 8
+    q = jnp.asarray(rng.normal(0, 1, (B, T, K, G, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, T, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, T, K, hd)), jnp.float32)
+    out_w = blockwise_attention(q, k, v, causal=True, window=8,
+                                q_chunk=16, k_chunk=16)
+    # perturb a key far outside the window of the last query
+    k2 = k.at[:, 0].add(100.0)
+    v2 = v.at[:, 0].add(100.0)
+    out_w2 = blockwise_attention(q, k2, v2, causal=True, window=8,
+                                 q_chunk=16, k_chunk=16)
+    np.testing.assert_allclose(np.asarray(out_w[:, -1]),
+                               np.asarray(out_w2[:, -1]), atol=1e-5)
+    # ...but it does affect early positions
+    assert float(jnp.abs(out_w[:, 1] - out_w2[:, 1]).max()) > 1e-3

@@ -1,0 +1,96 @@
+"""Unit + property tests for uint32 limb modular arithmetic."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.crypto.modmath import Modulus, Q_HERA, Q_RUBATO
+
+MODS = [Q_HERA, Q_RUBATO]
+
+
+@pytest.mark.parametrize("mod", MODS, ids=lambda m: str(m.q))
+def test_mul_matches_bignum(mod, rng):
+    x = rng.integers(0, mod.q, 5000, dtype=np.uint32)
+    y = rng.integers(0, mod.q, 5000, dtype=np.uint32)
+    got = np.array(mod.mul(jnp.asarray(x), jnp.asarray(y)))
+    want = (x.astype(object) * y.astype(object)) % mod.q
+    np.testing.assert_array_equal(got, want.astype(np.uint32))
+
+
+@pytest.mark.parametrize("mod", MODS, ids=lambda m: str(m.q))
+def test_add_sub_neg(mod, rng):
+    x = rng.integers(0, mod.q, 2000, dtype=np.uint32)
+    y = rng.integers(0, mod.q, 2000, dtype=np.uint32)
+    xa, ya = jnp.asarray(x), jnp.asarray(y)
+    np.testing.assert_array_equal(
+        np.array(mod.add(xa, ya)), (x.astype(np.uint64) + y) % mod.q)
+    np.testing.assert_array_equal(
+        np.array(mod.sub(xa, ya)), (x.astype(np.int64) - y) % mod.q)
+    np.testing.assert_array_equal(
+        np.array(mod.add(mod.neg(xa), xa)), np.zeros_like(x))
+
+
+@pytest.mark.parametrize("mod", MODS, ids=lambda m: str(m.q))
+def test_cube_and_square(mod, rng):
+    x = rng.integers(0, mod.q, 500, dtype=np.uint32)
+    got = np.array(mod.cube(jnp.asarray(x)))
+    want = np.array([pow(int(v), 3, mod.q) for v in x], dtype=np.uint32)
+    np.testing.assert_array_equal(got, want)
+    got = np.array(mod.square(jnp.asarray(x)))
+    want = np.array([pow(int(v), 2, mod.q) for v in x], dtype=np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("mod", MODS, ids=lambda m: str(m.q))
+def test_mul_small_shift_add(mod, rng):
+    x = rng.integers(0, mod.q, 1000, dtype=np.uint32)
+    for c in (0, 1, 2, 3):
+        got = np.array(mod.mul_small(jnp.asarray(x), c))
+        np.testing.assert_array_equal(got, (x.astype(np.uint64) * c) % mod.q)
+
+
+def test_matvec_small_vs_bignum(rng):
+    M = np.array([[2, 3, 1, 1], [1, 2, 3, 1], [1, 1, 2, 3], [3, 1, 1, 2]])
+    for mod in MODS:
+        X = rng.integers(0, mod.q, (64, 4), dtype=np.uint32)
+        got = np.array(mod.matvec_small(M, jnp.asarray(X), axis=-1))
+        want = (M.astype(object) @ X.T.astype(object) % mod.q).T
+        np.testing.assert_array_equal(got, want.astype(np.uint32))
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    x=st.integers(0, Q_HERA.q - 1),
+    y=st.integers(0, Q_HERA.q - 1),
+)
+def test_mul_property_hera(x, y):
+    got = int(Q_HERA.mul(jnp.uint32(x), jnp.uint32(y)))
+    assert got == (x * y) % Q_HERA.q
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    x=st.integers(0, Q_RUBATO.q - 1),
+    y=st.integers(0, Q_RUBATO.q - 1),
+)
+def test_mul_property_rubato(x, y):
+    got = int(Q_RUBATO.mul(jnp.uint32(x), jnp.uint32(y)))
+    assert got == (x * y) % Q_RUBATO.q
+
+
+def test_rejects_bad_moduli():
+    with pytest.raises(ValueError):
+        Modulus(2**28)        # not prime
+    with pytest.raises(ValueError):
+        Modulus(2**29 - 3)    # out of range
+
+
+def test_reduce_bounds(rng):
+    mod = Q_HERA
+    for k in (2, 3, 5, 8):
+        x = rng.integers(0, k * mod.q, 1000, dtype=np.uint64).astype(np.uint32)
+        x = np.minimum(x, np.uint32(k * mod.q - 1)) if k * mod.q < 2**32 else x
+        got = np.array(mod.reduce(jnp.asarray(x), k * mod.q))
+        np.testing.assert_array_equal(got, x % mod.q)

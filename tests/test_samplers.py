@@ -1,0 +1,58 @@
+"""Sampler statistical + structural tests."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.crypto.modmath import Q_HERA, Q_RUBATO
+from repro.crypto.sampler import (
+    DGaussTable, OVERDRAW, STREAM_PAD, discrete_gaussian, uniform_mod_q,
+    uniform_mod_q_stream,
+)
+from repro.crypto.xof import aes_xof_words, threefry_xof_words
+
+
+def test_uniform_overdraw_in_range_and_uniform(rng):
+    nonce = np.arange(16, dtype=np.uint8)
+    w = aes_xof_words(nonce, np.arange(128), 64 * OVERDRAW)
+    w = jnp.asarray(np.array(w).reshape(128, 64, OVERDRAW))
+    u = np.array(uniform_mod_q(w, Q_RUBATO)).ravel()
+    assert (u < Q_RUBATO.q).all()
+    # chi^2-ish: 16 buckets, ~512 each
+    hist, _ = np.histogram(u, bins=16, range=(0, Q_RUBATO.q))
+    expected = len(u) / 16
+    chi2 = ((hist - expected) ** 2 / expected).sum()
+    assert chi2 < 60, chi2   # df=15, very loose bound
+
+
+def test_uniform_stream_compaction_prefers_accepted():
+    # craft words: rejects (>= q under mask) must be skipped in order
+    q = Q_RUBATO.q
+    bad = np.uint32((1 << Q_RUBATO.bits) - 1)   # masked value >= q
+    words = np.array([5, bad, 7, 11, bad, 13] + [17] * STREAM_PAD,
+                     dtype=np.uint32)
+    out = np.array(uniform_mod_q_stream(jnp.asarray(words), 4, Q_RUBATO))
+    np.testing.assert_array_equal(out, [5, 7, 11, 13])
+
+
+def test_dgauss_moments_and_support():
+    t = DGaussTable.build(1.6)
+    nonce = np.arange(16, dtype=np.uint8)
+    hi = np.array(aes_xof_words(nonce, np.arange(200), 64))
+    lo = np.array(aes_xof_words(nonce, np.arange(200) + 999, 64))
+    e = np.array(discrete_gaussian(jnp.asarray(hi), jnp.asarray(lo), t)).ravel()
+    assert (np.abs(e) <= t.tail).all()
+    assert abs(e.mean()) < 0.05
+    assert abs(e.std() - 1.6) < 0.05
+
+
+def test_xof_backends_deterministic_and_distinct():
+    nonce = np.arange(16, dtype=np.uint8)
+    a1 = np.array(aes_xof_words(nonce, np.arange(4), 16))
+    a2 = np.array(aes_xof_words(nonce, np.arange(4), 16))
+    th = np.array(threefry_xof_words(nonce, np.arange(4), 16))
+    np.testing.assert_array_equal(a1, a2)
+    assert a1.shape == th.shape == (4, 16)
+    assert not np.array_equal(a1, th)
+    # different lanes differ
+    assert not np.array_equal(a1[0], a1[1])

@@ -1,0 +1,98 @@
+"""Sharding-policy invariants: every assigned arch must produce divisible
+shardings on the production mesh axes (GSPMD rejects non-divisible)."""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_archs
+from repro.launch.cells import SHAPES, cell_applicable
+from repro.models.sharding import _largest_div
+
+MODEL_AXIS = 16
+DP = 16
+
+
+def _policy_numbers(cfg):
+    heads = cfg.num_heads or cfg.ssm_heads
+    tp = _largest_div(heads, MODEL_AXIS)
+    import math
+    tp_a = math.gcd(cfg.kv_heads, tp) if cfg.kv_heads else tp
+    while tp % tp_a:
+        tp_a //= 2
+    tp_b = tp // tp_a
+    sp = MODEL_AXIS // tp
+    return tp, tp_a, tp_b, sp
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_divisibility_invariants(arch):
+    cfg = get_config(arch)
+    tp, tp_a, tp_b, sp = _policy_numbers(cfg)
+    assert tp_a * tp_b * sp == MODEL_AXIS
+    if cfg.num_heads:
+        assert cfg.num_heads % (tp_a * tp_b) == 0, "q heads shard over tp"
+        assert cfg.kv_heads % tp_a == 0, "kv heads shard over tp_a"
+        g = cfg.num_heads // cfg.kv_heads
+        assert g % tp_b == 0, "query groups shard over tp_b"
+    if cfg.d_ff:
+        assert cfg.d_ff % MODEL_AXIS == 0, "FFN features shard over model"
+    assert cfg.vocab_padded % 128 == 0
+    assert cfg.vocab_padded % MODEL_AXIS == 0
+    if cfg.ssm_state:
+        assert cfg.d_inner % MODEL_AXIS == 0
+        assert cfg.ssm_heads % MODEL_AXIS == 0
+    if cfg.num_experts:
+        # experts x features must cover the model axis
+        e = cfg.num_experts
+        covered = 1
+        for size in (tp_a, tp_b, sp):
+            if size > 1 and e % (covered * size) == 0:
+                covered *= size
+        rem = MODEL_AXIS // covered
+        assert cfg.d_ff % rem == 0, "leftover axes shard expert FFN features"
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_batch_shardability(arch):
+    for sname, shape in SHAPES.items():
+        ok, _ = cell_applicable(arch, sname)
+        if not ok:
+            continue
+        gb = shape.global_batch
+        # either batch shards over dp, or batch==1 and we sequence-shard
+        assert gb % DP == 0 or gb == 1, (arch, sname, gb)
+        if gb == 1:
+            assert shape.seq_len % DP == 0
+
+
+def test_expected_tp_assignments():
+    expect = {
+        "internlm2-20b": (16, 8, 2, 1),
+        "granite-3-8b": (16, 8, 2, 1),
+        "deepseek-7b": (16, 16, 1, 1),
+        "gemma2-9b": (16, 8, 2, 1),
+        "qwen2-vl-7b": (4, 4, 1, 4),
+        "hubert-xlarge": (16, 16, 1, 1),
+        "mamba2-2.7b": (16, 16, 1, 1),
+        "mixtral-8x7b": (16, 8, 2, 1),
+        "arctic-480b": (8, 8, 1, 2),
+        "jamba-1.5-large": (16, 8, 2, 1),
+    }
+    for arch, want in expect.items():
+        got = _policy_numbers(get_config(arch))
+        assert got == want, (arch, got, want)
+
+
+def test_cell_skips_are_exactly_as_designed():
+    skips = [(a, s) for a in list_archs() for s in SHAPES
+             if not cell_applicable(a, s)[0]]
+    want = {
+        ("hubert-xlarge", "decode_32k"), ("hubert-xlarge", "long_500k"),
+        ("internlm2-20b", "long_500k"), ("granite-3-8b", "long_500k"),
+        ("deepseek-7b", "long_500k"), ("gemma2-9b", "long_500k"),
+        ("qwen2-vl-7b", "long_500k"), ("mixtral-8x7b", "long_500k"),
+        ("arctic-480b", "long_500k"),
+    }
+    assert set(skips) == want
+    # 40 cells - 9 skips = 31 runnable
+    assert 4 * len(list_archs()) - len(skips) == 31
