@@ -19,8 +19,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import CipherBatch, KeystreamFarm, plan_windows
 from repro.core.cipher import make_cipher
 from repro.kernels.keystream.ops import keystream_kernel_apply
+from repro.serve.hhe_loop import HHERequest, HHEServer
 
 
 def timed(fn, *args, iters=5):
@@ -79,6 +81,39 @@ def main():
         dt = (time.perf_counter() - t0) / 4
         print(f"  pipelined producer/consumer: {dt*1e3:8.2f} ms/batch "
               f"(macro RNG-decoupling, DESIGN.md T3)")
+
+        # ---- multi-stream farm: many sessions, one batched dispatch ----
+        batch = CipherBatch(name, seed=0)
+        sessions = batch.add_sessions(8)
+        farm = KeystreamFarm(batch)
+        bps = max(1, lanes // 8)            # blocks per session per pass
+        window = bps * 8
+        plans = plan_windows(sessions, blocks_per_session=bps, window=window)
+        for _, z in farm.run(plans):        # warmup/compile
+            jax.block_until_ready(z)
+        plans = plan_windows(sessions, blocks_per_session=bps, window=window)
+        t0 = time.perf_counter()
+        last = None
+        for _, z in farm.run(plans):
+            last = z
+        jax.block_until_ready(last)
+        dt = time.perf_counter() - t0
+        print(f"  farm ({len(sessions)} sessions, window={window}): "
+              f"{dt*1e3:8.2f} ms  {window*l/dt/1e6:8.1f} Msps "
+              f"(double-buffered windows)")
+
+    # ---- serving shape: ragged requests packed into fixed windows ------
+    print("\nHHE request loop (rubato-128l, window=256)")
+    srv = HHEServer(CipherBatch("rubato-128l", seed=1), window=256)
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        srv.open_session()
+    srv.warmup()            # compile the two window programs up front
+    for s in srv.batch.sessions:
+        srv.submit(HHERequest(session_id=s.index, op="keystream",
+                              blocks=int(rng.integers(1, 40))))
+    n = len(srv.flush())
+    print(f"  served {n} ragged requests; latency: {srv.latency_stats()}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 verify entry point (ROADMAP.md): fast lap first, then the slow
+# interpret-mode Pallas sweeps.  One command, two laps:
+#
+#   scripts/ci.sh          # fast lap + slow lap (the full tier-1 suite)
+#   scripts/ci.sh --fast   # fast lap only (developer inner loop)
+#
+# The fast lap excludes tests marked `slow` (full-lane interpret-mode
+# kernel sweeps, see tests/conftest.py); everything else — including the
+# farm bit-exactness cross-checks — runs there.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== fast lap (-m 'not slow') ==="
+python -m pytest -x -q -m "not slow"
+
+if [[ "${1:-}" == "--fast" ]]; then
+  echo "=== fast lap only (--fast); skipping slow lap ==="
+  exit 0
+fi
+
+echo "=== slow lap (-m slow) ==="
+python -m pytest -x -q -m slow

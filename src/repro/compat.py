@@ -1,0 +1,32 @@
+"""Version-compatibility shims for the pinned toolchain in the image.
+
+`shard_map` graduated from `jax.experimental.shard_map` to the `jax`
+namespace after 0.4.x, and its replication-check kwarg was renamed
+`check_rep` -> `check_vma` in the move.  The image pins jax 0.4.37 (old
+location, old kwarg); call sites are written against the new API and routed
+through this wrapper so they work on either side of the migration.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+except AttributeError:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_HAS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    if check_vma is not None:
+        kwargs["check_vma" if _HAS_CHECK_VMA else "check_rep"] = check_vma
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )
+
+
+__all__ = ["shard_map"]

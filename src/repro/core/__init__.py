@@ -11,7 +11,8 @@ from repro.core.params import (
     RUBATO_128L,
     get_params,
 )
-from repro.core.cipher import Cipher, make_cipher
+from repro.core.cipher import Cipher, CipherBatch, StreamSession, make_cipher
+from repro.core.farm import KeystreamFarm, WindowPlan, plan_windows
 from repro.core.hera import hera_stream_key
 from repro.core.rubato import rubato_stream_key
 from repro.core.transcipher import transcipher, evaluate_decryption_circuit
@@ -24,6 +25,11 @@ __all__ = [
     "RUBATO_128L",
     "get_params",
     "Cipher",
+    "CipherBatch",
+    "StreamSession",
+    "KeystreamFarm",
+    "WindowPlan",
+    "plan_windows",
     "make_cipher",
     "hera_stream_key",
     "rubato_stream_key",

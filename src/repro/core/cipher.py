@@ -11,6 +11,17 @@ Producer/consumer split (the paper's T3, "RNG decoupling"):
   * :meth:`Cipher.keystream_coupled` — paper's D1-style baseline: a single
     computation that serializes XOF → sampling → rounds (for benchmarks).
 
+Multi-stream farm (the T3 split lifted from kernel to system level):
+
+  * :class:`StreamSession` — one client stream: a public nonce plus a
+    block-counter cursor that hands out disjoint counter windows.
+  * :class:`CipherBatch` — one symmetric key, a pool of sessions.  Its
+    producer/consumer pair takes *per-lane* (session, counter) pairs, so a
+    single jit'd call serves lanes drawn from arbitrarily many concurrent
+    sessions — bit-exact with each session's own single-stream `Cipher`.
+    `core/farm.py` double-buffers these producers against the fused Pallas
+    consumer; `serve/hhe_loop.py` packs request traffic into its windows.
+
 Message encoding: real vectors are fixed-point encoded, m_q = round(m·Δ)
 centered into Z_q; encryption is c = m_q + z, decryption m_q = c − z (the
 RtF client side).
@@ -19,24 +30,71 @@ RtF client side).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import rounds as R
 from repro.core.hera import hera_stream_key
 from repro.core.params import CipherParams, get_params
 from repro.core.rubato import rubato_stream_key
+from repro.crypto.aes import aes128_key_expand
 from repro.crypto.sampler import (
     DGaussTable,
     discrete_gaussian,
     uniform_mod_q_stream,
     words_needed_uniform_stream,
 )
-from repro.crypto.xof import xof_words
+from repro.crypto.xof import (
+    aes_xof_words_batched,
+    threefry_root_key,
+    threefry_xof_words_batched,
+    xof_words,
+)
+
+
+def _constants_from_words(params: CipherParams, words, gauss: Optional[DGaussTable]):
+    """Shared producer tail: XOF words -> dict(rc=..., noise=...).
+
+    words: (..., total) uint32 where total = words_needed_uniform_stream(
+    n_round_constants) + 2*n_noise.  Used by both the single-stream and the
+    batched producer so the two are bit-exact by construction.
+    """
+    p = params
+    n_u = p.n_round_constants
+    w_u = words_needed_uniform_stream(n_u)
+    rc = uniform_mod_q_stream(words[..., :w_u], n_u, p.mod)
+    noise = None
+    if p.n_noise:
+        hi = words[..., w_u : w_u + p.n_noise]
+        lo = words[..., w_u + p.n_noise : w_u + 2 * p.n_noise]
+        noise = discrete_gaussian(hi, lo, gauss)
+    return {"rc": rc, "noise": noise}
+
+
+def _stream_key(params: CipherParams, key, rc, noise=None):
+    """Shared consumer: round pipeline on explicit constants."""
+    if params.kind == "hera":
+        rc = rc.reshape(rc.shape[:-1] + (params.n_arks, params.n))
+        return hera_stream_key(params, key, rc)
+    return rubato_stream_key(params, key, rc, noise)
+
+
+def encode_fixed(mod, m_real, delta: float):
+    """Fixed-point encode: m_q = round(m·Δ) centered into Z_q.
+
+    THE encoding convention — every encrypt path (Cipher, CipherBatch,
+    farm streams, serve loop) must go through this pair so bit-exactness
+    holds across them.
+    """
+    mq = jnp.round(jnp.asarray(m_real, jnp.float32) * delta).astype(jnp.int32)
+    return mod.from_signed(mq)
+
+
+def decode_fixed(mod, m_q, delta: float):
+    """Inverse of :func:`encode_fixed`."""
+    return mod.to_signed(m_q).astype(jnp.float32) / delta
 
 
 @dataclasses.dataclass
@@ -61,25 +119,13 @@ class Cipher:
         rc: (lanes, n_round_constants) uint32; noise: (lanes, l) int32 or None.
         """
         p = self.params
-        n_u = p.n_round_constants
-        w_u = words_needed_uniform_stream(n_u)
-        total = w_u + 2 * p.n_noise
+        total = words_needed_uniform_stream(p.n_round_constants) + 2 * p.n_noise
         words = xof_words(p.xof, self.nonce, block_ctrs, total)
-        rc = uniform_mod_q_stream(words[..., :w_u], n_u, p.mod)
-        noise = None
-        if p.n_noise:
-            hi = words[..., w_u : w_u + p.n_noise]
-            lo = words[..., w_u + p.n_noise : w_u + 2 * p.n_noise]
-            noise = discrete_gaussian(hi, lo, self._gauss)
-        return {"rc": rc, "noise": noise}
+        return _constants_from_words(p, words, self._gauss)
 
     # ---------------- consumer (round pipeline) --------------------------
     def keystream_from_constants(self, rc, noise=None):
-        p = self.params
-        if p.kind == "hera":
-            rc = rc.reshape(rc.shape[:-1] + (p.n_arks, p.n))
-            return hera_stream_key(p, self.key, rc)
-        return rubato_stream_key(p, self.key, rc, noise)
+        return _stream_key(self.params, self.key, rc, noise)
 
     def keystream(self, block_ctrs, constants=None):
         """(lanes,) block counters -> (lanes, l) keystream."""
@@ -99,12 +145,10 @@ class Cipher:
 
     # ---------------- encryption ----------------------------------------
     def encode(self, m_real, delta: float):
-        p = self.params
-        mq = jnp.round(jnp.asarray(m_real, jnp.float32) * delta).astype(jnp.int32)
-        return p.mod.from_signed(mq)
+        return encode_fixed(self.params.mod, m_real, delta)
 
     def decode(self, m_q, delta: float):
-        return self.params.mod.to_signed(m_q).astype(jnp.float32) / delta
+        return decode_fixed(self.params.mod, m_q, delta)
 
     def encrypt(self, m_real, block_ctrs, delta: float = 1024.0, constants=None):
         """Encrypt (lanes, l) real messages -> (lanes, l) uint32 ciphertext."""
@@ -125,3 +169,190 @@ def make_cipher(name: str, key=None, nonce=None, seed: int = 0) -> Cipher:
     if nonce is None:
         nonce = rng.integers(0, 256, size=(16,), dtype=np.uint8)
     return Cipher(p, jnp.asarray(key, jnp.uint32), nonce)
+
+
+# ==========================================================================
+# Multi-stream farm: one key, many (nonce, counter-window) sessions
+# ==========================================================================
+#: Block counters per session.  The AES XOF gives each cipher-block counter
+#: a 2^16-block subspace of a 32-bit AES counter field (crypto/xof.py), so
+#: counters >= 2^16 alias earlier XOF streams — a two-time pad.  A session
+#: is therefore capped at 2^16 blocks (~4M Z_q elements for Rubato-128L);
+#: clients needing more open a fresh session (new nonce).
+SESSION_CTR_LIMIT = 1 << 16
+
+
+@dataclasses.dataclass
+class StreamSession:
+    """One client stream: public nonce + a block-counter window cursor.
+
+    Sessions never share (nonce, counter) pairs: `take_window` hands out
+    consecutive disjoint counter ranges, so keystream reuse cannot happen
+    within a session, and distinct nonces keep sessions independent.
+    Exhausting the counter space (SESSION_CTR_LIMIT) raises instead of
+    silently wrapping into keystream reuse.
+    """
+
+    index: int
+    nonce: np.ndarray          # (16,) uint8, public
+    next_ctr: int = 0
+
+    def __post_init__(self):
+        self.nonce = np.asarray(self.nonce, dtype=np.uint8).reshape(16)
+
+    def take_window(self, n_blocks: int) -> np.ndarray:
+        """Reserve the next ``n_blocks`` counters; advances the cursor."""
+        if self.next_ctr + n_blocks > SESSION_CTR_LIMIT:
+            raise RuntimeError(
+                f"session {self.index} counter space exhausted "
+                f"({self.next_ctr} + {n_blocks} > {SESSION_CTR_LIMIT}); "
+                "open a new session (fresh nonce) instead of reusing "
+                "keystream"
+            )
+        ctrs = np.arange(
+            self.next_ctr, self.next_ctr + n_blocks, dtype=np.uint32
+        )
+        self.next_ctr += n_blocks
+        return ctrs
+
+
+class CipherBatch:
+    """Session-batched cipher: one symmetric key, a pool of stream sessions.
+
+    Every producer/consumer method takes parallel per-lane arrays
+    ``(session_ids, block_ctrs)`` — lanes may mix sessions and counters
+    arbitrarily, so one jit'd dispatch serves traffic from any number of
+    concurrent clients.  Bit-exact with the single-stream :class:`Cipher`
+    of each session (see :meth:`session_cipher`); the cross-check is
+    tests/test_farm.py.
+
+    Per-session XOF material (expanded AES round keys / threefry roots) is
+    precompiled host-side at `add_session` time and gathered per lane on
+    device, so adding sessions never retriggers tracing.
+    """
+
+    def __init__(self, params: CipherParams | str, key=None, seed: int = 0):
+        if isinstance(params, str):
+            params = get_params(params)
+        self.params = params
+        rng = np.random.default_rng(seed)
+        if key is None:
+            key = rng.integers(1, params.mod.q, size=(params.n,),
+                               dtype=np.uint32)
+        self.key = jnp.asarray(key, jnp.uint32)
+        if self.key.shape != (params.n,):
+            raise ValueError(f"key shape {self.key.shape} != ({params.n},)")
+        self._rng = rng
+        self._gauss = (
+            DGaussTable.build(params.sigma) if params.n_noise else None
+        )
+        self.sessions: List[StreamSession] = []
+        # host-side per-session XOF material, stacked lazily into tables
+        self._rk_host: List[np.ndarray] = []      # aes: (11, 16) u8 each
+        self._root_host: list = []                # threefry: key each
+        self._tables = None                       # device tables, lazy
+        self._producer = None                     # built once, pool-agnostic
+
+    # ---------------- session pool ---------------------------------------
+    def add_session(self, nonce=None) -> StreamSession:
+        if nonce is None:
+            nonce = self._rng.integers(0, 256, size=(16,), dtype=np.uint8)
+        s = StreamSession(index=len(self.sessions), nonce=nonce)
+        self.sessions.append(s)
+        if self.params.xof == "aes":
+            self._rk_host.append(aes128_key_expand(s.nonce))
+        else:
+            self._root_host.append(threefry_root_key(s.nonce))
+        self._tables = None
+        return s
+
+    def add_sessions(self, count: int) -> List[StreamSession]:
+        return [self.add_session() for _ in range(count)]
+
+    def __len__(self) -> int:
+        return len(self.sessions)
+
+    def session_cipher(self, session_id: int) -> Cipher:
+        """Single-stream view of one session (the bit-exactness oracle)."""
+        return Cipher(self.params, self.key, self.sessions[session_id].nonce)
+
+    def xof_tables(self):
+        """Device-side per-session XOF material, rebuilt lazily on growth."""
+        if self._tables is None:
+            if self.params.xof == "aes":
+                rk = jnp.asarray(np.stack(self._rk_host))      # (S, 11, 16)
+                n12 = jnp.asarray(
+                    np.stack([s.nonce[:12] for s in self.sessions])
+                )                                              # (S, 12)
+                self._tables = (rk, n12)
+            else:
+                self._tables = (jnp.stack(self._root_host),)   # (S,) keys
+        return self._tables
+
+    # ---------------- producer (decoupled, multi-stream) ------------------
+    def make_producer_fn(self):
+        """Pure producer ``fn(tables, session_ids, block_ctrs) -> constants``.
+
+        Tables are runtime args (not baked constants) so a jit of this
+        function stays valid — and retraces on shape change — as the
+        session pool grows.  `core/farm.py` jits this as its producer.
+        The closure depends only on (params, gauss), both fixed, so it is
+        built once and cached.
+        """
+        if self._producer is not None:
+            return self._producer
+        p, gauss = self.params, self._gauss
+        total = words_needed_uniform_stream(p.n_round_constants) + 2 * p.n_noise
+
+        if p.xof == "aes":
+            def producer(tables, session_ids, block_ctrs):
+                rk, n12 = tables
+                sid = jnp.asarray(session_ids, jnp.int32)
+                ctrs = jnp.asarray(block_ctrs, jnp.uint32)
+                words = aes_xof_words_batched(rk[sid], n12[sid], ctrs, total)
+                return _constants_from_words(p, words, gauss)
+        else:
+            def producer(tables, session_ids, block_ctrs):
+                (roots,) = tables
+                sid = jnp.asarray(session_ids, jnp.int32)
+                ctrs = jnp.asarray(block_ctrs, jnp.uint32)
+                words = threefry_xof_words_batched(roots[sid], ctrs, total)
+                return _constants_from_words(p, words, gauss)
+
+        self._producer = producer
+        return producer
+
+    def round_constant_stream(self, session_ids, block_ctrs):
+        """Per-lane randomness for lanes drawn from many sessions.
+
+        session_ids/block_ctrs: (lanes,) int arrays (parallel).  Returns
+        dict(rc=(lanes, n_round_constants) u32, noise=(lanes, l) i32|None).
+        """
+        return self.make_producer_fn()(
+            self.xof_tables(), session_ids, block_ctrs
+        )
+
+    # ---------------- consumer (shared key, round pipeline) ---------------
+    def keystream_from_constants(self, rc, noise=None):
+        return _stream_key(self.params, self.key, rc, noise)
+
+    def keystream(self, session_ids, block_ctrs, constants=None):
+        """(lanes,) (session, ctr) pairs -> (lanes, l) keystream."""
+        if constants is None:
+            constants = self.round_constant_stream(session_ids, block_ctrs)
+        return self.keystream_from_constants(
+            constants["rc"], constants["noise"]
+        )
+
+    # ---------------- streaming encrypt / decrypt -------------------------
+    def encrypt(self, m_real, session_ids, block_ctrs, delta: float = 1024.0,
+                constants=None):
+        z = self.keystream(session_ids, block_ctrs, constants)
+        mod = self.params.mod
+        return mod.add(encode_fixed(mod, m_real, delta), z)
+
+    def decrypt(self, c, session_ids, block_ctrs, delta: float = 1024.0,
+                constants=None):
+        z = self.keystream(session_ids, block_ctrs, constants)
+        mod = self.params.mod
+        return decode_fixed(mod, mod.sub(c, z), delta)

@@ -1,0 +1,206 @@
+"""Multi-stream keystream farm: double-buffered producer→consumer windows.
+
+The paper's T3 ("RNG decoupling") separates the XOF/sampler *producer* from
+the round-pipeline *consumer* so the two overlap.  The fused Pallas kernel
+already does this at kernel level (BlockSpec double buffering, DMA of block
+i+1's constants during block i's rounds).  This module lifts the same
+structure to system level for the ROADMAP's many-concurrent-sessions
+target:
+
+  * a *window* is a fixed-size batch of lanes, each lane an arbitrary
+    (session, block-counter) pair from a :class:`repro.core.cipher.
+    CipherBatch` pool — one key, many nonces;
+  * :class:`KeystreamFarm` runs a window schedule with depth-2 double
+    buffering: the jit'd producer for window i+1 is *dispatched* (async on
+    TPU) before the consumer of window i runs, so XOF/sampling for the next
+    window hides behind the current window's round computation;
+  * the consumer is selectable: the fused Pallas kernel
+    (`kernels/keystream`), optionally lane-sharded across a mesh data axis
+    with shard_map, or the pure-JAX round pipeline (the CPU-friendly
+    default — interpret-mode Pallas is a correctness tool, not a fast
+    path).
+
+Fixed window sizes keep every producer/consumer call shape-stable, so the
+farm compiles exactly two XLA programs regardless of how many sessions or
+windows it serves.  `serve/hhe_loop.py` packs ragged request traffic into
+these windows; `data/encrypted.py` streams training batches through them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Iterable, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cipher import CipherBatch, decode_fixed, encode_fixed
+from repro.kernels.keystream.ops import keystream_kernel_sharded
+
+
+@dataclasses.dataclass
+class WindowPlan:
+    """One farm step: parallel per-lane (session, counter) arrays."""
+
+    session_ids: np.ndarray   # (lanes,) int32
+    block_ctrs: np.ndarray    # (lanes,) uint32
+    meta: Any = None          # opaque caller tag (e.g. request slices)
+
+    def __post_init__(self):
+        self.session_ids = np.asarray(self.session_ids, np.int32).reshape(-1)
+        self.block_ctrs = np.asarray(self.block_ctrs, np.uint32).reshape(-1)
+        if self.session_ids.shape != self.block_ctrs.shape:
+            raise ValueError("session_ids / block_ctrs length mismatch")
+
+    @property
+    def lanes(self) -> int:
+        return self.session_ids.shape[0]
+
+
+def plan_windows(sessions, blocks_per_session: int, window: int,
+                 interleave: bool = True) -> List[WindowPlan]:
+    """Reserve ``blocks_per_session`` counters on each session and pack the
+    resulting lanes into fixed-size windows.
+
+    interleave=True round-robins sessions across lanes (many short streams
+    per window — the serving traffic shape); False keeps each session's
+    lanes contiguous (bulk re-keying shape).  The tail window is NOT padded;
+    use a window size dividing the total for shape-stable jits.
+    """
+    pairs = []
+    for s in sessions:
+        ctrs = s.take_window(blocks_per_session)
+        pairs.append(np.stack(
+            [np.full(blocks_per_session, s.index, np.int64), ctrs]))
+    stacked = np.stack(pairs)                     # (S, 2, B)
+    if interleave:
+        flat = stacked.transpose(2, 0, 1).reshape(-1, 2)   # ctr-major
+    else:
+        flat = stacked.transpose(0, 2, 1).reshape(-1, 2)   # session-major
+    return [
+        WindowPlan(flat[i : i + window, 0], flat[i : i + window, 1])
+        for i in range(0, flat.shape[0], window)
+    ]
+
+
+class KeystreamFarm:
+    """Double-buffered producer→consumer pipeline over a CipherBatch pool.
+
+    consumer:
+      * "jax"    — pure-JAX round pipeline (jit'd); CPU default.
+      * "kernel" — fused Pallas kernel (compiled on TPU, interpret
+                   elsewhere); lane-sharded over ``mesh[axis]`` when a
+                   multi-device mesh is given.
+      * "auto"   — "kernel" on TPU backends, "jax" otherwise.
+    """
+
+    def __init__(self, batch: CipherBatch, consumer: str = "auto",
+                 mesh=None, axis: str = "data",
+                 interpret: Optional[bool] = None):
+        if consumer == "auto":
+            consumer = "kernel" if jax.default_backend() == "tpu" else "jax"
+        if consumer not in ("jax", "kernel"):
+            raise ValueError(f"unknown consumer {consumer!r}")
+        self.batch = batch
+        self.consumer = consumer
+        self.mesh = mesh
+        self.axis = axis
+        self.interpret = interpret
+        self._producer = jax.jit(batch.make_producer_fn())
+        if consumer == "jax":
+            self._consumer = jax.jit(batch.keystream_from_constants)
+        else:
+            p, key = batch.params, batch.key
+
+            def consume(rc, noise=None):
+                return keystream_kernel_sharded(
+                    p, key, rc, noise, mesh=mesh, axis=axis,
+                    interpret=interpret,
+                )
+
+            self._consumer = consume
+
+    # ------------------------------------------------------------------
+    def produce(self, plan: WindowPlan):
+        """Dispatch the (async) producer for one window."""
+        return self._producer(
+            self.batch.xof_tables(), plan.session_ids, plan.block_ctrs
+        )
+
+    def consume(self, constants):
+        """Run the round-pipeline consumer on produced constants."""
+        if constants["noise"] is None:
+            return self._consumer(constants["rc"])
+        return self._consumer(constants["rc"], constants["noise"])
+
+    # ------------------------------------------------------------------
+    def run(self, plans: Iterable[WindowPlan]
+            ) -> Iterator[Tuple[WindowPlan, jnp.ndarray]]:
+        """Yield (plan, keystream) per window, double-buffered.
+
+        The producer for window i+1 is dispatched *before* window i's
+        consumer runs — on an async backend the XOF/sampling of the next
+        window overlaps the current round computation (depth-2 FIFO, the
+        paper's T3 lifted to window granularity).
+        """
+        it = iter(plans)
+        try:
+            cur = next(it)
+        except StopIteration:
+            return
+        cur_c = self.produce(cur)
+        for nxt in it:
+            nxt_c = self.produce(nxt)          # overlaps consume(cur)
+            yield cur, self.consume(cur_c)
+            cur, cur_c = nxt, nxt_c
+        yield cur, self.consume(cur_c)
+
+    def keystream(self, session_ids, block_ctrs, window: Optional[int] = None):
+        """Convenience: full keystream for per-lane pairs, windowed.
+
+        window=None runs everything as a single window.  Returns
+        (lanes, l) uint32, lane order preserved.
+        """
+        sid = np.asarray(session_ids, np.int64).reshape(-1)
+        ctr = np.asarray(block_ctrs, np.int64).reshape(-1)
+        if window is None:
+            window = sid.shape[0]
+        plans = [
+            WindowPlan(sid[i : i + window], ctr[i : i + window])
+            for i in range(0, sid.shape[0], window)
+        ]
+        outs = [z for _, z in self.run(plans)]
+        return jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
+
+    # ------------------------------------------------------------------
+    def _payload_stream(self, plans_and_payloads):
+        """Split (plan, payload) pairs lazily: feed plans to run(), FIFO the
+        payloads alongside.  run() reads at most one plan ahead (the double
+        buffer), so the queue never holds more than two payloads — the
+        stream stays a stream."""
+        payloads: deque = deque()
+
+        def plans():
+            for plan, payload in plans_and_payloads:
+                payloads.append(payload)
+                yield plan
+
+        for plan, z in self.run(plans()):
+            yield plan, payloads.popleft(), z
+
+    def encrypt_stream(self, plans_and_msgs, delta: float = 1024.0):
+        """Streaming encrypt: iterable of (WindowPlan, (lanes, l) float)
+        -> yields (plan, ciphertext).  Keystream double-buffered as in run().
+        """
+        mod = self.batch.params.mod
+        for plan, m, z in self._payload_stream(plans_and_msgs):
+            yield plan, mod.add(encode_fixed(mod, m, delta), z)
+
+    def decrypt_stream(self, plans_and_cts, delta: float = 1024.0):
+        """Streaming decrypt: iterable of (WindowPlan, (lanes, l) u32)
+        -> yields (plan, plaintext float32)."""
+        mod = self.batch.params.mod
+        for plan, ct, z in self._payload_stream(plans_and_cts):
+            yield plan, decode_fixed(mod, mod.sub(jnp.asarray(ct), z), delta)

@@ -139,9 +139,20 @@ def transcipher(cipher: Cipher, c, block_ctrs, delta: float = 1024.0):
     Evaluates the decryption circuit (depth-tracked), subtracts the stream
     key, and decodes fixed-point slots — the values HalfBoot would carry
     into a CKKS ciphertext.  Returns (slots, mult_depth).
+
+    Output-shape contract: the circuit yields exactly ``l`` slots per block
+    for BOTH ciphers, but by different routes — HERA never truncates
+    (l == n by construction, enforced in CipherParams), while Rubato's
+    final ARK feeds Tr_{n,l}, so its circuit output is already cut to l.
+    The ciphertext ``c`` must therefore be (..., l) in either case.
     """
     z, depth = evaluate_decryption_circuit(cipher, block_ctrs)
-    if cipher.params.kind == "rubato":
-        z = z  # already truncated to l
+    l = cipher.params.l
+    if z.shape[-1] != l:
+        raise AssertionError(
+            f"decryption circuit produced {z.shape[-1]} slots, expected l={l}"
+        )
+    if c.shape[-1] != l:
+        raise ValueError(f"ciphertext last dim {c.shape[-1]} != l={l}")
     mq = cipher.params.mod.sub(c, z)
     return cipher.decode(mq, delta), depth

@@ -15,6 +15,15 @@ under public nonce ``nc`` (128-bit) is
 i.e. each cipher block counter owns a 2^16-block counter subspace, giving
 up to 2^20 bytes of XOF output per keystream block — vastly more than the
 ~4.7 kb the ciphers draw (37 AES blocks for Rubato Par-128L).
+
+Two calling conventions per backend:
+
+  * single-stream (``aes_xof_words`` / ``threefry_xof_words``): one nonce,
+    a vector of block counters — what a single ``Cipher`` uses;
+  * multi-stream (``*_xof_words_batched``): per-lane *precompiled* nonce
+    material (expanded AES round keys / threefry root keys), so one jit'd
+    producer call serves lanes drawn from many concurrent sessions.  Both
+    conventions produce bit-identical words for the same (nonce, ctr).
 """
 
 from __future__ import annotations
@@ -47,33 +56,82 @@ def aes_xof_words(nonce: np.ndarray, block_ctrs, n_words: int):
     rk = jnp.asarray(aes_mod.aes128_key_expand(nonce))
     n_blocks = (n_words + 3) // 4
 
+    nonce12 = jnp.asarray(nonce[:12])
+
     def per_lane(ctr):
-        base = ctr * jnp.uint32(_CTR_SPACE)
-        idx = base + jnp.arange(n_blocks, dtype=jnp.uint32)
-        b0 = (idx >> 24).astype(jnp.uint8)
-        b1 = (idx >> 16).astype(jnp.uint8)
-        b2 = (idx >> 8).astype(jnp.uint8)
-        b3 = idx.astype(jnp.uint8)
-        ctr_bytes = jnp.stack([b0, b1, b2, b3], axis=-1)
-        prefix = jnp.broadcast_to(jnp.asarray(nonce[:12]), (n_blocks, 12))
-        blocks = jnp.concatenate([prefix, ctr_bytes], axis=-1)
+        blocks = _aes_ctr_blocks(nonce12, ctr, n_blocks)
         ks = aes_mod.aes128_encrypt_blocks(blocks, rk)
         return _words_from_blocks(ks)[:n_words]
 
     return jax.vmap(per_lane)(jnp.asarray(block_ctrs, dtype=jnp.uint32))
 
 
-def threefry_xof_words(nonce: np.ndarray, block_ctrs, n_words: int):
-    """TPU-native counter-PRF XOF (beyond-paper fast path)."""
+def _aes_ctr_blocks(nonce12, ctr, n_blocks):
+    """Counter blocks nonce12 || be32(ctr·2^16 + i) for one cipher lane."""
+    base = ctr * jnp.uint32(_CTR_SPACE)
+    idx = base + jnp.arange(n_blocks, dtype=jnp.uint32)
+    b0 = (idx >> 24).astype(jnp.uint8)
+    b1 = (idx >> 16).astype(jnp.uint8)
+    b2 = (idx >> 8).astype(jnp.uint8)
+    b3 = idx.astype(jnp.uint8)
+    ctr_bytes = jnp.stack([b0, b1, b2, b3], axis=-1)
+    prefix = jnp.broadcast_to(nonce12, (n_blocks, 12))
+    return jnp.concatenate([prefix, ctr_bytes], axis=-1)
+
+
+def aes_xof_words_batched(round_keys, nonce12, block_ctrs, n_words: int):
+    """Multi-stream AES XOF: per-lane expanded keys and nonce prefixes.
+
+    round_keys: (lanes, 11, 16) uint8 — ``aes128_key_expand(nonce)`` per lane
+    (gathered from a session table; expansion is host-side, once per session).
+    nonce12: (lanes, 12) uint8.  block_ctrs: (lanes,) uint32.
+    Returns (lanes, n_words) uint32, bit-identical to :func:`aes_xof_words`
+    called with each lane's own nonce.
+    """
+    n_blocks = (n_words + 3) // 4
+
+    def per_lane(rk, n12, ctr):
+        blocks = _aes_ctr_blocks(n12, ctr, n_blocks)
+        ks = aes_mod.aes128_encrypt_blocks(blocks, rk)
+        return _words_from_blocks(ks)[:n_words]
+
+    return jax.vmap(per_lane)(
+        jnp.asarray(round_keys, jnp.uint8),
+        jnp.asarray(nonce12, jnp.uint8),
+        jnp.asarray(block_ctrs, dtype=jnp.uint32),
+    )
+
+
+def threefry_root_key(nonce: np.ndarray):
+    """Root PRF key for a nonce (host-side, once per session)."""
     nonce = np.asarray(nonce, dtype=np.uint8).reshape(16)
     seed = int.from_bytes(nonce.tobytes()[:8], "little")
-    root = jax.random.key(seed & 0x7FFFFFFFFFFFFFFF)
+    return jax.random.key(seed & 0x7FFFFFFFFFFFFFFF)
+
+
+def threefry_xof_words(nonce: np.ndarray, block_ctrs, n_words: int):
+    """TPU-native counter-PRF XOF (beyond-paper fast path)."""
+    root = threefry_root_key(nonce)
 
     def per_lane(ctr):
         k = jax.random.fold_in(root, ctr)
         return jax.random.bits(k, (n_words,), dtype=jnp.uint32)
 
     return jax.vmap(per_lane)(jnp.asarray(block_ctrs, dtype=jnp.uint32))
+
+
+def threefry_xof_words_batched(root_keys, block_ctrs, n_words: int):
+    """Multi-stream threefry XOF: per-lane root keys (see threefry_root_key).
+
+    root_keys: (lanes,) typed PRNG key array (gathered from a session table).
+    Bit-identical to :func:`threefry_xof_words` per lane.
+    """
+
+    def per_lane(root, ctr):
+        k = jax.random.fold_in(root, ctr)
+        return jax.random.bits(k, (n_words,), dtype=jnp.uint32)
+
+    return jax.vmap(per_lane)(root_keys, jnp.asarray(block_ctrs, jnp.uint32))
 
 
 _BACKENDS = {"aes": aes_xof_words, "threefry": threefry_xof_words}

@@ -15,6 +15,14 @@ on-device decryption function the train step fuses in (see
 train_loop.make_train_step(decryptor=...)).  Keystream generation for batch
 t+1 is dispatchable concurrently with step t (macro-level RNG decoupling,
 DESIGN.md §6).
+
+`FarmEncryptedSource` is the batched-session upgrade: it draws keystream
+from a `CipherBatch` session through the double-buffered `KeystreamFarm`
+pipeline, so `stream()` actually *dispatches* the XOF producer for batch
+t+1 before batch t is encrypted (the macro RNG decoupling made real, not
+just dispatchable).  One CipherBatch (one key) can back many sources —
+e.g. one session per data shard — and `data/pipeline.py::iterate_batches`
+consumes whichever streaming interface a source provides.
 """
 
 from __future__ import annotations
@@ -27,7 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.cipher import Cipher
+from repro.core.cipher import Cipher, CipherBatch, StreamSession
+from repro.core.farm import KeystreamFarm, WindowPlan
 
 
 def _blocks_for(n_tokens: int, l: int) -> int:
@@ -98,3 +107,69 @@ class EncryptedSource:
         base = step * self.blocks_per_batch()
         enc = encrypt_tokens(self.cipher, plain["tokens"], base)
         return enc
+
+
+class FarmEncryptedSource:
+    """Encrypted source backed by a CipherBatch session + keystream farm.
+
+    Same counter-space convention as `EncryptedSource` (batch t owns block
+    counters [t·bpb, (t+1)·bpb) on this source's session), so decryption
+    needs only (key, session nonce, t) — use
+    ``make_decryptor(batch.session_cipher(src.session.index))``.
+
+    `batch_at` is random access (produce+consume on demand);  `stream`
+    is the pipelined path: the jit'd XOF/sampler producer for batch t+1 is
+    dispatched *before* batch t's keystream is consumed, overlapping
+    producer and consumer across steps on async backends.
+    """
+
+    def __init__(self, source, batch: CipherBatch,
+                 session: Optional[StreamSession] = None,
+                 consumer: str = "auto", mesh=None,
+                 interpret: Optional[bool] = None):
+        self.source = source
+        self.batch = batch
+        self.session = session if session is not None else batch.add_session()
+        self.farm = KeystreamFarm(batch, consumer=consumer, mesh=mesh,
+                                  interpret=interpret)
+
+    @property
+    def cipher(self) -> Cipher:
+        """Single-stream view (for decryptors / cross-checks)."""
+        return self.batch.session_cipher(self.session.index)
+
+    def blocks_per_batch(self) -> int:
+        b = self.source.batch * self.source.seq_len
+        return _blocks_for(b, self.batch.params.l)
+
+    def _plan(self, step: int) -> WindowPlan:
+        bpb = self.blocks_per_batch()
+        ctrs = step * bpb + np.arange(bpb, dtype=np.int64)
+        return WindowPlan(np.full(bpb, self.session.index, np.int64), ctrs)
+
+    def _encrypt(self, step: int, z) -> dict:
+        plain = self.source.batch_at(step)
+        toks = plain["tokens"]
+        B, T = toks.shape
+        zf = z.reshape(-1)[: B * T]
+        m = jnp.asarray(toks.reshape(-1), jnp.uint32)
+        ct = self.batch.params.mod.add(m, zf).reshape(B, T)
+        base = step * self.blocks_per_batch()
+        return {"ct": ct, "base_ctr": jnp.asarray(base, jnp.uint32)}
+
+    def batch_at(self, step: int) -> dict:
+        plan = self._plan(step)
+        z = self.farm.consume(self.farm.produce(plan))
+        return self._encrypt(step, z)
+
+    def stream(self, start_step: int = 0, n_steps: Optional[int] = None):
+        """Double-buffered batch iterator (see class docstring)."""
+
+        def plans():
+            step = start_step
+            while n_steps is None or step < start_step + n_steps:
+                yield self._plan(step)
+                step += 1
+
+        for step, (_, z) in enumerate(self.farm.run(plans()), start_step):
+            yield self._encrypt(step, z)

@@ -92,3 +92,22 @@ def make_source(cfg: ModelConfig, batch: int, seq_len: int, *,
     if path:
         return TokenFile(path, cfg, batch, seq_len)
     return SyntheticLM(cfg, batch, seq_len, seed=seed)
+
+
+def iterate_batches(source, start_step: int = 0,
+                    n_steps: Optional[int] = None):
+    """Streaming iterator over any source.
+
+    Sources with their own pipelined `stream` method (e.g.
+    `data/encrypted.py::FarmEncryptedSource`, whose keystream producer for
+    batch t+1 overlaps batch t) are consumed through it; plain random-access
+    sources fall back to `batch_at`.  Resumability is unchanged: restart
+    from the checkpointed step via ``start_step``.
+    """
+    if hasattr(source, "stream"):
+        yield from source.stream(start_step, n_steps)
+        return
+    step = start_step
+    while n_steps is None or step < start_step + n_steps:
+        yield source.batch_at(step)
+        step += 1

@@ -1,8 +1,12 @@
 """Public jit'd wrappers for the fused keystream kernel.
 
 `keystream_kernel_apply` — kernel consumer with explicit constants (matches
-ref.py signature).  `presto_keystream` — the full D3 pipeline: pure-JAX XOF
-producer (decoupled RNG) feeding the fused Pallas consumer.
+ref.py signature).  `keystream_kernel_sharded` — the same consumer with its
+lane axis sharded over a mesh data axis via shard_map (the farm's
+multi-device path: each device runs the fused kernel on its lane slice, key
+replicated, no cross-device traffic).  `presto_keystream` — the full D3
+pipeline: pure-JAX XOF producer (decoupled RNG) feeding the fused Pallas
+consumer.
 """
 
 from __future__ import annotations
@@ -11,7 +15,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.cipher import Cipher
 from repro.core.params import CipherParams
 from repro.kernels.keystream.keystream import BLK, keystream_pallas
@@ -38,6 +44,42 @@ def keystream_kernel_apply(params: CipherParams, key, rc, noise=None,
         params, key[:, None], rc_p, noise_p, interpret=interpret
     )
     return out.T[:lanes]
+
+
+def keystream_kernel_sharded(params: CipherParams, key, rc, noise=None, *,
+                             mesh=None, axis: str = "data",
+                             interpret: bool | None = None):
+    """Lane-sharded fused consumer: rc/noise split over ``mesh[axis]``.
+
+    Same signature/semantics as :func:`keystream_kernel_apply`; lanes are
+    padded to a multiple of the axis size, each device runs the fused kernel
+    on its slice (key replicated), and the padding is stripped on the way
+    out.  With no mesh (or a 1-wide axis) this is the plain kernel apply.
+    """
+    if mesh is None or mesh.shape.get(axis, 1) == 1:
+        return keystream_kernel_apply(params, key, rc, noise,
+                                      interpret=interpret)
+    ndev = mesh.shape[axis]
+    lanes = rc.shape[0]
+    pad = (-lanes) % ndev
+    rc_p = jnp.pad(rc, ((0, pad), (0, 0)))
+    args = [key, rc_p]
+    in_specs = [P(), P(axis, None)]
+    if noise is not None and params.n_noise:
+        args.append(jnp.pad(noise, ((0, pad), (0, 0))))
+        in_specs.append(P(axis, None))
+
+    def shard_fn(key_s, rc_s, *noise_s):
+        return keystream_kernel_apply(
+            params, key_s, rc_s, noise_s[0] if noise_s else None,
+            interpret=interpret,
+        )
+
+    out = shard_map(
+        shard_fn, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=P(axis, None), check_vma=False,
+    )(*args)
+    return out[:lanes]
 
 
 def presto_keystream(cipher: Cipher, block_ctrs, interpret: bool | None = None):

@@ -21,6 +21,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
+
 from repro.configs.base import ModelConfig
 
 
@@ -181,7 +183,7 @@ def moe_ffn_sharded(cfg: ModelConfig, x, router_w, wi_g, wi_u, wo, policy):
         P(e_axes or None, f_axes or None, fs),   # wo
     )
     out_specs = (P(dp, None, None), P())
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )(x, router_w, wi_g, wi_u, wo)

@@ -1,2 +1,4 @@
 """Serving substrate: KV/SSM cache management, prefill and decode step
-factories with production shardings."""
+factories with production shardings, and the HHE request loop
+(`hhe_loop.py`: many client sessions' encrypt/decrypt/keystream traffic
+packed into fixed windows over the double-buffered keystream farm)."""

@@ -1,0 +1,204 @@
+"""HHE request loop: ragged multi-session traffic over the keystream farm.
+
+The serving shape the ROADMAP targets: many concurrent client sessions
+(HHEML-style batched PPML traffic), each submitting encrypt/decrypt/
+keystream requests of arbitrary block counts.  The server holds ONE
+symmetric key (the enclave role from `data/encrypted.py`) and a
+:class:`repro.core.cipher.CipherBatch` session pool; requests are packed
+lane-by-lane into fixed-size windows and run through the double-buffered
+:class:`repro.core.farm.KeystreamFarm` pipeline — so an 11-block request
+from session A and a 3-block request from session B share one jit'd
+dispatch, and the XOF producer for the next window overlaps the current
+window's round computation.
+
+Fixed windows mean the server compiles exactly two XLA programs total, no
+matter how ragged the traffic; the tail window is padded with repeated
+lanes (recomputed keystream, discarded — never fresh counters, so the
+counter space stays dense).
+
+Latency accounting: a request completes when the window holding its last
+lane is materialized; `latency_stats` reports p50/p99 over completed
+requests, the numbers `benchmarks/keystream_farm_bench.py` tabulates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cipher import (
+    CipherBatch,
+    StreamSession,
+    decode_fixed,
+    encode_fixed,
+)
+from repro.core.farm import KeystreamFarm, WindowPlan
+
+OPS = ("keystream", "encrypt", "decrypt")
+
+
+@dataclasses.dataclass
+class HHERequest:
+    """One client request: ``blocks`` keystream blocks on one session.
+
+    op="encrypt":  payload (blocks, l) float32 -> ciphertext (blocks, l) u32.
+    op="decrypt":  payload (blocks, l) uint32  -> plaintext (blocks, l) f32.
+    op="keystream": no payload -> raw keystream (the transciphering feed).
+    """
+
+    session_id: int
+    op: str = "keystream"
+    payload: Optional[np.ndarray] = None
+    blocks: Optional[int] = None
+    delta: float = 1024.0
+
+    def __post_init__(self):
+        if self.op not in OPS:
+            raise ValueError(f"unknown op {self.op!r}; have {OPS}")
+        if self.payload is not None:
+            self.payload = np.asarray(self.payload)
+            if self.blocks is None:
+                self.blocks = self.payload.shape[0]
+            if self.payload.shape[0] != self.blocks:
+                raise ValueError("payload rows != blocks")
+        if self.blocks is None or self.blocks <= 0:
+            raise ValueError("request needs blocks > 0 (or a payload)")
+
+
+@dataclasses.dataclass
+class HHEResponse:
+    request: HHERequest
+    result: np.ndarray        # per-op result, (blocks, l)
+    block_ctrs: np.ndarray    # counters consumed (client needs these)
+    latency_s: float
+
+
+class HHEServer:
+    """Single-key HHE endpoint: session pool + windowed farm pipeline."""
+
+    def __init__(self, batch: CipherBatch, window: int = 256,
+                 consumer: str = "auto", mesh=None, axis: str = "data",
+                 interpret: Optional[bool] = None):
+        if window <= 0:
+            raise ValueError("window must be positive")
+        self.batch = batch
+        self.window = window
+        self.farm = KeystreamFarm(batch, consumer=consumer, mesh=mesh,
+                                  axis=axis, interpret=interpret)
+        self._queue: List[tuple] = []     # (request, ctrs, t_submit)
+        self.latencies: List[float] = []
+
+    # ------------------------------------------------------------------
+    def open_session(self, nonce=None) -> StreamSession:
+        return self.batch.add_session(nonce)
+
+    def submit(self, req: HHERequest) -> np.ndarray:
+        """Queue a request; counters are reserved immediately (the client
+        learns them synchronously and can pre-share them)."""
+        if not 0 <= req.session_id < len(self.batch.sessions):
+            raise KeyError(
+                f"unknown session {req.session_id} "
+                f"(pool has {len(self.batch.sessions)}; open_session() first)"
+            )
+        sess = self.batch.sessions[req.session_id]
+        ctrs = sess.take_window(req.blocks)
+        self._queue.append((req, ctrs, time.perf_counter()))
+        return ctrs
+
+    def pending_lanes(self) -> int:
+        return sum(req.blocks for req, _, _ in self._queue)
+
+    def warmup(self):
+        """Compile the window-size programs before taking traffic (one dummy
+        window re-deriving session 0's counter 0 — consumes no counters).
+        Compiles against the CURRENT session-pool size; growing the pool
+        afterwards retraces the producer on its next dispatch."""
+        if not self.batch.sessions:
+            raise RuntimeError("open a session before warmup")
+        plan = WindowPlan(np.zeros(self.window, np.int64),
+                          np.zeros(self.window, np.int64))
+        jax.block_until_ready(self.farm.consume(self.farm.produce(plan)))
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _pack(queue):
+        """Flatten queued requests into lane arrays + per-lane owner map."""
+        sids, ctrs, owners = [], [], []
+        for ridx, (req, rctrs, _) in enumerate(queue):
+            sids.append(np.full(req.blocks, req.session_id, np.int64))
+            ctrs.append(rctrs.astype(np.int64))
+            owners.append(
+                np.stack([np.full(req.blocks, ridx, np.int64),
+                          np.arange(req.blocks, dtype=np.int64)], axis=1))
+        return (np.concatenate(sids), np.concatenate(ctrs),
+                np.concatenate(owners))
+
+    def flush(self) -> List[HHEResponse]:
+        """Run all queued requests through the farm; returns responses in
+        submission order."""
+        if not self._queue:
+            return []
+        queue, self._queue = self._queue, []
+        sids, ctrs, owners = self._pack(queue)
+
+        W = self.window
+        pad = (-len(sids)) % W
+        if pad:   # repeat the last real lane; outputs discarded
+            sids = np.concatenate([sids, np.full(pad, sids[-1])])
+            ctrs = np.concatenate([ctrs, np.full(pad, ctrs[-1])])
+
+        plans = [
+            WindowPlan(sids[i : i + W], ctrs[i : i + W],
+                       meta=(i, min(i + W, len(owners))))
+            for i in range(0, len(sids), W)
+        ]
+
+        l = self.batch.params.l
+        rows = [np.empty((req.blocks, l), np.uint32) for req, _, _ in queue]
+        remaining = [req.blocks for req, _, _ in queue]
+        done_t = [0.0] * len(queue)
+        for plan, z in self.farm.run(plans):
+            z = np.asarray(jax.block_until_ready(z))
+            t_now = time.perf_counter()
+            lo, hi = plan.meta
+            for j in range(hi - lo):
+                ridx, row = owners[lo + j]
+                rows[ridx][row] = z[j]
+                remaining[ridx] -= 1
+                if remaining[ridx] == 0:
+                    done_t[ridx] = t_now
+
+        mod = self.batch.params.mod
+        out = []
+        for (req, rctrs, t_sub), zreq, t_done in zip(queue, rows, done_t):
+            z = jnp.asarray(zreq)
+            if req.op == "keystream":
+                result = zreq
+            elif req.op == "encrypt":
+                result = np.asarray(mod.add(
+                    encode_fixed(mod, req.payload, req.delta), z))
+            else:  # decrypt
+                mq = mod.sub(jnp.asarray(req.payload, jnp.uint32), z)
+                result = np.asarray(decode_fixed(mod, mq, req.delta))
+            lat = t_done - t_sub
+            self.latencies.append(lat)
+            out.append(HHEResponse(request=req, result=result,
+                                   block_ctrs=rctrs, latency_s=lat))
+        return out
+
+    # ------------------------------------------------------------------
+    def latency_stats(self) -> dict:
+        if not self.latencies:
+            return {"count": 0}
+        lat = np.asarray(self.latencies)
+        return {
+            "count": int(lat.size),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "mean_ms": float(lat.mean() * 1e3),
+        }

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def _q8(x):
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
@@ -58,7 +60,7 @@ def compressed_pod_reduce(grads, err, mesh, axis: str = "pod"):
             return ghat, new_e
 
         spec = P()  # grads replicated across pods at this point
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec),
             check_vma=False,
         )(g, e)

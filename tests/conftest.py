@@ -6,6 +6,14 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running (full-lane interpret-mode Pallas sweeps); "
+        "excluded from the fast CI lap (scripts/ci.sh)",
+    )
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,297 @@
+"""Multi-stream keystream farm: batched-session API, double-buffered
+pipeline, serving loop, and streaming encrypted data plane.
+
+The headline contract (ISSUE acceptance): the batched path is bit-exact
+with the single-stream reference — CipherBatch.keystream equals
+per-session Cipher.keystream for every (nonce, counter) pair.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CipherBatch, KeystreamFarm, WindowPlan, plan_windows
+from repro.core.params import get_params
+from repro.data.encrypted import (
+    EncryptedSource,
+    FarmEncryptedSource,
+    encrypt_tokens,
+    make_decryptor,
+)
+from repro.data.pipeline import SyntheticLM, iterate_batches, make_source
+from repro.serve.hhe_loop import HHERequest, HHEServer
+
+FARM_PARAMS = ["hera-128a", "rubato-128s", "rubato-128l"]
+
+
+def _oracle(cb, sids, ctrs):
+    """Per-session single-stream Cipher keystream, lane order preserved."""
+    sids = np.asarray(sids)
+    ctrs = np.asarray(ctrs)
+    out = np.empty((len(sids), cb.params.l), np.uint32)
+    for s in np.unique(sids):
+        m = sids == s
+        out[m] = np.array(cb.session_cipher(int(s)).keystream(
+            jnp.asarray(ctrs[m], jnp.uint32)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CipherBatch: the bit-exactness acceptance criterion
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", FARM_PARAMS)
+def test_batched_keystream_bit_exact_with_single_stream(name):
+    """Randomized cross-check: lanes mixing sessions and counters in
+    arbitrary order must equal each session's own Cipher, element for
+    element."""
+    rng = np.random.default_rng(7)
+    cb = CipherBatch(name, seed=5)
+    cb.add_sessions(5)
+    sids = rng.integers(0, 5, 24)
+    ctrs = rng.integers(0, 2**20, 24)
+    z = np.array(cb.keystream(sids, ctrs))
+    np.testing.assert_array_equal(z, _oracle(cb, sids, ctrs))
+
+
+def test_batched_keystream_threefry_backend():
+    p = dataclasses.replace(
+        get_params("rubato-128s"), name="rubato-128s-tf", xof="threefry")
+    cb = CipherBatch(p, seed=5)
+    cb.add_sessions(3)
+    rng = np.random.default_rng(1)
+    sids = rng.integers(0, 3, 8)
+    ctrs = rng.integers(0, 2**16, 8)
+    z = np.array(cb.keystream(sids, ctrs))
+    np.testing.assert_array_equal(z, _oracle(cb, sids, ctrs))
+
+
+def test_batched_encrypt_decrypt_roundtrip():
+    cb = CipherBatch("rubato-128l", seed=2)
+    cb.add_sessions(3)
+    rng = np.random.default_rng(3)
+    sids = rng.integers(0, 3, 9)
+    ctrs = np.arange(9)
+    m = rng.uniform(-8, 8, (9, cb.params.l)).astype(np.float32)
+    ct = cb.encrypt(m, sids, ctrs, delta=4096.0)
+    back = np.array(cb.decrypt(ct, sids, ctrs, delta=4096.0))
+    assert np.abs(back - m).max() < 1 / 4096 + 1e-6
+
+
+def test_session_windows_are_disjoint():
+    cb = CipherBatch("hera-128a", seed=0)
+    s = cb.add_session()
+    w1, w2 = s.take_window(5), s.take_window(3)
+    assert w1.tolist() == [0, 1, 2, 3, 4]
+    assert w2.tolist() == [5, 6, 7]
+    assert s.next_ctr == 8
+
+
+def test_session_counter_space_exhaustion_raises():
+    """Counters past 2^16 would alias earlier XOF streams (two-time pad);
+    the cursor must refuse, not wrap."""
+    from repro.core.cipher import SESSION_CTR_LIMIT
+
+    cb = CipherBatch("hera-128a", seed=0)
+    s = cb.add_session()
+    s.take_window(SESSION_CTR_LIMIT - 1)
+    s.take_window(1)                      # exactly at the limit: fine
+    with pytest.raises(RuntimeError, match="counter space exhausted"):
+        s.take_window(1)
+
+
+def test_session_pool_growth_after_first_dispatch():
+    """Adding sessions after a jit'd dispatch must not serve stale tables."""
+    cb = CipherBatch("hera-128a", seed=4)
+    cb.add_session()
+    farm = KeystreamFarm(cb, consumer="jax")
+    plan = WindowPlan(np.zeros(4, np.int64), np.arange(4))
+    _ = np.array(farm.consume(farm.produce(plan)))
+    late = cb.add_session()
+    plan2 = WindowPlan(np.full(4, late.index, np.int64), np.arange(4))
+    z = np.array(farm.consume(farm.produce(plan2)))
+    want = np.array(
+        cb.session_cipher(late.index).keystream(
+            jnp.arange(4, dtype=jnp.uint32)))
+    np.testing.assert_array_equal(z, want)
+
+
+# ---------------------------------------------------------------------------
+# Farm pipeline
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("interleave", [True, False])
+def test_plan_windows_covers_all_pairs(interleave):
+    cb = CipherBatch("hera-128a", seed=1)
+    sess = cb.add_sessions(3)
+    plans = plan_windows(sess, blocks_per_session=4, window=6,
+                         interleave=interleave)
+    assert [p.lanes for p in plans] == [6, 6]
+    pairs = {
+        (int(s), int(c))
+        for p in plans
+        for s, c in zip(p.session_ids, p.block_ctrs)
+    }
+    assert pairs == {(s, c) for s in range(3) for c in range(4)}
+
+
+def test_farm_run_double_buffered_bit_exact():
+    cb = CipherBatch("rubato-128s", seed=9)
+    sess = cb.add_sessions(4)
+    farm = KeystreamFarm(cb, consumer="jax")
+    plans = plan_windows(sess, blocks_per_session=6, window=8)
+    seen = 0
+    for plan, z in farm.run(plans):
+        np.testing.assert_array_equal(
+            np.array(z), _oracle(cb, plan.session_ids, plan.block_ctrs))
+        seen += plan.lanes
+    assert seen == 24
+
+
+def test_farm_kernel_consumer_matches_jax_consumer():
+    cb = CipherBatch("hera-128a", seed=6)
+    cb.add_sessions(2)
+    plan = WindowPlan(np.array([0, 1, 1, 0]), np.array([0, 0, 1, 9]))
+    jax_farm = KeystreamFarm(cb, consumer="jax")
+    kern_farm = KeystreamFarm(cb, consumer="kernel", interpret=True)
+    zj = np.array(jax_farm.consume(jax_farm.produce(plan)))
+    zk = np.array(kern_farm.consume(kern_farm.produce(plan)))
+    np.testing.assert_array_equal(zj, zk)
+
+
+def test_farm_keystream_windowed_equals_single_window():
+    cb = CipherBatch("rubato-128s", seed=8)
+    cb.add_sessions(2)
+    sids = np.array([0, 1, 0, 1, 1, 0])
+    ctrs = np.array([0, 0, 1, 1, 2, 2])
+    farm = KeystreamFarm(cb, consumer="jax")
+    whole = np.array(farm.keystream(sids, ctrs))
+    chunked = np.array(farm.keystream(sids, ctrs, window=2))
+    np.testing.assert_array_equal(whole, chunked)
+
+
+# ---------------------------------------------------------------------------
+# Serving loop
+# ---------------------------------------------------------------------------
+def test_hhe_server_mixed_ragged_traffic():
+    cb = CipherBatch("rubato-128s", seed=12)
+    srv = HHEServer(cb, window=8, consumer="jax")
+    s0, s1 = srv.open_session(), srv.open_session()
+    rng = np.random.default_rng(0)
+    l = cb.params.l
+    m0 = rng.uniform(-5, 5, (11, l)).astype(np.float32)
+    srv.submit(HHERequest(session_id=s0.index, op="encrypt", payload=m0))
+    srv.submit(HHERequest(session_id=s1.index, op="keystream", blocks=3))
+    resp = srv.flush()
+    assert len(resp) == 2
+
+    # encrypt result decrypts with the session's own single-stream cipher
+    ci = cb.session_cipher(s0.index)
+    back = np.array(ci.decrypt(
+        jnp.asarray(resp[0].result),
+        jnp.asarray(resp[0].block_ctrs, jnp.uint32)))
+    assert np.abs(back - m0).max() < 0.1
+
+    # keystream result is the oracle keystream
+    ci1 = cb.session_cipher(s1.index)
+    want = np.array(ci1.keystream(
+        jnp.asarray(resp[1].block_ctrs, jnp.uint32)))
+    np.testing.assert_array_equal(resp[1].result, want)
+
+    stats = srv.latency_stats()
+    assert stats["count"] == 2 and stats["p99_ms"] >= stats["p50_ms"]
+
+
+def test_hhe_server_decrypt_roundtrip():
+    cb = CipherBatch("rubato-128s", seed=13)
+    srv = HHEServer(cb, window=4, consumer="jax")
+    s = srv.open_session()
+    rng = np.random.default_rng(2)
+    m = rng.uniform(-3, 3, (6, cb.params.l)).astype(np.float32)
+    # client encrypts with the session cipher on counters [0, 6)
+    ci = cb.session_cipher(s.index)
+    ct = np.array(ci.encrypt(m, jnp.arange(6, dtype=jnp.uint32)))
+    # server-side decrypt must consume the SAME counters: fresh session
+    # cursor starts at 0, so a 6-block decrypt request lines up
+    srv.submit(HHERequest(session_id=s.index, op="decrypt", payload=ct))
+    (resp,) = srv.flush()
+    assert np.abs(resp.result - m).max() < 0.1
+
+
+def test_hhe_server_counter_reservation():
+    cb = CipherBatch("hera-128a", seed=14)
+    srv = HHEServer(cb, window=4, consumer="jax")
+    s = srv.open_session()
+    c1 = srv.submit(HHERequest(session_id=s.index, blocks=5))
+    c2 = srv.submit(HHERequest(session_id=s.index, blocks=2))
+    assert c1.tolist() == [0, 1, 2, 3, 4] and c2.tolist() == [5, 6]
+    resp = srv.flush()
+    assert [r.result.shape[0] for r in resp] == [5, 2]
+
+
+def test_hhe_server_rejects_unknown_session():
+    srv = HHEServer(CipherBatch("hera-128a", seed=15), window=4,
+                    consumer="jax")
+    with pytest.raises(KeyError, match="unknown session"):
+        srv.submit(HHERequest(session_id=0, blocks=1))
+
+
+def test_farm_encrypt_decrypt_stream_roundtrip():
+    cb = CipherBatch("rubato-128s", seed=16)
+    sess = cb.add_sessions(2)
+    farm = KeystreamFarm(cb, consumer="jax")
+    rng = np.random.default_rng(4)
+    enc_plans = plan_windows(sess, blocks_per_session=3, window=6)
+    msgs = [rng.uniform(-4, 4, (p.lanes, cb.params.l)).astype(np.float32)
+            for p in enc_plans]
+    cts = [ct for _, ct in farm.encrypt_stream(zip(enc_plans, msgs))]
+    # decrypt over the SAME (session, ctr) plans
+    backs = [b for _, b in farm.decrypt_stream(zip(enc_plans, cts))]
+    for m, b in zip(msgs, backs):
+        assert np.abs(np.array(b) - m).max() < 0.1
+
+
+# ---------------------------------------------------------------------------
+# Encrypted data plane
+# ---------------------------------------------------------------------------
+def _tiny_cfg():
+    from repro.configs.base import get_config
+    return get_config("deepseek-7b", smoke=True)
+
+
+def test_farm_encrypted_source_matches_encrypt_tokens():
+    cfg = _tiny_cfg()
+    src = SyntheticLM(cfg, batch=2, seq_len=16, seed=0)
+    cb = CipherBatch("rubato-128l", seed=21)
+    fsrc = FarmEncryptedSource(src, cb, consumer="jax")
+    for step in (0, 3):
+        got = fsrc.batch_at(step)
+        want = encrypt_tokens(
+            fsrc.cipher, src.batch_at(step)["tokens"],
+            step * fsrc.blocks_per_batch())
+        np.testing.assert_array_equal(np.array(got["ct"]),
+                                      np.array(want["ct"]))
+        assert int(got["base_ctr"]) == int(want["base_ctr"])
+
+
+def test_farm_encrypted_source_stream_decrypts():
+    cfg = _tiny_cfg()
+    src = SyntheticLM(cfg, batch=2, seq_len=16, seed=0)
+    cb = CipherBatch("rubato-128l", seed=22)
+    fsrc = FarmEncryptedSource(src, cb, consumer="jax")
+    dec = make_decryptor(fsrc.cipher)
+    for step, enc in enumerate(iterate_batches(fsrc, n_steps=3)):
+        out = dec(enc)
+        np.testing.assert_array_equal(
+            np.array(out["tokens"]), src.batch_at(step)["tokens"])
+
+
+def test_iterate_batches_plain_source_fallback():
+    cfg = _tiny_cfg()
+    src = make_source(cfg, batch=2, seq_len=8, seed=1)
+    got = list(iterate_batches(src, start_step=2, n_steps=2))
+    np.testing.assert_array_equal(got[0]["tokens"],
+                                  src.batch_at(2)["tokens"])
+    np.testing.assert_array_equal(got[1]["tokens"],
+                                  src.batch_at(3)["tokens"])

@@ -1,9 +1,21 @@
-"""Unit + property tests for uint32 limb modular arithmetic."""
+"""Unit + property tests for uint32 limb modular arithmetic.
+
+hypothesis is an *optional* extra (see requirements.txt) — the image this
+repo targets is offline.  Property tests run under hypothesis when it is
+installed and are backed by always-on deterministic seeded-array versions
+covering the same properties plus the edge cases hypothesis tends to find
+(0, 1, q-1, limb boundaries).
+"""
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.crypto.modmath import Modulus, Q_HERA, Q_RUBATO
 
@@ -60,24 +72,44 @@ def test_matvec_small_vs_bignum(rng):
         np.testing.assert_array_equal(got, want.astype(np.uint32))
 
 
-@settings(max_examples=200, deadline=None)
-@given(
-    x=st.integers(0, Q_HERA.q - 1),
-    y=st.integers(0, Q_HERA.q - 1),
-)
-def test_mul_property_hera(x, y):
-    got = int(Q_HERA.mul(jnp.uint32(x), jnp.uint32(y)))
-    assert got == (x * y) % Q_HERA.q
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        x=st.integers(0, Q_HERA.q - 1),
+        y=st.integers(0, Q_HERA.q - 1),
+    )
+    def test_mul_property_hera(x, y):
+        got = int(Q_HERA.mul(jnp.uint32(x), jnp.uint32(y)))
+        assert got == (x * y) % Q_HERA.q
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        x=st.integers(0, Q_RUBATO.q - 1),
+        y=st.integers(0, Q_RUBATO.q - 1),
+    )
+    def test_mul_property_rubato(x, y):
+        got = int(Q_RUBATO.mul(jnp.uint32(x), jnp.uint32(y)))
+        assert got == (x * y) % Q_RUBATO.q
 
 
-@settings(max_examples=200, deadline=None)
-@given(
-    x=st.integers(0, Q_RUBATO.q - 1),
-    y=st.integers(0, Q_RUBATO.q - 1),
-)
-def test_mul_property_rubato(x, y):
-    got = int(Q_RUBATO.mul(jnp.uint32(x), jnp.uint32(y)))
-    assert got == (x * y) % Q_RUBATO.q
+@pytest.mark.parametrize("mod", MODS, ids=lambda m: str(m.q))
+def test_mul_property_deterministic(mod):
+    """Seeded-array stand-in for the hypothesis mul property: edge values
+    (0, 1, small, limb boundaries, q-1) crossed with each other and with a
+    seeded random sample."""
+    edges = np.array(
+        [0, 1, 2, 3, (1 << mod.L) - 1, 1 << mod.L,
+         mod.q // 2, mod.q - 2, mod.q - 1],
+        dtype=np.uint32,
+    )
+    rnd = np.random.default_rng(2024).integers(0, mod.q, 64, dtype=np.uint32)
+    vals = np.concatenate([edges, rnd])
+    x = np.repeat(vals, vals.size)
+    y = np.tile(vals, vals.size)
+    got = np.array(mod.mul(jnp.asarray(x), jnp.asarray(y)))
+    want = (x.astype(object) * y.astype(object)) % mod.q
+    np.testing.assert_array_equal(got, want.astype(np.uint32))
 
 
 def test_rejects_bad_moduli():
