@@ -4,7 +4,7 @@ Cell: Rubato Par-128L (and HERA Par-128a) stream-key generation for one
 encrypted train_4k batch — 256x4096 tokens / l elements per block =
 17,477 blocks — sharded across the 256-chip production mesh.  This is the
 cipher overlaid on the train_4k input shape: the data-plane work the pod
-must hide behind each training step (macro RNG-decoupling, DESIGN.md T3).
+must hide behind each training step (macro RNG-decoupling, docs/DESIGN.md T3).
 
     PYTHONPATH=src python -m benchmarks.cipher_roofline
 

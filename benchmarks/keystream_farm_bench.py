@@ -1,6 +1,8 @@
-"""Keystream-farm bench: decoupled-batched pipeline vs coupled baseline.
+"""Keystream-farm bench: decoupled-batched pipeline vs coupled baseline,
+per registered engine.
 
     PYTHONPATH=src python benchmarks/keystream_farm_bench.py [--quick]
+    PYTHONPATH=src python benchmarks/keystream_farm_bench.py --smoke   # CI
 
 Reproduces the paper's throughput-scaling claim in jax_pallas terms: the
 headline 6x comes from keeping the round pipeline saturated — decoupling
@@ -12,15 +14,20 @@ Measured here per cipher parameter set:
     `keystream_coupled` dispatch per session per window (XOF → sampling →
     rounds pinned in order by an optimization barrier, no cross-session
     batching, no overlap).
-  * **decoupled-batched** — the `KeystreamFarm` pipeline: all sessions'
-    lanes packed into one window, the jit'd XOF/sampler producer for
-    window i+1 dispatched before window i's consumer runs.
+  * **farm[<engine>]** — the `KeystreamFarm` pipeline with each consumer
+    engine from the `repro.core.engine` registry (--engines; default: the
+    "auto" engine plus "jax").  All sessions' lanes packed into one
+    window, the jit'd XOF/sampler producer for window i+1 dispatched
+    before window i's consumer runs.
 
-Reported: throughput (Melem/s of Z_q keystream) and per-window p50/p99
-latency, across a lane-count sweep (fixed session pool, growing
+Reported per engine: throughput (Melem/s of Z_q keystream) and per-window
+p50/p99 latency, across a lane-count sweep (fixed session pool, growing
 blocks-per-session) — throughput should rise monotonically with lane count
-until dispatch overhead is amortized (saturation), and the batched pipeline
-should dominate the coupled baseline at every size.
+until dispatch overhead is amortized (saturation), and the primary (auto)
+engine should dominate the coupled baseline at every size.
+
+--smoke runs a tiny sweep with no PASS/FAIL gating — the CI drift canary
+(scripts/ci.sh) that keeps every engine dispatching end-to-end.
 """
 
 import sys, pathlib
@@ -33,7 +40,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Cipher, CipherBatch, KeystreamFarm, WindowPlan
+from repro.core import (
+    CipherBatch,
+    KeystreamFarm,
+    WindowPlan,
+    engine_caps,
+    resolve_engine,
+)
 
 
 def _percentiles(ts):
@@ -95,18 +108,23 @@ def bench_farm(farm: KeystreamFarm, lanes: int, n_windows: int):
     return total, lat
 
 
-def run(name: str, lane_sweep, sessions: int, n_windows: int, reps: int):
+def run(name: str, lane_sweep, sessions: int, n_windows: int, reps: int,
+        engines):
+    """Bench one cipher: coupled baseline + one farm lap per engine.
+
+    Returns (coupled_thr, {engine: thr}) across the sweep for the gate."""
     batch = CipherBatch(name, seed=0)
     batch.add_sessions(sessions)
-    farm = KeystreamFarm(batch)     # consumer: kernel on TPU, jax elsewhere
+    farms = {e: KeystreamFarm(batch, engine=e) for e in engines}
     l = batch.params.l
-    print(f"\n{name}  (sessions={sessions}, consumer={farm.consumer}, "
+    print(f"\n{name}  (sessions={sessions}, engines={list(farms)}, "
           f"backend={jax.default_backend()}, windows={n_windows})")
-    print(f"  {'lanes':>6}  {'mode':18} {'Melem/s':>9} {'p50 ms':>8} "
-          f"{'p99 ms':>8}")
-    farm_thr, coupled_thr = [], []
-    modes = (("coupled/session", bench_coupled, batch),
-             ("decoupled-batched", bench_farm, farm))
+    print(f"  {'lanes':>6}  {'mode':24} {'Melem/s':>9} {'win p50 ms':>11} "
+          f"{'win p99 ms':>11}")
+    modes = [("coupled/session", bench_coupled, batch)]
+    modes += [(f"farm[{e}]", bench_farm, farm) for e, farm in farms.items()]
+    coupled_thr = []
+    farm_thr = {e: [] for e in farms}
     for lanes in lane_sweep:
         # best-of-reps, modes interleaved within each rep so machine-load
         # drift cannot systematically favor one mode
@@ -120,26 +138,36 @@ def run(name: str, lane_sweep, sessions: int, n_windows: int, reps: int):
         for label, _, _ in modes:
             thr, lat = best[label]
             p50, p99 = _percentiles(lat)
-            print(f"  {lanes:6d}  {label:18} {thr:9.2f} {p50:8.2f} "
-                  f"{p99:8.2f}")
+            print(f"  {lanes:6d}  {label:24} {thr:9.2f} {p50:11.2f} "
+                  f"{p99:11.2f}")
         coupled_thr.append(best["coupled/session"][0])
-        farm_thr.append(best["decoupled-batched"][0])
-    return np.asarray(coupled_thr), np.asarray(farm_thr)
+        for e in farms:
+            farm_thr[e].append(best[f"farm[{e}]"][0])
+    return np.asarray(coupled_thr), {e: np.asarray(t)
+                                     for e, t in farm_thr.items()}
 
 
-def check(name, lane_sweep, coupled, farm):
+def check(name, lane_sweep, coupled, farm, engine):
     ok_beat = bool(np.all(farm >= coupled))
     # monotonic up to saturation: strictly rising (3% tolerance) until the
     # peak, flat-to-noisy after
     sat = int(np.argmax(farm))
     ok_mono = all(farm[i + 1] > farm[i] * 0.97 for i in range(sat))
-    print(f"  {name}: decoupled-batched >= coupled at every lane count: "
+    print(f"  {name}: farm[{engine}] >= coupled at every lane count: "
           f"{'PASS' if ok_beat else 'FAIL'} "
           f"(min ratio {float(np.min(farm / coupled)):.2f}x)")
     print(f"  {name}: throughput monotonic up to saturation "
           f"(peak at lanes={lane_sweep[sat]}): "
           f"{'PASS' if ok_mono else 'FAIL'}")
     return ok_beat and ok_mono
+
+
+def default_engines():
+    """The primary (auto) engine plus 'jax' — the engines worth timing on
+    this backend.  --engines all adds every *available* registered engine
+    except interpret-mode Pallas (a correctness tool: seconds per window)."""
+    primary = resolve_engine("auto")
+    return list(dict.fromkeys([primary, "jax"]))
 
 
 def main():
@@ -149,20 +177,45 @@ def main():
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--lanes", type=int, nargs="*", default=None,
                     help="lane sweep (each a multiple of --sessions)")
+    ap.add_argument("--engines", nargs="*", default=None,
+                    help="farm consumer engines to sweep (default: auto + "
+                         "jax; 'all' = every available non-interpret "
+                         "engine)")
     ap.add_argument("--quick", action="store_true",
                     help="small sweep for smoke runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI canary: 2 sessions, 16 lanes, no "
+                         "PASS/FAIL gate")
     args = ap.parse_args()
+    if args.smoke:
+        args.sessions, args.windows, args.reps = 2, 4, 1
+        args.lanes = args.lanes or [16]
     # floor of 64 lanes: below ~8 blocks/session the windows are degenerate
     # (dispatch overhead dominates both modes and the comparison is noise)
     sweep = args.lanes or ([64, 256] if args.quick
                            else [64, 256, 1024])
     sweep = [s for s in sweep if s % args.sessions == 0] or [args.sessions]
 
+    engines = args.engines
+    if engines == ["all"]:
+        engines = [n for n, c in engine_caps().items()
+                   if c.available and n != "pallas-interpret"]
+    elif not engines:
+        engines = default_engines()
+    # gate on the auto engine when it's in the sweep (with --engines all
+    # the list is alphabetical — position 0 is not the primary)
+    auto = resolve_engine("auto")
+    primary = auto if auto in engines else engines[0]
+
     ok = True
     for name in ("hera-128a", "rubato-128l"):
         coupled, farm = run(name, sweep, args.sessions, args.windows,
-                            args.reps)
-        ok &= check(name, sweep, coupled, farm)
+                            args.reps, engines)
+        if not args.smoke:
+            ok &= check(name, sweep, coupled, farm[primary], primary)
+    if args.smoke:
+        print("\nsmoke lap complete (no gating)")
+        return 0
     print(f"\noverall: {'PASS' if ok else 'FAIL'}")
     return 0 if ok else 1
 

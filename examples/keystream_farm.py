@@ -80,7 +80,7 @@ def main():
             consts = nxt
         dt = (time.perf_counter() - t0) / 4
         print(f"  pipelined producer/consumer: {dt*1e3:8.2f} ms/batch "
-              f"(macro RNG-decoupling, DESIGN.md T3)")
+              f"(macro RNG-decoupling, docs/DESIGN.md T3)")
 
         # ---- multi-stream farm: many sessions, one batched dispatch ----
         batch = CipherBatch(name, seed=0)

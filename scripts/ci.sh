@@ -1,23 +1,34 @@
 #!/usr/bin/env bash
-# Tier-1 verify entry point (ROADMAP.md): fast lap first, then the slow
-# interpret-mode Pallas sweeps.  One command, two laps:
+# Tier-1 verify entry point (ROADMAP.md): engine-drift smoke first, then
+# the fast lap, then the slow interpret-mode Pallas sweeps.  One command,
+# three stages:
 #
-#   scripts/ci.sh          # fast lap + slow lap (the full tier-1 suite)
-#   scripts/ci.sh --fast   # fast lap only (developer inner loop)
+#   scripts/ci.sh          # smoke + fast lap + slow lap (full tier-1)
+#   scripts/ci.sh --fast   # smoke + fast lap (developer inner loop)
 #
-# The fast lap excludes tests marked `slow` (full-lane interpret-mode
-# kernel sweeps, see tests/conftest.py); everything else — including the
-# farm bit-exactness cross-checks — runs there.
+# The smoke stage fails fast on backend drift: the engine bit-exactness
+# matrix (every registered KeystreamEngine vs the reference, both ciphers,
+# all presets) plus a tiny end-to-end keystream_farm_bench lap that keeps
+# every default engine dispatching through the double-buffered farm.  The
+# fast lap excludes tests marked `slow` (full-lane interpret-mode kernel
+# sweeps, see tests/conftest.py); everything else — including the farm
+# bit-exactness cross-checks — runs there.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== fast lap (-m 'not slow') ==="
-python -m pytest -x -q -m "not slow"
+echo "=== smoke: engine matrix ==="
+python -m pytest -x -q tests/test_engine.py
+
+echo "=== smoke: keystream farm bench (tiny, no gating) ==="
+python benchmarks/keystream_farm_bench.py --smoke
+
+echo "=== fast lap (-m 'not slow'; engine matrix already ran in smoke) ==="
+python -m pytest -x -q -m "not slow" --ignore=tests/test_engine.py
 
 if [[ "${1:-}" == "--fast" ]]; then
-  echo "=== fast lap only (--fast); skipping slow lap ==="
+  echo "=== fast mode (--fast); skipping slow lap ==="
   exit 0
 fi
 

@@ -2,7 +2,7 @@
 v65536 — Mamba+attention 1:7 interleave (attention at slot 3 of each
 8-layer block), MoE 16 experts top-2 every other layer.  SSM: state 16
 (Jamba's Mamba-1 selective scan realized in the SSD formulation — see
-DESIGN.md §8).  bf16 params + 8-bit Adam.  Runs long_500k (sub-quadratic).
+docs/DESIGN.md §8).  bf16 params + 8-bit Adam.  Runs long_500k (sub-quadratic).
 [arXiv:2403.19887; hf]"""
 
 from repro.configs.base import LayerSpec, ModelConfig, register

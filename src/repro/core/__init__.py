@@ -12,6 +12,14 @@ from repro.core.params import (
     get_params,
 )
 from repro.core.cipher import Cipher, CipherBatch, StreamSession, make_cipher
+from repro.core.engine import (
+    EngineCaps,
+    KeystreamEngine,
+    engine_caps,
+    make_engine,
+    registered_engines,
+    resolve_engine,
+)
 from repro.core.farm import KeystreamFarm, WindowPlan, plan_windows
 from repro.core.hera import hera_stream_key
 from repro.core.rubato import rubato_stream_key
@@ -27,6 +35,12 @@ __all__ = [
     "Cipher",
     "CipherBatch",
     "StreamSession",
+    "EngineCaps",
+    "KeystreamEngine",
+    "engine_caps",
+    "make_engine",
+    "registered_engines",
+    "resolve_engine",
     "KeystreamFarm",
     "WindowPlan",
     "plan_windows",

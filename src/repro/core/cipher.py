@@ -7,7 +7,9 @@ Producer/consumer split (the paper's T3, "RNG decoupling"):
     NOT on the key or message, so it can be dispatched concurrently with
     the previous batch's compute (async dispatch on TPU) or precomputed.
   * :meth:`Cipher.keystream` — the *consumer*: the round pipeline, taking
-    the constants as an explicit input.
+    the constants as an explicit input.  Consumers are pluggable
+    :mod:`repro.core.engine` backends; a Cipher binds the eager ``ref``
+    engine by default (the oracle all other engines must match).
   * :meth:`Cipher.keystream_coupled` — paper's D1-style baseline: a single
     computation that serializes XOF → sampling → rounds (for benchmarks).
 
@@ -36,9 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hera import hera_stream_key
+from repro.core.engine import EngineSpec, make_engine
 from repro.core.params import CipherParams, get_params
-from repro.core.rubato import rubato_stream_key
 from repro.crypto.aes import aes128_key_expand
 from repro.crypto.sampler import (
     DGaussTable,
@@ -73,14 +74,6 @@ def _constants_from_words(params: CipherParams, words, gauss: Optional[DGaussTab
     return {"rc": rc, "noise": noise}
 
 
-def _stream_key(params: CipherParams, key, rc, noise=None):
-    """Shared consumer: round pipeline on explicit constants."""
-    if params.kind == "hera":
-        rc = rc.reshape(rc.shape[:-1] + (params.n_arks, params.n))
-        return hera_stream_key(params, key, rc)
-    return rubato_stream_key(params, key, rc, noise)
-
-
 def encode_fixed(mod, m_real, delta: float):
     """Fixed-point encode: m_q = round(m·Δ) centered into Z_q.
 
@@ -102,6 +95,7 @@ class Cipher:
     params: CipherParams
     key: jnp.ndarray          # (n,) uint32 in Z_q — the symmetric secret
     nonce: np.ndarray         # (16,) uint8, public
+    engine: EngineSpec = "ref"   # consumer backend (see repro.core.engine)
 
     def __post_init__(self):
         self.key = jnp.asarray(self.key, dtype=jnp.uint32)
@@ -111,6 +105,9 @@ class Cipher:
         self._gauss = (
             DGaussTable.build(self.params.sigma) if self.params.n_noise else None
         )
+        # the single-stream default is the eager reference engine — the
+        # oracle everything else (farm engines, kernels) is checked against
+        self._engine = make_engine(self.engine, self.params, self.key)
 
     # ---------------- producer (decoupled RNG) ---------------------------
     def round_constant_stream(self, block_ctrs):
@@ -125,7 +122,7 @@ class Cipher:
 
     # ---------------- consumer (round pipeline) --------------------------
     def keystream_from_constants(self, rc, noise=None):
-        return _stream_key(self.params, self.key, rc, noise)
+        return self._engine.keystream_from_constants(rc, noise)
 
     def keystream(self, block_ctrs, constants=None):
         """(lanes,) block counters -> (lanes, l) keystream."""
@@ -160,7 +157,8 @@ class Cipher:
         return self.decode(self.params.mod.sub(c, z), delta)
 
 
-def make_cipher(name: str, key=None, nonce=None, seed: int = 0) -> Cipher:
+def make_cipher(name: str, key=None, nonce=None, seed: int = 0,
+                engine: EngineSpec = "ref") -> Cipher:
     """Convenience constructor; random key/nonce from ``seed`` if omitted."""
     p = get_params(name)
     rng = np.random.default_rng(seed)
@@ -168,7 +166,7 @@ def make_cipher(name: str, key=None, nonce=None, seed: int = 0) -> Cipher:
         key = rng.integers(1, p.mod.q, size=(p.n,), dtype=np.uint32)
     if nonce is None:
         nonce = rng.integers(0, 256, size=(16,), dtype=np.uint8)
-    return Cipher(p, jnp.asarray(key, jnp.uint32), nonce)
+    return Cipher(p, jnp.asarray(key, jnp.uint32), nonce, engine)
 
 
 # ==========================================================================
@@ -190,15 +188,22 @@ class StreamSession:
     consecutive disjoint counter ranges, so keystream reuse cannot happen
     within a session, and distinct nonces keep sessions independent.
     Exhausting the counter space (SESSION_CTR_LIMIT) raises instead of
-    silently wrapping into keystream reuse.
+    silently wrapping into keystream reuse — long-lived streams rotate to
+    a fresh nonce via :meth:`CipherBatch.rotate_session` (``generation``
+    counts rotations).
     """
 
     index: int
     nonce: np.ndarray          # (16,) uint8, public
     next_ctr: int = 0
+    generation: int = 0        # bumped by CipherBatch.rotate_session
 
     def __post_init__(self):
         self.nonce = np.asarray(self.nonce, dtype=np.uint8).reshape(16)
+
+    def remaining(self) -> int:
+        """Counters left before this (nonce, generation) is exhausted."""
+        return SESSION_CTR_LIMIT - self.next_ctr
 
     def take_window(self, n_blocks: int) -> np.ndarray:
         """Reserve the next ``n_blocks`` counters; advances the cursor."""
@@ -206,8 +211,7 @@ class StreamSession:
             raise RuntimeError(
                 f"session {self.index} counter space exhausted "
                 f"({self.next_ctr} + {n_blocks} > {SESSION_CTR_LIMIT}); "
-                "open a new session (fresh nonce) instead of reusing "
-                "keystream"
+                "rotate_session (fresh nonce) instead of reusing keystream"
             )
         ctrs = np.arange(
             self.next_ctr, self.next_ctr + n_blocks, dtype=np.uint32
@@ -231,7 +235,8 @@ class CipherBatch:
     device, so adding sessions never retriggers tracing.
     """
 
-    def __init__(self, params: CipherParams | str, key=None, seed: int = 0):
+    def __init__(self, params: CipherParams | str, key=None, seed: int = 0,
+                 engine: EngineSpec = "ref"):
         if isinstance(params, str):
             params = get_params(params)
         self.params = params
@@ -246,12 +251,23 @@ class CipherBatch:
         self._gauss = (
             DGaussTable.build(params.sigma) if params.n_noise else None
         )
+        self._engine = self.make_engine(engine)
         self.sessions: List[StreamSession] = []
         # host-side per-session XOF material, stacked lazily into tables
         self._rk_host: List[np.ndarray] = []      # aes: (11, 16) u8 each
         self._root_host: list = []                # threefry: key each
         self._tables = None                       # device tables, lazy
         self._producer = None                     # built once, pool-agnostic
+
+    def make_engine(self, spec: EngineSpec = "auto", *, mesh=None,
+                    axis: str = "data", interpret=None):
+        """Bind a consumer engine to this pool's (params, key).
+
+        The farm, serving loop, and data plane all get their consumers
+        here, so backend policy stays in `repro.core.engine`.
+        """
+        return make_engine(spec, self.params, self.key, mesh=mesh,
+                           axis=axis, interpret=interpret)
 
     # ---------------- session pool ---------------------------------------
     def add_session(self, nonce=None) -> StreamSession:
@@ -268,6 +284,30 @@ class CipherBatch:
 
     def add_sessions(self, count: int) -> List[StreamSession]:
         return [self.add_session() for _ in range(count)]
+
+    def rotate_session(self, session_id: int, nonce=None) -> StreamSession:
+        """Retire a session's (nonce, counter) space: fresh nonce, cursor 0.
+
+        The replacement keeps the session's index (lane ids stay stable for
+        long-lived clients) and bumps ``generation``; its XOF table row is
+        rebuilt in place, so table *shapes* are unchanged and no producer
+        retrace happens.  Any keystream still pending against the old nonce
+        must be materialized before rotating (serve/hhe_loop.py flushes its
+        queue first) — after rotation the pool can no longer regenerate the
+        old stream.
+        """
+        old = self.sessions[session_id]
+        if nonce is None:
+            nonce = self._rng.integers(0, 256, size=(16,), dtype=np.uint8)
+        s = StreamSession(index=session_id, nonce=nonce,
+                          generation=old.generation + 1)
+        self.sessions[session_id] = s
+        if self.params.xof == "aes":
+            self._rk_host[session_id] = aes128_key_expand(s.nonce)
+        else:
+            self._root_host[session_id] = threefry_root_key(s.nonce)
+        self._tables = None
+        return s
 
     def __len__(self) -> int:
         return len(self.sessions)
@@ -334,7 +374,7 @@ class CipherBatch:
 
     # ---------------- consumer (shared key, round pipeline) ---------------
     def keystream_from_constants(self, rc, noise=None):
-        return _stream_key(self.params, self.key, rc, noise)
+        return self._engine.keystream_from_constants(rc, noise)
 
     def keystream(self, session_ids, block_ctrs, constants=None):
         """(lanes,) (session, ctr) pairs -> (lanes, l) keystream."""

@@ -1,0 +1,376 @@
+"""Unified keystream backend layer: the `KeystreamEngine` registry.
+
+The paper's accelerator is ONE datapath (vectorized modules, decoupled RNG,
+FIFO-overlapped rounds); this module makes the reproduction expose it the
+same way.  Every consumer that turns (key, round constants[, noise]) into
+keystream — the pure-jnp reference, the batched-XLA pipeline, the fused
+Pallas kernel in compiled or interpret mode, the shard_map lane-sharded
+kernel — is a registered engine with declared capabilities, and *all*
+backend policy ("auto" selection, legacy `consumer`/`interpret` flag
+spellings, availability checks) lives here and nowhere else.
+
+Registered engines (see `registered_engines()` / `engine_caps()`):
+
+  * ``ref``              — eager pure-jnp round pipeline.  The bit-exactness
+                           oracle; always available; no jit.
+  * ``jax``              — the same pipeline under `jax.jit` (batched XLA).
+                           The CPU/GPU fast path and the "auto" fallback.
+  * ``pallas``           — the fused Pallas kernel, compiled.  TPU only.
+  * ``pallas-interpret`` — the fused kernel in interpret mode.  Correctness
+                           tool (slow!), available everywhere; capped lanes.
+  * ``sharded``          — the fused kernel lane-sharded over a mesh data
+                           axis via shard_map (multi-device farm path).
+                           Needs a mesh.
+
+Usage:
+
+    eng = make_engine("auto", params, key)          # policy decided HERE
+    z = eng.keystream_from_constants(rc, noise)     # or eng(constants_dict)
+
+`core/farm.py`, `serve/hhe_loop.py`, `data/encrypted.py`,
+`launch/serve.py`, and `benchmarks/keystream_farm_bench.py` all route
+keystream materialization through engine instances; `core/cipher.py` binds
+a default ``ref`` engine per Cipher/CipherBatch.  docs/DESIGN.md §7
+documents the layer.
+
+All engines are bit-exact with ``ref`` by contract (tests/test_engine.py
+asserts the full engine × cipher-preset × noise matrix).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple, Type, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import CipherParams
+from repro.kernels.keystream.keystream import BLK
+from repro.kernels.keystream.ops import (
+    keystream_kernel_apply,
+    keystream_kernel_sharded,
+)
+from repro.kernels.keystream.ref import keystream_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCaps:
+    """What one backend can do, queried without instantiating it.
+
+    ``available`` answers "can this engine run on the current JAX backend /
+    with the given mesh?"; ``reason`` says why not when it can't.
+    ``max_lanes`` is a practical per-call lane bound (None = unbounded) —
+    exceeded lanes raise instead of silently running for hours (the
+    interpret-mode trap).
+    """
+
+    name: str
+    description: str
+    available: bool
+    reason: str = ""
+    supports_noise: bool = True
+    max_lanes: Optional[int] = None
+    jitted: bool = True
+
+
+class KeystreamEngine:
+    """One way to materialize keystream from (key, constants).
+
+    Subclasses implement `_run(rc, noise)`; the base class owns capability
+    validation so every backend enforces the same contract.  Engines are
+    bound to (params, key) at construction — the farm's consumer, a
+    cipher's default consumer, and the bench's per-engine lap are all just
+    instances of these classes.
+    """
+
+    name: str = "?"
+
+    def __init__(self, params: CipherParams, key, *, mesh=None,
+                 axis: str = "data", interpret: Optional[bool] = None):
+        self.params = params
+        self.key = jnp.asarray(key, jnp.uint32)
+        self.mesh = mesh
+        self.axis = axis
+        self.interpret = interpret   # only 'sharded' consults it (None=auto)
+        self.caps = type(self).query_caps(mesh=mesh, axis=axis)
+
+    # -- capability reporting (class-level: no instance needed) ------------
+    @classmethod
+    def query_caps(cls, *, mesh=None, axis: str = "data") -> EngineCaps:
+        raise NotImplementedError
+
+    # -- the consumer ------------------------------------------------------
+    def _run(self, rc, noise):
+        raise NotImplementedError
+
+    def keystream_from_constants(self, rc, noise=None):
+        """rc: (lanes, n_round_constants) u32; noise: (lanes, l) i32 | None.
+        Returns (lanes, l) u32 keystream — bit-exact across engines."""
+        if noise is not None and not self.caps.supports_noise:
+            raise ValueError(f"engine {self.name!r} does not support noise")
+        if self.caps.max_lanes is not None and rc.shape[0] > self.caps.max_lanes:
+            raise ValueError(
+                f"engine {self.name!r} caps lanes at {self.caps.max_lanes} "
+                f"per call (got {rc.shape[0]}); window the request or pick "
+                "an uncapped engine"
+            )
+        return self._run(rc, noise)
+
+    def __call__(self, constants: dict):
+        """Consume a producer's dict(rc=..., noise=...) directly."""
+        return self.keystream_from_constants(
+            constants["rc"], constants.get("noise")
+        )
+
+    def __repr__(self):
+        return f"<KeystreamEngine {self.name} params={self.params.name}>"
+
+
+# ==========================================================================
+# Registry
+# ==========================================================================
+_REGISTRY: Dict[str, Type[KeystreamEngine]] = {}
+
+
+def register_engine(cls: Type[KeystreamEngine]) -> Type[KeystreamEngine]:
+    """Class decorator: add an engine to the registry under ``cls.name``."""
+    if cls.name in _REGISTRY:
+        raise ValueError(f"engine {cls.name!r} already registered")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def registered_engines() -> Tuple[str, ...]:
+    """Names of all registered engines (available or not), sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def engine_caps(*, mesh=None, axis: str = "data") -> Dict[str, EngineCaps]:
+    """Capability report for every registered engine."""
+    return {
+        name: cls.query_caps(mesh=mesh, axis=axis)
+        for name, cls in sorted(_REGISTRY.items())
+    }
+
+
+def resolve_engine(spec: str, *, interpret: Optional[bool] = None,
+                   mesh=None) -> str:
+    """THE single place backend auto-selection lives.
+
+    ``spec`` is an engine name, "auto", or a legacy farm consumer spelling:
+
+      * "auto"   -> the fused kernel on TPU ("sharded" when a mesh is
+        given, else "pallas"), "jax" elsewhere;
+      * "kernel" -> the fused kernel: "sharded" when a mesh is given,
+        "pallas" when compiled Pallas can run (TPU, or interpret
+        explicitly False), else "pallas-interpret" — exactly the old
+        KeystreamFarm(consumer="kernel", mesh=..., interpret=...)
+        behavior;
+      * "pallas" with interpret=True -> "pallas-interpret".
+
+    Unknown names raise ValueError listing the registered engines.
+    """
+    if spec == "auto":
+        spec = "kernel" if jax.default_backend() == "tpu" else "jax"
+    if spec == "kernel":  # legacy farm consumer name
+        on_tpu = jax.default_backend() == "tpu"
+        if mesh is not None:
+            spec = "sharded"
+        elif interpret is False or (interpret is None and on_tpu):
+            spec = "pallas"
+        else:
+            spec = "pallas-interpret"
+    elif spec == "pallas" and interpret is True:
+        spec = "pallas-interpret"
+    if spec not in _REGISTRY:
+        raise ValueError(
+            f"unknown keystream engine {spec!r}; registered engines: "
+            f"{list(registered_engines())} (plus 'auto' and the legacy "
+            "'kernel' alias)"
+        )
+    return spec
+
+
+EngineSpec = Union[str, KeystreamEngine]
+
+
+def make_engine(spec: EngineSpec, params: CipherParams, key, *, mesh=None,
+                axis: str = "data",
+                interpret: Optional[bool] = None) -> KeystreamEngine:
+    """Resolve ``spec`` and bind it to (params, key).
+
+    ``spec`` may already be a KeystreamEngine instance (passed through —
+    the pluggable-consumer path), but only if it is bound to the SAME
+    (params, key): a consumer keyed differently from the producer would
+    emit keystream no session cipher can match, silently.  Raises
+    RuntimeError when the resolved engine is not available here (e.g.
+    "pallas" off-TPU), with the reason.
+    """
+    if isinstance(spec, KeystreamEngine):
+        if spec.params != params or not bool(
+                (spec.key == jnp.asarray(key, jnp.uint32)).all()):
+            raise ValueError(
+                f"engine {spec.name!r} is bound to different (params, key) "
+                f"(engine has {spec.params.name}); rebind it with "
+                "make_engine for this pool"
+            )
+        return spec
+    name = resolve_engine(spec, interpret=interpret, mesh=mesh)
+    cls = _REGISTRY[name]
+    caps = cls.query_caps(mesh=mesh, axis=axis)
+    if not caps.available:
+        raise RuntimeError(
+            f"keystream engine {name!r} unavailable: {caps.reason}"
+        )
+    return cls(params, key, mesh=mesh, axis=axis, interpret=interpret)
+
+
+# ==========================================================================
+# Backends
+# ==========================================================================
+@register_engine
+class RefEngine(KeystreamEngine):
+    """Eager pure-jnp round pipeline — the oracle every backend must match."""
+
+    name = "ref"
+
+    @classmethod
+    def query_caps(cls, *, mesh=None, axis="data") -> EngineCaps:
+        return EngineCaps(
+            name=cls.name,
+            description="eager pure-jnp reference (bit-exactness oracle)",
+            available=True,
+            jitted=False,
+        )
+
+    def _run(self, rc, noise):
+        return keystream_ref(self.params, self.key, rc, noise)
+
+
+@register_engine
+class JaxEngine(KeystreamEngine):
+    """The reference pipeline under jax.jit: one fused XLA program."""
+
+    name = "jax"
+
+    def __init__(self, params, key, *, mesh=None, axis="data",
+                 interpret=None):
+        super().__init__(params, key, mesh=mesh, axis=axis,
+                         interpret=interpret)
+        # params via partial => static; key/rc/noise traced (noise=None is a
+        # valid empty pytree, so one jit covers both arities)
+        self._fn = jax.jit(functools.partial(keystream_ref, params))
+
+    @classmethod
+    def query_caps(cls, *, mesh=None, axis="data") -> EngineCaps:
+        return EngineCaps(
+            name=cls.name,
+            description="batched XLA round pipeline (CPU/GPU fast path)",
+            available=True,
+        )
+
+    def _run(self, rc, noise):
+        return self._fn(self.key, rc, noise)
+
+
+class _PallasBase(KeystreamEngine):
+    _interpret: Optional[bool] = None   # None = kernel-side auto
+
+    def _run(self, rc, noise):
+        if noise is not None and not self.params.n_noise:
+            noise = None    # kernel's 2-input variant
+        return keystream_kernel_apply(
+            self.params, self.key, rc, noise, interpret=self._interpret
+        )
+
+
+@register_engine
+class PallasEngine(_PallasBase):
+    """The fused Pallas kernel, compiled — the paper's datapath on TPU."""
+
+    name = "pallas"
+    _interpret = False
+
+    @classmethod
+    def query_caps(cls, *, mesh=None, axis="data") -> EngineCaps:
+        backend = jax.default_backend()
+        ok = backend == "tpu"
+        return EngineCaps(
+            name=cls.name,
+            description="fused Pallas kernel, compiled (TPU)",
+            available=ok,
+            reason="" if ok else (
+                f"compiled Pallas needs a TPU backend (have {backend!r}); "
+                "use 'pallas-interpret' for correctness or 'jax' for speed"
+            ),
+        )
+
+
+@register_engine
+class PallasInterpretEngine(_PallasBase):
+    """The fused kernel in interpret mode: runs anywhere, slowly.
+
+    A correctness tool, not a fast path — lanes are capped so a stray
+    "auto" can never turn a serving window into an hour-long interpret run.
+    """
+
+    name = "pallas-interpret"
+    _interpret = True
+    MAX_LANES = 64 * BLK
+
+    @classmethod
+    def query_caps(cls, *, mesh=None, axis="data") -> EngineCaps:
+        return EngineCaps(
+            name=cls.name,
+            description="fused Pallas kernel, interpret mode (slow, "
+                        "portable correctness tool)",
+            available=True,
+            max_lanes=cls.MAX_LANES,
+            jitted=False,
+        )
+
+
+@register_engine
+class ShardedEngine(KeystreamEngine):
+    """Fused kernel with the lane axis shard_map'd over ``mesh[axis]``.
+
+    Key replicated, constants split, no cross-device traffic.  On a 1-wide
+    axis this degrades to the plain kernel apply (same numerics), so the
+    only hard requirement is a mesh that names the axis.
+    """
+
+    name = "sharded"
+
+    @classmethod
+    def query_caps(cls, *, mesh=None, axis="data") -> EngineCaps:
+        if mesh is None:
+            return EngineCaps(
+                name=cls.name,
+                description="shard_map lane-sharded fused kernel",
+                available=False,
+                reason="needs a mesh (pass mesh=/axis= to make_engine)",
+            )
+        if axis not in mesh.shape:
+            return EngineCaps(
+                name=cls.name,
+                description="shard_map lane-sharded fused kernel",
+                available=False,
+                reason=f"mesh has no axis {axis!r} (axes: "
+                       f"{tuple(mesh.shape)})",
+            )
+        return EngineCaps(
+            name=cls.name,
+            description=f"shard_map lane-sharded fused kernel "
+                        f"({mesh.shape[axis]} device(s) on {axis!r})",
+            available=True,
+        )
+
+    def _run(self, rc, noise):
+        if noise is not None and not self.params.n_noise:
+            noise = None
+        return keystream_kernel_sharded(
+            self.params, self.key, rc, noise, mesh=self.mesh,
+            axis=self.axis, interpret=self.interpret
+        )

@@ -14,11 +14,11 @@ target:
     buffering: the jit'd producer for window i+1 is *dispatched* (async on
     TPU) before the consumer of window i runs, so XOF/sampling for the next
     window hides behind the current window's round computation;
-  * the consumer is selectable: the fused Pallas kernel
-    (`kernels/keystream`), optionally lane-sharded across a mesh data axis
-    with shard_map, or the pure-JAX round pipeline (the CPU-friendly
-    default — interpret-mode Pallas is a correctness tool, not a fast
-    path).
+  * the consumer is a pluggable :class:`repro.core.engine.KeystreamEngine`
+    — any registered backend (ref / jax / pallas / pallas-interpret /
+    sharded) or a pre-bound engine instance; "auto" and the legacy
+    `consumer="kernel"` spelling resolve in `repro.core.engine`, the one
+    place backend policy lives.
 
 Fixed window sizes keep every producer/consumer call shape-stable, so the
 farm compiles exactly two XLA programs regardless of how many sessions or
@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cipher import CipherBatch, decode_fixed, encode_fixed
-from repro.kernels.keystream.ops import keystream_kernel_sharded
+from repro.core.engine import EngineSpec
 
 
 @dataclasses.dataclass
@@ -88,39 +88,31 @@ def plan_windows(sessions, blocks_per_session: int, window: int,
 class KeystreamFarm:
     """Double-buffered producer→consumer pipeline over a CipherBatch pool.
 
-    consumer:
-      * "jax"    — pure-JAX round pipeline (jit'd); CPU default.
-      * "kernel" — fused Pallas kernel (compiled on TPU, interpret
-                   elsewhere); lane-sharded over ``mesh[axis]`` when a
-                   multi-device mesh is given.
-      * "auto"   — "kernel" on TPU backends, "jax" otherwise.
+    ``engine`` selects the consumer backend: any name registered in
+    `repro.core.engine` ("ref", "jax", "pallas", "pallas-interpret",
+    "sharded"), "auto", or an already-bound :class:`KeystreamEngine`
+    instance (the pluggable-consumer path).  ``consumer`` is the legacy
+    spelling of the same argument and still accepts "kernel" (+ the
+    ``interpret`` flag); both resolve through
+    :func:`repro.core.engine.resolve_engine`, so unknown names raise a
+    ValueError listing the registered engines.
     """
 
-    def __init__(self, batch: CipherBatch, consumer: str = "auto",
-                 mesh=None, axis: str = "data",
-                 interpret: Optional[bool] = None):
-        if consumer == "auto":
-            consumer = "kernel" if jax.default_backend() == "tpu" else "jax"
-        if consumer not in ("jax", "kernel"):
-            raise ValueError(f"unknown consumer {consumer!r}")
+    def __init__(self, batch: CipherBatch, engine: Optional[EngineSpec] = None,
+                 *, consumer: Optional[str] = None, mesh=None,
+                 axis: str = "data", interpret: Optional[bool] = None):
+        if engine is not None and consumer is not None:
+            raise ValueError("pass engine= or the legacy consumer=, not both")
+        spec = consumer if engine is None else engine
+        if spec is None:
+            spec = "auto"
         self.batch = batch
-        self.consumer = consumer
+        self.engine = batch.make_engine(spec, mesh=mesh, axis=axis,
+                                        interpret=interpret)
+        self.consumer = self.engine.name     # backwards-compatible attr
         self.mesh = mesh
         self.axis = axis
-        self.interpret = interpret
         self._producer = jax.jit(batch.make_producer_fn())
-        if consumer == "jax":
-            self._consumer = jax.jit(batch.keystream_from_constants)
-        else:
-            p, key = batch.params, batch.key
-
-            def consume(rc, noise=None):
-                return keystream_kernel_sharded(
-                    p, key, rc, noise, mesh=mesh, axis=axis,
-                    interpret=interpret,
-                )
-
-            self._consumer = consume
 
     # ------------------------------------------------------------------
     def produce(self, plan: WindowPlan):
@@ -130,10 +122,8 @@ class KeystreamFarm:
         )
 
     def consume(self, constants):
-        """Run the round-pipeline consumer on produced constants."""
-        if constants["noise"] is None:
-            return self._consumer(constants["rc"])
-        return self._consumer(constants["rc"], constants["noise"])
+        """Run the engine consumer on produced constants."""
+        return self.engine(constants)
 
     # ------------------------------------------------------------------
     def run(self, plans: Iterable[WindowPlan]

@@ -21,7 +21,7 @@ def hera_stream_key(params: CipherParams, key, rc, ic=None):
     key: (..., n) uint32 in Z_q (broadcastable against rc's batch dims).
     rc:  (..., r+1, n) uint32 round constants (from the XOF producer — the
          decoupled-RNG interface: constants are an *input*, so the producer
-         runs concurrently; see DESIGN.md T3).
+         runs concurrently; see docs/DESIGN.md T3).
     Returns (..., n) uint32 keystream block.
     """
     if rc.shape[-2] != params.n_arks or rc.shape[-1] != params.n:

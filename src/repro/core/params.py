@@ -4,7 +4,7 @@ Paper-benchmarked sets: HERA Par-128a (n=16, r=5, ~28-bit q, 96 round
 constants) and Rubato Par-128L (n=64, r=2, ~25-bit q, 188 = 64+64+60 round
 constants, truncation to l=60, AGN noise).  Moduli are Solinas primes of the
 matching bit width (the paper does not list exact production moduli); the
-mixing matrix for v != 4 is our documented circulant stand-in (DESIGN.md §8).
+mixing matrix for v != 4 is our documented circulant stand-in (docs/DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -38,7 +38,7 @@ class CipherParams:
             raise ValueError(f"unknown cipher kind {self.kind!r}")
         if self.kind == "hera" and self.l != self.n:
             raise ValueError("HERA does not truncate")
-        # matvec accumulation bound (DESIGN.md §2): v partial sums of < q
+        # matvec accumulation bound (docs/DESIGN.md §2): v partial sums of < q
         if self.v * 3 * self.mod.q >= 2**33:
             raise ValueError("v*q too large for shift-add accumulation")
 

@@ -1,7 +1,7 @@
 """Cryptographic substrate for the Presto HHE cipher framework.
 
 Everything here is uint32-native (no 64-bit integers) so that it lowers
-cleanly to TPU VPU lanes — see DESIGN.md §2 "Modular arithmetic without
+cleanly to TPU VPU lanes — see docs/DESIGN.md §2 "Modular arithmetic without
 64-bit".
 """
 

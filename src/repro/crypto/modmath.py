@@ -1,7 +1,7 @@
 """uint32-native modular arithmetic over Z_q for q < 2^28.
 
 TPU has no native 64-bit integer multiply, so we never form a product wider
-than 32 bits.  The scheme (DESIGN.md §2):
+than 32 bits.  The scheme (docs/DESIGN.md §2):
 
   * operands are split into L-bit limbs with L = ceil(qbits / 2) <= 14, so
     every partial product is < 2^(2L) <= 2^28 < 2^31;

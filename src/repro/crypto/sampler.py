@@ -7,7 +7,7 @@ JAX needs static shapes, so rejection sampling uses a fixed overdraw of
 For the shipped Solinas primes the per-candidate rejection probability is
 (2^bits - q) / 2^bits < 2.5e-4, so P(all 4 rejected) < 4e-15 per constant —
 negligible, and if it ever happens we fall back to the (infinitesimally
-biased) last candidate mod q.  DESIGN.md §8 records this deviation from the
+biased) last candidate mod q.  docs/DESIGN.md §8 records this deviation from the
 spec's unbounded loop.
 """
 

@@ -9,7 +9,7 @@ Two backends:
     threefry2x32 PRF (add/xor/rotate only; no byte tables, no gathers).
     Same interface, different stream.  See EXPERIMENTS.md §Perf.
 
-Convention (documented in DESIGN.md §8): the XOF for block counter ``ctr``
+Convention (documented in docs/DESIGN.md §8): the XOF for block counter ``ctr``
 under public nonce ``nc`` (128-bit) is
     AES-CTR(key = nc, counter_block = nc[0:12] || (ctr << 16 | i))
 i.e. each cipher block counter owns a 2^16-block counter subspace, giving

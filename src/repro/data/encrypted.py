@@ -14,7 +14,7 @@ Token encryption is exact: token ids are Z_q elements directly (vocab < q).
 on-device decryption function the train step fuses in (see
 train_loop.make_train_step(decryptor=...)).  Keystream generation for batch
 t+1 is dispatchable concurrently with step t (macro-level RNG decoupling,
-DESIGN.md §6).
+docs/DESIGN.md §6).
 
 `FarmEncryptedSource` is the batched-session upgrade: it draws keystream
 from a `CipherBatch` session through the double-buffered `KeystreamFarm`
@@ -121,17 +121,21 @@ class FarmEncryptedSource:
     is the pipelined path: the jit'd XOF/sampler producer for batch t+1 is
     dispatched *before* batch t's keystream is consumed, overlapping
     producer and consumer across steps on async backends.
+
+    ``engine`` picks the farm's consumer backend (any registered
+    `repro.core.engine` name or instance); ``consumer``/``interpret`` are
+    the legacy spellings.
     """
 
     def __init__(self, source, batch: CipherBatch,
                  session: Optional[StreamSession] = None,
-                 consumer: str = "auto", mesh=None,
+                 engine=None, consumer: Optional[str] = None, mesh=None,
                  interpret: Optional[bool] = None):
         self.source = source
         self.batch = batch
         self.session = session if session is not None else batch.add_session()
-        self.farm = KeystreamFarm(batch, consumer=consumer, mesh=mesh,
-                                  interpret=interpret)
+        self.farm = KeystreamFarm(batch, engine=engine, consumer=consumer,
+                                  mesh=mesh, interpret=interpret)
 
     @property
     def cipher(self) -> Cipher:

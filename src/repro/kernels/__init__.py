@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the compute hot-spots the paper accelerates.
 
-Layout convention (DESIGN.md §2): kernels are *lane-major* — the keystream
+Layout convention (docs/DESIGN.md §2): kernels are *lane-major* — the keystream
 lane/batch dimension is the trailing (128-wide vector lane) axis, and the
 small cipher-state dimension n ∈ {16, 36, 64} lives on sublanes.  This is
 the TPU analogue of the paper's "8 parallel lanes": state elements map to

@@ -1,6 +1,7 @@
 """Pallas kernel: fully fused HERA/Rubato stream-key generation.
 
-This is the accelerator itself (paper §IV), re-architected for TPU:
+This is the accelerator itself (paper §IV), re-architected for TPU — the
+T1–T4 technique mapping below is documented in docs/DESIGN.md §3:
 
   * T1 (vectorization + function overlapping) → the *entire* r-round cipher
     is one kernel; the state lives in VMEM/vregs from initial ARK to final

@@ -7,20 +7,28 @@ multi-device path: each device runs the fused kernel on its lane slice, key
 replicated, no cross-device traffic).  `presto_keystream` — the full D3
 pipeline: pure-JAX XOF producer (decoupled RNG) feeding the fused Pallas
 consumer.
+
+These wrappers are the *mechanism*; backend *policy* (which consumer runs
+where, interpret-or-compiled, lane sharding) lives in one place:
+`repro.core.engine`.  Callers that want a consumer should go through an
+engine instance rather than passing interpret flags around.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.cipher import Cipher
 from repro.core.params import CipherParams
 from repro.kernels.keystream.keystream import BLK, keystream_pallas
+
+if TYPE_CHECKING:  # annotation only — core.engine imports this module
+    from repro.core.cipher import Cipher
 
 
 def _auto_interpret() -> bool:
@@ -83,9 +91,17 @@ def keystream_kernel_sharded(params: CipherParams, key, rc, noise=None, *,
 
 
 def presto_keystream(cipher: Cipher, block_ctrs, interpret: bool | None = None):
-    """Full accelerator pipeline: XOF producer -> fused kernel consumer."""
+    """Full accelerator pipeline: XOF producer -> fused kernel consumer.
+
+    Backend selection is engine-routed: ``interpret`` picks between the
+    registered "pallas" and "pallas-interpret" engines (None = whatever the
+    current backend supports; see :func:`repro.core.engine.resolve_engine`).
+    """
+    from repro.core.engine import make_engine  # runtime: engine imports us
+
+    if interpret is None:
+        interpret = _auto_interpret()
+    eng = make_engine("pallas-interpret" if interpret else "pallas",
+                      cipher.params, cipher.key)
     consts = cipher.round_constant_stream(block_ctrs)
-    return keystream_kernel_apply(
-        cipher.params, cipher.key, consts["rc"], consts["noise"],
-        interpret=interpret,
-    )
+    return eng.keystream_from_constants(consts["rc"], consts["noise"])

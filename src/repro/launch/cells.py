@@ -11,7 +11,7 @@ Shapes (assigned):
 
 `input_specs` returns ShapeDtypeStruct stand-ins for every input — weak-type
 correct, shardable, zero allocation (the dry-run lowers against these).
-Skips (DESIGN.md §5): long_500k only for mamba2/jamba; hubert (encoder-only)
+Skips (docs/DESIGN.md §5): long_500k only for mamba2/jamba; hubert (encoder-only)
 has no decode shapes.
 """
 
@@ -54,7 +54,7 @@ def cell_applicable(arch: str, shape_name: str):
         return False, "encoder-only arch has no autoregressive decode step"
     if shape_name == "long_500k" and arch not in SUBQUADRATIC:
         return False, ("full-attention arch: 500k context needs sub-quadratic "
-                       "attention (see DESIGN.md §5)")
+                       "attention (see docs/DESIGN.md §5)")
     return True, ""
 
 

@@ -106,7 +106,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False):
     if shape.kind == "train":
         opt = OptConfig(eightbit=cfg.opt_8bit)
         # microbatch=4: gradient-accumulation scan — bounds per-token temps
-        # and amortizes the single per-step gradient reduction (DESIGN.md §6)
+        # and amortizes the single per-step gradient reduction (docs/DESIGN.md §6)
         step, _ = make_train_step(cfg, policy, opt, donate=True, microbatch=4)
         specs = C.input_specs(arch, shape_name, opt=opt, smoke=smoke)
         with policy.mesh:

@@ -1,4 +1,4 @@
-"""Elastic scaling + straggler mitigation (DESIGN.md §6).
+"""Elastic scaling + straggler mitigation (docs/DESIGN.md §6).
 
 Elasticity model: the mesh is rebuilt from surviving devices after a node
 failure — the data/pod axes shrink to the largest supported configuration,

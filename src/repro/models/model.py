@@ -413,7 +413,7 @@ def forward_hidden(cfg: ModelConfig, params, batch, shardings=None):
         x, _, a = _block_apply(cfg, spec, p, x, cos, sin,
                                shardings=shardings)
         # layer-boundary activations are the only backward residuals; keep
-        # them sharded over both dp and the model axes (DESIGN.md §6)
+        # them sharded over both dp and the model axes (docs/DESIGN.md §6)
         return _wsc(x, shardings, "acts"), a
 
     def group_body(carry, gp):

@@ -50,7 +50,7 @@ def _local_positions(e_local, k, n_loc, E, capacity):
 
 
 def moe_ffn_sharded(cfg: ModelConfig, x, router_w, wi_g, wi_u, wo, policy):
-    """Expert-parallel MoE under shard_map (DESIGN.md §5).
+    """Expert-parallel MoE under shard_map (docs/DESIGN.md §5).
 
     Key observation: activations are dp-sharded and tp-REPLICATED in this
     framework, so every expert owner already holds every local token —

@@ -39,7 +39,7 @@ from repro.core.cipher import (
 )
 from repro.core.farm import KeystreamFarm, WindowPlan
 
-OPS = ("keystream", "encrypt", "decrypt")
+OPS = ("keystream", "encrypt", "decrypt", "encrypt_tokens", "decrypt_tokens")
 
 
 @dataclasses.dataclass
@@ -49,6 +49,11 @@ class HHERequest:
     op="encrypt":  payload (blocks, l) float32 -> ciphertext (blocks, l) u32.
     op="decrypt":  payload (blocks, l) uint32  -> plaintext (blocks, l) f32.
     op="keystream": no payload -> raw keystream (the transciphering feed).
+    op="encrypt_tokens": payload (blocks, l) int token ids (< q) ->
+        ciphertext (blocks, l) u32 — exact Z_q encryption, no fixed-point
+        encoding (the `launch/serve.py --encrypted` prompt/response path).
+    op="decrypt_tokens": payload (blocks, l) u32 -> token ids (blocks, l)
+        int32, exact.
     """
 
     session_id: int
@@ -79,18 +84,31 @@ class HHEResponse:
 
 
 class HHEServer:
-    """Single-key HHE endpoint: session pool + windowed farm pipeline."""
+    """Single-key HHE endpoint: session pool + windowed farm pipeline.
+
+    ``engine`` picks the farm's consumer backend (any registered
+    `repro.core.engine` name or instance); ``consumer``/``interpret`` are
+    the legacy spellings.  With ``auto_rotate`` (default), a session whose
+    counter space cannot fit an incoming request is rotated to a fresh
+    nonce (pending lanes on the old nonce are flushed first), so
+    long-running streams survive counter exhaustion without keystream
+    reuse; clients observe rotations via ``StreamSession.generation`` and
+    the session's current nonce.
+    """
 
     def __init__(self, batch: CipherBatch, window: int = 256,
-                 consumer: str = "auto", mesh=None, axis: str = "data",
-                 interpret: Optional[bool] = None):
+                 engine=None, *, consumer: Optional[str] = None, mesh=None,
+                 axis: str = "data", interpret: Optional[bool] = None,
+                 auto_rotate: bool = True):
         if window <= 0:
             raise ValueError("window must be positive")
         self.batch = batch
         self.window = window
-        self.farm = KeystreamFarm(batch, consumer=consumer, mesh=mesh,
-                                  axis=axis, interpret=interpret)
+        self.auto_rotate = auto_rotate
+        self.farm = KeystreamFarm(batch, engine=engine, consumer=consumer,
+                                  mesh=mesh, axis=axis, interpret=interpret)
         self._queue: List[tuple] = []     # (request, ctrs, t_submit)
+        self._done: List[HHEResponse] = []   # rotation-forced early flushes
         self.latencies: List[float] = []
 
     # ------------------------------------------------------------------
@@ -106,6 +124,21 @@ class HHEServer:
                 f"(pool has {len(self.batch.sessions)}; open_session() first)"
             )
         sess = self.batch.sessions[req.session_id]
+        # fresh-session space, via the cursor so a monkeypatched
+        # SESSION_CTR_LIMIT (tests) is honored
+        capacity = sess.next_ctr + sess.remaining()
+        # Auto-rotation is only sound for server-originated keystream:
+        # decrypt payloads are bound to the OLD (nonce, counter) space, so
+        # rotating would subtract fresh-nonce keystream and return garbage
+        # — for those, fall through and let take_window refuse loudly.
+        if (self.auto_rotate and req.blocks > sess.remaining()
+                and req.op not in ("decrypt", "decrypt_tokens")
+                and req.blocks <= capacity):
+            # old-nonce lanes must materialize before the table row is
+            # replaced — rotation is a flush boundary.  The forced flush's
+            # responses are buffered and handed out by the next flush().
+            self._done.extend(self._flush_queue())
+            sess = self.batch.rotate_session(req.session_id)
         ctrs = sess.take_window(req.blocks)
         self._queue.append((req, ctrs, time.perf_counter()))
         return ctrs
@@ -140,7 +173,12 @@ class HHEServer:
 
     def flush(self) -> List[HHEResponse]:
         """Run all queued requests through the farm; returns responses in
-        submission order."""
+        submission order (including any materialized early by a rotation-
+        forced flush)."""
+        done, self._done = self._done, []
+        return done + self._flush_queue()
+
+    def _flush_queue(self) -> List[HHEResponse]:
         if not self._queue:
             return []
         queue, self._queue = self._queue, []
@@ -182,6 +220,13 @@ class HHEServer:
             elif req.op == "encrypt":
                 result = np.asarray(mod.add(
                     encode_fixed(mod, req.payload, req.delta), z))
+            elif req.op == "encrypt_tokens":    # exact Z_q, no encoding
+                result = np.asarray(mod.add(
+                    jnp.asarray(req.payload, jnp.uint32), z))
+            elif req.op == "decrypt_tokens":
+                result = np.asarray(mod.sub(
+                    jnp.asarray(req.payload, jnp.uint32), z
+                ).astype(jnp.int32))
             else:  # decrypt
                 mq = mod.sub(jnp.asarray(req.payload, jnp.uint32), z)
                 result = np.asarray(decode_fixed(mod, mq, req.delta))

@@ -1,6 +1,6 @@
 """Sharded, fault-tolerant checkpointing.
 
-Design (DESIGN.md §6):
+Design (docs/DESIGN.md §6):
   * per-leaf .npy files + a JSON manifest describing the pytree, shapes,
     dtypes, step, and data-iterator state;
   * atomic commit: write to ``<dir>/tmp.<step>`` then rename to

@@ -1,7 +1,7 @@
 """AdamW with optional 8-bit (int8, per-row absmax) first/second moments.
 
 8-bit moments cut optimizer HBM from 8 bytes/param to 2 + ~0.02 — the
-difference between arctic-480b fitting a 256-chip pod or not (DESIGN.md §5).
+difference between arctic-480b fitting a 256-chip pod or not (docs/DESIGN.md §5).
 Quantization is per-row (last axis) absmax, symmetric for m, asymmetric-free
 for v (v >= 0 so we store sqrt(v) scaled, which also improves precision).
 """

@@ -98,8 +98,33 @@ def test_session_counter_space_exhaustion_raises():
     s = cb.add_session()
     s.take_window(SESSION_CTR_LIMIT - 1)
     s.take_window(1)                      # exactly at the limit: fine
+    assert s.remaining() == 0
     with pytest.raises(RuntimeError, match="counter space exhausted"):
         s.take_window(1)
+
+
+def test_rotate_session_fresh_nonce_same_index():
+    """Rotation retires the (nonce, counter) space: fresh nonce, cursor 0,
+    same lane index, generation bumped — and the farm serves the new
+    stream bit-exactly (table row rebuilt in place)."""
+    cb = CipherBatch("rubato-128s", seed=31)
+    s0 = cb.add_session()
+    farm = KeystreamFarm(cb, engine="jax")
+    s0.take_window(7)
+    old_nonce = s0.nonce.copy()
+    z_old = np.array(farm.consume(farm.produce(
+        WindowPlan(np.zeros(4, np.int64), np.arange(4)))))
+    s1 = cb.rotate_session(s0.index)
+    assert s1.index == s0.index and s1.generation == 1
+    assert s1.next_ctr == 0 and not np.array_equal(s1.nonce, old_nonce)
+    z_new = np.array(farm.consume(farm.produce(
+        WindowPlan(np.zeros(4, np.int64), np.arange(4)))))
+    # same counters, different generation => different keystream ...
+    assert not np.array_equal(z_new, z_old)
+    # ... and bit-exact with the rotated session's single-stream view
+    np.testing.assert_array_equal(
+        z_new, np.array(cb.session_cipher(s1.index).keystream(
+            jnp.arange(4, dtype=jnp.uint32))))
 
 
 def test_session_pool_growth_after_first_dispatch():
@@ -158,6 +183,17 @@ def test_farm_kernel_consumer_matches_jax_consumer():
     zj = np.array(jax_farm.consume(jax_farm.produce(plan)))
     zk = np.array(kern_farm.consume(kern_farm.produce(plan)))
     np.testing.assert_array_equal(zj, zk)
+
+
+def test_farm_unknown_consumer_lists_registered_engines():
+    """The old farm silently accepted unknown consumer strings; now both
+    spellings fail fast with the registry listed."""
+    cb = CipherBatch("hera-128a", seed=1)
+    cb.add_session()
+    with pytest.raises(ValueError, match="registered engines"):
+        KeystreamFarm(cb, consumer="cuda")
+    with pytest.raises(ValueError, match="registered engines"):
+        KeystreamFarm(cb, engine="cuda")
 
 
 def test_farm_keystream_windowed_equals_single_window():
@@ -235,6 +271,105 @@ def test_hhe_server_rejects_unknown_session():
                     consumer="jax")
     with pytest.raises(KeyError, match="unknown session"):
         srv.submit(HHERequest(session_id=0, blocks=1))
+
+
+def test_hhe_server_token_ops_roundtrip_exact():
+    """encrypt_tokens/decrypt_tokens are exact Z_q (no fixed-point): the
+    launch/serve.py --encrypted prompt/response path."""
+    cb = CipherBatch("rubato-128s", seed=18)
+    srv = HHEServer(cb, window=4, consumer="jax")
+    s = srv.open_session()
+    l = cb.params.l
+    rng = np.random.default_rng(5)
+    toks = rng.integers(0, 50000, (3, l)).astype(np.uint32)
+    srv.submit(HHERequest(session_id=s.index, op="encrypt_tokens",
+                          payload=toks))
+    (enc,) = srv.flush()
+    # ciphertext decrypts exactly with the session's single-stream view
+    ci = cb.session_cipher(s.index)
+    z = ci.keystream(jnp.asarray(enc.block_ctrs, jnp.uint32))
+    np.testing.assert_array_equal(
+        np.array(cb.params.mod.sub(jnp.asarray(enc.result), z)), toks)
+    # and with a server-side decrypt_tokens request on fresh counters:
+    # re-encrypt client-side at the next window, then ask the server
+    ctrs2 = jnp.asarray(cb.sessions[s.index].next_ctr
+                        + np.arange(3), jnp.uint32)
+    ct2 = np.array(cb.params.mod.add(jnp.asarray(toks),
+                                     ci.keystream(ctrs2)))
+    srv.submit(HHERequest(session_id=s.index, op="decrypt_tokens",
+                          payload=ct2))
+    (dec,) = srv.flush()
+    np.testing.assert_array_equal(dec.result, toks.astype(np.int32))
+
+
+def test_hhe_loop_survives_session_rotation(monkeypatch):
+    """A long-running serving loop must outlive the 2^16-block counter
+    space: the server rotates the session (fresh nonce) instead of dying,
+    and no (nonce, counter) pair is ever consumed twice."""
+    import repro.core.cipher as cipher_mod
+
+    monkeypatch.setattr(cipher_mod, "SESSION_CTR_LIMIT", 8)
+    cb = CipherBatch("hera-128a", seed=30)
+    srv = HHEServer(cb, window=3, consumer="jax")
+    s = srv.open_session()
+    seen_pairs = set()
+    for step in range(10):
+        srv.submit(HHERequest(session_id=s.index, op="keystream", blocks=3))
+        (resp,) = srv.flush()
+        nonce = bytes(cb.sessions[s.index].nonce)  # nonce for these ctrs
+        for c in resp.block_ctrs:
+            pair = (nonce, int(c))
+            assert pair not in seen_pairs, "keystream reuse across rotation"
+            seen_pairs.add(pair)
+        # every response stays bit-exact with the live generation's oracle
+        want = np.array(cb.session_cipher(s.index).keystream(
+            jnp.asarray(resp.block_ctrs, jnp.uint32)))
+        np.testing.assert_array_equal(resp.result, want)
+    assert cb.sessions[s.index].generation >= 3   # rotations happened
+    assert len(seen_pairs) == 30
+
+
+def test_hhe_no_auto_rotation_for_decrypt_ops(monkeypatch):
+    """Decrypt payloads are bound to the client's (nonce, counter) space:
+    rotating under them would silently return garbage, so the server must
+    refuse loudly instead."""
+    import repro.core.cipher as cipher_mod
+
+    monkeypatch.setattr(cipher_mod, "SESSION_CTR_LIMIT", 8)
+    cb = CipherBatch("rubato-128s", seed=34)
+    srv = HHEServer(cb, window=2, consumer="jax")
+    s = srv.open_session()
+    s.take_window(6)                      # 2 counters left
+    ct = np.zeros((4, cb.params.l), np.uint32)
+    for op in ("decrypt", "decrypt_tokens"):
+        with pytest.raises(RuntimeError, match="counter space exhausted"):
+            srv.submit(HHERequest(session_id=s.index, op=op, payload=ct))
+    assert cb.sessions[s.index].generation == 0   # never rotated
+
+
+def test_hhe_rotation_flushes_pending_old_nonce_lanes(monkeypatch):
+    """Requests queued before a rotation must materialize under the OLD
+    nonce — rotation is a flush boundary, not silent re-keying."""
+    import repro.core.cipher as cipher_mod
+
+    monkeypatch.setattr(cipher_mod, "SESSION_CTR_LIMIT", 8)
+    cb = CipherBatch("hera-128a", seed=33)
+    srv = HHEServer(cb, window=2, consumer="jax")
+    s = srv.open_session()
+    srv.submit(HHERequest(session_id=s.index, op="keystream", blocks=6))
+    want_old = np.array(cb.session_cipher(s.index).keystream(
+        jnp.arange(6, dtype=jnp.uint32)))
+    # this submit cannot fit (6+6 > 8): server flushes the pending request
+    # against the old nonce, then rotates
+    srv.submit(HHERequest(session_id=s.index, op="keystream", blocks=6))
+    assert cb.sessions[s.index].generation == 1
+    resp_old, resp_new = srv.flush()         # submission order preserved
+    np.testing.assert_array_equal(resp_old.result, want_old)
+    np.testing.assert_array_equal(
+        resp_new.result,
+        np.array(cb.session_cipher(s.index).keystream(
+            jnp.arange(6, dtype=jnp.uint32))))
+    assert not np.array_equal(resp_new.result, want_old)
 
 
 def test_farm_encrypt_decrypt_stream_roundtrip():
