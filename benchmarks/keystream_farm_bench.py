@@ -26,8 +26,14 @@ blocks-per-session) — throughput should rise monotonically with lane count
 until dispatch overhead is amortized (saturation), and the primary (auto)
 engine should dominate the coupled baseline at every size.
 
+--schedule {normal,alternating} picks the schedule-orientation plan
+(core/schedule.py) the farm consumers execute; non-smoke runs additionally
+report the per-window p50/p99 delta between the two orientations for the
+primary engine (both are bit-exact — the delta is pure scheduling cost).
+
 --smoke runs a tiny sweep with no PASS/FAIL gating — the CI drift canary
-(scripts/ci.sh) that keeps every engine dispatching end-to-end.
+(scripts/ci.sh) that keeps every engine dispatching end-to-end on the
+selected schedule variant.
 """
 
 import sys, pathlib
@@ -109,16 +115,20 @@ def bench_farm(farm: KeystreamFarm, lanes: int, n_windows: int):
 
 
 def run(name: str, lane_sweep, sessions: int, n_windows: int, reps: int,
-        engines):
+        engines, variant: str = "normal"):
     """Bench one cipher: coupled baseline + one farm lap per engine.
 
-    Returns (coupled_thr, {engine: thr}) across the sweep for the gate."""
+    ``variant`` is the schedule-orientation plan (core/schedule.py) the
+    farm consumers execute.  Returns (coupled_thr, {engine: thr}) across
+    the sweep for the gate."""
     batch = CipherBatch(name, seed=0)
     batch.add_sessions(sessions)
-    farms = {e: KeystreamFarm(batch, engine=e) for e in engines}
+    farms = {e: KeystreamFarm(batch, engine=e, variant=variant)
+             for e in engines}
     l = batch.params.l
     print(f"\n{name}  (sessions={sessions}, engines={list(farms)}, "
-          f"backend={jax.default_backend()}, windows={n_windows})")
+          f"schedule={variant}, backend={jax.default_backend()}, "
+          f"windows={n_windows})")
     print(f"  {'lanes':>6}  {'mode':24} {'Melem/s':>9} {'win p50 ms':>11} "
           f"{'win p99 ms':>11}")
     modes = [("coupled/session", bench_coupled, batch)]
@@ -162,6 +172,29 @@ def check(name, lane_sweep, coupled, farm, engine):
     return ok_beat and ok_mono
 
 
+def orientation_delta(name: str, engine: str, lanes: int, sessions: int,
+                      n_windows: int):
+    """Per-window p50/p99 delta between the two orientation plans.
+
+    Both variants are bit-exact (Eq. 2) — this measures the *scheduling*
+    cost only: on the unrolled kernel the alternating plan should be free
+    (the flip is a static output relabeling); on XLA executors it may pay a
+    minor-dim transpose per flipped MRMC."""
+    batch = CipherBatch(name, seed=0)
+    batch.add_sessions(sessions)
+    stats = {}
+    for variant in ("normal", "alternating"):
+        farm = KeystreamFarm(batch, engine=engine, variant=variant)
+        _, lat = bench_farm(farm, lanes, n_windows)
+        stats[variant] = _percentiles(lat)
+    (n50, n99), (a50, a99) = stats["normal"], stats["alternating"]
+    d50 = (a50 - n50) / n50 * 100 if n50 else 0.0
+    d99 = (a99 - n99) / n99 * 100 if n99 else 0.0
+    print(f"  {name}: farm[{engine}] orientation delta @ lanes={lanes}: "
+          f"p50 {n50:.2f} -> {a50:.2f} ms ({d50:+.1f}%), "
+          f"p99 {n99:.2f} -> {a99:.2f} ms ({d99:+.1f}%)")
+
+
 def default_engines():
     """The primary (auto) engine plus 'jax' — the engines worth timing on
     this backend.  --engines all adds every *available* registered engine
@@ -181,6 +214,10 @@ def main():
                     help="farm consumer engines to sweep (default: auto + "
                          "jax; 'all' = every available non-interpret "
                          "engine)")
+    ap.add_argument("--schedule", choices=["normal", "alternating"],
+                    default="normal",
+                    help="schedule-orientation plan the farm consumers "
+                         "execute (core/schedule.py; bit-exact either way)")
     ap.add_argument("--quick", action="store_true",
                     help="small sweep for smoke runs")
     ap.add_argument("--smoke", action="store_true",
@@ -210,11 +247,13 @@ def main():
     ok = True
     for name in ("hera-128a", "rubato-128l"):
         coupled, farm = run(name, sweep, args.sessions, args.windows,
-                            args.reps, engines)
+                            args.reps, engines, variant=args.schedule)
         if not args.smoke:
             ok &= check(name, sweep, coupled, farm[primary], primary)
+            orientation_delta(name, primary, sweep[-1], args.sessions,
+                              args.windows)
     if args.smoke:
-        print("\nsmoke lap complete (no gating)")
+        print(f"\nsmoke lap complete (schedule={args.schedule}, no gating)")
         return 0
     print(f"\noverall: {'PASS' if ok else 'FAIL'}")
     return 0 if ok else 1

@@ -18,14 +18,33 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== smoke: engine matrix ==="
+echo "=== smoke: engine matrix (both schedule variants) ==="
 python -m pytest -x -q tests/test_engine.py
 
-echo "=== smoke: keystream farm bench (tiny, no gating) ==="
-python benchmarks/keystream_farm_bench.py --smoke
+echo "=== schedule drift: golden vectors + orientation property ==="
+python -m pytest -x -q tests/test_schedule.py
 
-echo "=== fast lap (-m 'not slow'; engine matrix already ran in smoke) ==="
-python -m pytest -x -q -m "not slow" --ignore=tests/test_engine.py
+echo "=== schedule drift: engine availability must not regress ==="
+python - <<'PYEOF'
+from repro.core.engine import engine_caps
+caps = engine_caps()
+must = {"ref", "jax", "pallas-interpret"}          # portable on every host
+missing = sorted(n for n in must if not caps[n].available)
+assert not missing, f"engine availability regressed: {missing}"
+for name, c in caps.items():
+    assert c.available or c.reason, f"{name} unavailable without a reason"
+    assert set(c.schedule_variants) >= {"normal", "alternating"}, name
+print("engine x variant availability ok:",
+      {n: c.available for n, c in caps.items()})
+PYEOF
+
+echo "=== smoke: keystream farm bench (tiny, no gating; both variants) ==="
+python benchmarks/keystream_farm_bench.py --smoke --schedule normal
+python benchmarks/keystream_farm_bench.py --smoke --schedule alternating
+
+echo "=== fast lap (-m 'not slow'; engine/schedule suites already ran) ==="
+python -m pytest -x -q -m "not slow" --ignore=tests/test_engine.py \
+  --ignore=tests/test_schedule.py
 
 if [[ "${1:-}" == "--fast" ]]; then
   echo "=== fast mode (--fast); skipping slow lap ==="

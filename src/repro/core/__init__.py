@@ -23,6 +23,11 @@ from repro.core.engine import (
 from repro.core.farm import KeystreamFarm, WindowPlan, plan_windows
 from repro.core.hera import hera_stream_key
 from repro.core.rubato import rubato_stream_key
+from repro.core.schedule import (
+    Schedule,
+    build_schedule,
+    execute_schedule,
+)
 from repro.core.transcipher import transcipher, evaluate_decryption_circuit
 
 __all__ = [
@@ -44,6 +49,9 @@ __all__ = [
     "KeystreamFarm",
     "WindowPlan",
     "plan_windows",
+    "Schedule",
+    "build_schedule",
+    "execute_schedule",
     "make_cipher",
     "hera_stream_key",
     "rubato_stream_key",

@@ -260,14 +260,17 @@ class CipherBatch:
         self._producer = None                     # built once, pool-agnostic
 
     def make_engine(self, spec: EngineSpec = "auto", *, mesh=None,
-                    axis: str = "data", interpret=None):
+                    axis: str = "data", interpret=None,
+                    variant: Optional[str] = None):
         """Bind a consumer engine to this pool's (params, key).
 
         The farm, serving loop, and data plane all get their consumers
-        here, so backend policy stays in `repro.core.engine`.
+        here, so backend policy stays in `repro.core.engine`.  ``variant``
+        picks the schedule orientation plan (core/schedule.py; "auto" =
+        the backend's preferred one) — bit-exact either way.
         """
         return make_engine(spec, self.params, self.key, mesh=mesh,
-                           axis=axis, interpret=interpret)
+                           axis=axis, interpret=interpret, variant=variant)
 
     # ---------------- session pool ---------------------------------------
     def add_session(self, nonce=None) -> StreamSession:

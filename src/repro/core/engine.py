@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.params import CipherParams
+from repro.core.schedule import VARIANTS, build_schedule
 from repro.kernels.keystream.keystream import BLK
 from repro.kernels.keystream.ops import (
     keystream_kernel_apply,
@@ -63,7 +64,11 @@ class EngineCaps:
     with the given mesh?"; ``reason`` says why not when it can't.
     ``max_lanes`` is a practical per-call lane bound (None = unbounded) —
     exceeded lanes raise instead of silently running for hours (the
-    interpret-mode trap).
+    interpret-mode trap).  ``schedule_variants`` lists which orientation
+    plans from `core/schedule.py` the backend can execute, and
+    ``preferred_variant`` is what "auto" resolves to — the variant the
+    backend runs bubble-free (alternating for the unrolled Pallas datapath,
+    normal for XLA executors where an orientation flip is a real transpose).
     """
 
     name: str
@@ -73,6 +78,8 @@ class EngineCaps:
     supports_noise: bool = True
     max_lanes: Optional[int] = None
     jitted: bool = True
+    schedule_variants: Tuple[str, ...] = VARIANTS
+    preferred_variant: str = "normal"
 
 
 class KeystreamEngine:
@@ -88,13 +95,24 @@ class KeystreamEngine:
     name: str = "?"
 
     def __init__(self, params: CipherParams, key, *, mesh=None,
-                 axis: str = "data", interpret: Optional[bool] = None):
+                 axis: str = "data", interpret: Optional[bool] = None,
+                 variant: str = "normal"):
         self.params = params
         self.key = jnp.asarray(key, jnp.uint32)
         self.mesh = mesh
         self.axis = axis
         self.interpret = interpret   # only 'sharded' consults it (None=auto)
         self.caps = type(self).query_caps(mesh=mesh, axis=axis)
+        if variant == "auto":
+            variant = self.caps.preferred_variant
+        if variant not in self.caps.schedule_variants:
+            raise ValueError(
+                f"engine {self.name!r} does not support schedule variant "
+                f"{variant!r} (supports {self.caps.schedule_variants})"
+            )
+        self.variant = variant
+        #: the declarative round program this engine executes
+        self.schedule = build_schedule(params, variant)
 
     # -- capability reporting (class-level: no instance needed) ------------
     @classmethod
@@ -197,8 +215,8 @@ EngineSpec = Union[str, KeystreamEngine]
 
 
 def make_engine(spec: EngineSpec, params: CipherParams, key, *, mesh=None,
-                axis: str = "data",
-                interpret: Optional[bool] = None) -> KeystreamEngine:
+                axis: str = "data", interpret: Optional[bool] = None,
+                variant: Optional[str] = None) -> KeystreamEngine:
     """Resolve ``spec`` and bind it to (params, key).
 
     ``spec`` may already be a KeystreamEngine instance (passed through —
@@ -206,7 +224,17 @@ def make_engine(spec: EngineSpec, params: CipherParams, key, *, mesh=None,
     (params, key): a consumer keyed differently from the producer would
     emit keystream no session cipher can match, silently.  Raises
     RuntimeError when the resolved engine is not available here (e.g.
-    "pallas" off-TPU), with the reason.
+    "pallas" off-TPU), with the backend's own reason and a pointer to the
+    registry table (``python -m repro.core.engine``).
+
+    ``variant`` picks the schedule orientation plan ("normal" |
+    "alternating" | "auto" = the backend's preferred variant; see
+    core/schedule.py) — all variants are bit-exact, so this is purely a
+    scheduling choice.  None (the default) means "unspecified": newly
+    constructed engines get "normal", and a pre-bound instance is accepted
+    with whatever plan it already executes; an *explicit* variant that
+    contradicts a pre-bound instance raises instead of being silently
+    ignored.
     """
     if isinstance(spec, KeystreamEngine):
         if spec.params != params or not bool(
@@ -216,15 +244,25 @@ def make_engine(spec: EngineSpec, params: CipherParams, key, *, mesh=None,
                 f"(engine has {spec.params.name}); rebind it with "
                 "make_engine for this pool"
             )
+        if variant is not None and variant != "auto" \
+                and variant != spec.variant:
+            raise ValueError(
+                f"engine {spec.name!r} already executes the "
+                f"{spec.variant!r} schedule variant; requested {variant!r} "
+                "— rebind with make_engine instead of passing the instance"
+            )
         return spec
     name = resolve_engine(spec, interpret=interpret, mesh=mesh)
     cls = _REGISTRY[name]
     caps = cls.query_caps(mesh=mesh, axis=axis)
     if not caps.available:
         raise RuntimeError(
-            f"keystream engine {name!r} unavailable: {caps.reason}"
+            f"keystream engine {name!r} unavailable here: {caps.reason} "
+            "(run `python -m repro.core.engine` for the full registry "
+            "table)"
         )
-    return cls(params, key, mesh=mesh, axis=axis, interpret=interpret)
+    return cls(params, key, mesh=mesh, axis=axis, interpret=interpret,
+               variant=variant if variant is not None else "normal")
 
 
 # ==========================================================================
@@ -246,7 +284,8 @@ class RefEngine(KeystreamEngine):
         )
 
     def _run(self, rc, noise):
-        return keystream_ref(self.params, self.key, rc, noise)
+        return keystream_ref(self.params, self.key, rc, noise,
+                             variant=self.variant)
 
 
 @register_engine
@@ -256,12 +295,14 @@ class JaxEngine(KeystreamEngine):
     name = "jax"
 
     def __init__(self, params, key, *, mesh=None, axis="data",
-                 interpret=None):
+                 interpret=None, variant="normal"):
         super().__init__(params, key, mesh=mesh, axis=axis,
-                         interpret=interpret)
-        # params via partial => static; key/rc/noise traced (noise=None is a
-        # valid empty pytree, so one jit covers both arities)
-        self._fn = jax.jit(functools.partial(keystream_ref, params))
+                         interpret=interpret, variant=variant)
+        # params/variant via partial => static; key/rc/noise traced
+        # (noise=None is a valid empty pytree, so one jit covers both
+        # arities)
+        self._fn = jax.jit(functools.partial(keystream_ref, params,
+                                             variant=self.variant))
 
     @classmethod
     def query_caps(cls, *, mesh=None, axis="data") -> EngineCaps:
@@ -282,7 +323,8 @@ class _PallasBase(KeystreamEngine):
         if noise is not None and not self.params.n_noise:
             noise = None    # kernel's 2-input variant
         return keystream_kernel_apply(
-            self.params, self.key, rc, noise, interpret=self._interpret
+            self.params, self.key, rc, noise, interpret=self._interpret,
+            variant=self.variant,
         )
 
 
@@ -305,6 +347,9 @@ class PallasEngine(_PallasBase):
                 f"compiled Pallas needs a TPU backend (have {backend!r}); "
                 "use 'pallas-interpret' for correctness or 'jax' for speed"
             ),
+            # the unrolled kernel flips orientation for free (Eq. 2): the
+            # paper's bubble-free alternating schedule is its native mode
+            preferred_variant="alternating",
         )
 
 
@@ -329,6 +374,7 @@ class PallasInterpretEngine(_PallasBase):
             available=True,
             max_lanes=cls.MAX_LANES,
             jitted=False,
+            preferred_variant="alternating",
         )
 
 
@@ -351,6 +397,7 @@ class ShardedEngine(KeystreamEngine):
                 description="shard_map lane-sharded fused kernel",
                 available=False,
                 reason="needs a mesh (pass mesh=/axis= to make_engine)",
+                preferred_variant="alternating",
             )
         if axis not in mesh.shape:
             return EngineCaps(
@@ -359,12 +406,14 @@ class ShardedEngine(KeystreamEngine):
                 available=False,
                 reason=f"mesh has no axis {axis!r} (axes: "
                        f"{tuple(mesh.shape)})",
+                preferred_variant="alternating",
             )
         return EngineCaps(
             name=cls.name,
             description=f"shard_map lane-sharded fused kernel "
                         f"({mesh.shape[axis]} device(s) on {axis!r})",
             available=True,
+            preferred_variant="alternating",
         )
 
     def _run(self, rc, noise):
@@ -372,5 +421,39 @@ class ShardedEngine(KeystreamEngine):
             noise = None
         return keystream_kernel_sharded(
             self.params, self.key, rc, noise, mesh=self.mesh,
-            axis=self.axis, interpret=self.interpret
+            axis=self.axis, interpret=self.interpret, variant=self.variant
         )
+
+
+# ==========================================================================
+# Introspection CLI: `python -m repro.core.engine`
+# ==========================================================================
+def describe(*, mesh=None, axis: str = "data") -> str:
+    """The engine registry as a table: one row per backend, with
+    availability (and the reason when unavailable), schedule variants,
+    lane caps, and the "auto" resolution on this host."""
+    caps = engine_caps(mesh=mesh, axis=axis)
+    rows = [("engine", "available", "variants (pref)", "max lanes",
+             "description / reason")]
+    for name, c in caps.items():
+        variants = "/".join(c.schedule_variants) + f" ({c.preferred_variant})"
+        lanes = str(c.max_lanes) if c.max_lanes is not None else "-"
+        detail = c.description if c.available else f"UNAVAILABLE: {c.reason}"
+        rows.append((name, "yes" if c.available else "no", variants, lanes,
+                     detail))
+    widths = [max(len(r[i]) for r in rows) for i in range(4)]
+    lines = []
+    for i, r in enumerate(rows):
+        lines.append("  ".join(r[j].ljust(widths[j]) for j in range(4))
+                     + "  " + r[4])
+        if i == 0:
+            lines.append("  ".join("-" * w for w in widths) + "  " + "-" * 24)
+    lines.append("")
+    lines.append(f"backend: {jax.default_backend()}   "
+                 f"auto resolves to: {resolve_engine('auto')!r}   "
+                 "(legacy alias 'kernel' also accepted)")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(describe())

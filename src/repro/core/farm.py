@@ -95,12 +95,15 @@ class KeystreamFarm:
     spelling of the same argument and still accepts "kernel" (+ the
     ``interpret`` flag); both resolve through
     :func:`repro.core.engine.resolve_engine`, so unknown names raise a
-    ValueError listing the registered engines.
+    ValueError listing the registered engines.  ``variant`` picks the
+    schedule-orientation plan the consumer executes (core/schedule.py;
+    "auto" = the backend's preferred one; bit-exact either way).
     """
 
     def __init__(self, batch: CipherBatch, engine: Optional[EngineSpec] = None,
                  *, consumer: Optional[str] = None, mesh=None,
-                 axis: str = "data", interpret: Optional[bool] = None):
+                 axis: str = "data", interpret: Optional[bool] = None,
+                 variant: Optional[str] = None):
         if engine is not None and consumer is not None:
             raise ValueError("pass engine= or the legacy consumer=, not both")
         spec = consumer if engine is None else engine
@@ -108,7 +111,7 @@ class KeystreamFarm:
             spec = "auto"
         self.batch = batch
         self.engine = batch.make_engine(spec, mesh=mesh, axis=axis,
-                                        interpret=interpret)
+                                        interpret=interpret, variant=variant)
         self.consumer = self.engine.name     # backwards-compatible attr
         self.mesh = mesh
         self.axis = axis

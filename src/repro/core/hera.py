@@ -4,18 +4,21 @@
     RF  = ARK ∘ Cube ∘ MixRows ∘ MixColumns
     Fin = ARK ∘ MixRows ∘ MixColumns ∘ Cube ∘ MixRows ∘ MixColumns
 
-Round-constant accounting: (r+1) ARKs × n constants = 96 for Par-128a.
+The round structure is *data*, not code: `core/schedule.py` emits it once
+(`build_schedule`), and this module is a thin wrapper over the pure-JAX
+interpreter `execute_schedule` — the same program the fused Pallas kernel
+runs.  Round-constant accounting ((r+1) ARKs × n constants = 96 for
+Par-128a) is a property of that program.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.core import rounds as R
 from repro.core.params import CipherParams
+from repro.core.schedule import build_schedule, execute_schedule
 
 
-def hera_stream_key(params: CipherParams, key, rc, ic=None):
+def hera_stream_key(params: CipherParams, key, rc, ic=None,
+                    variant: str = "normal"):
     """Generate keystream blocks.
 
     key: (..., n) uint32 in Z_q (broadcastable against rc's batch dims).
@@ -26,18 +29,6 @@ def hera_stream_key(params: CipherParams, key, rc, ic=None):
     """
     if rc.shape[-2] != params.n_arks or rc.shape[-1] != params.n:
         raise ValueError(f"rc shape {rc.shape} != (..., {params.n_arks}, {params.n})")
-    if ic is None:
-        ic = jnp.asarray(R.ic_vector(params))
-    x = jnp.broadcast_to(ic, rc.shape[:-2] + (params.n,))
-
-    x = R.ark(params, x, key, rc[..., 0, :])
-    for j in range(1, params.rounds):          # RF_1 .. RF_{r-1}
-        x = R.mrmc(params, x)                  # MixColumns then MixRows
-        x = R.cube(params, x)
-        x = R.ark(params, x, key, rc[..., j, :])
-    # Fin
-    x = R.mrmc(params, x)
-    x = R.cube(params, x)
-    x = R.mrmc(params, x)
-    x = R.ark(params, x, key, rc[..., params.rounds, :])
-    return x
+    sched = build_schedule(params, variant)
+    flat = rc.reshape(rc.shape[:-2] + (sched.n_round_constants,))
+    return execute_schedule(params, sched, key, flat, ic=ic)

@@ -46,22 +46,33 @@ class CipherParams:
     def v(self) -> int:
         return math.isqrt(self.n)
 
+    def schedule(self, variant: str = "normal"):
+        """The declarative round program for this parameter set (cached).
+
+        See `core/schedule.py` — the ONE place the round structure lives;
+        executors (pure JAX, Pallas kernel, depth-tracked circuit) all
+        interpret it, and the accounting properties below derive from it.
+        """
+        from repro.core.schedule import build_schedule
+
+        return build_schedule(self, variant)
+
     @property
     def n_arks(self) -> int:
-        """ARK executions per stream key: initial + (r-1) RFs + final."""
-        return self.rounds + 1
+        """ARK executions per stream key: initial + (r-1) RFs + final —
+        counted off the schedule program, not a duplicated formula."""
+        return self.schedule().n_arks
 
     @property
     def n_round_constants(self) -> int:
-        """Total uniform round constants per stream key.
+        """Total uniform round constants per stream key, derived from the
+        schedule's rc-slice annotations (the RNG FIFO depth).
 
         HERA: (r+1)*n (96 for Par-128a).  Rubato: r*n + l because the final
         ARK feeds a truncation, so only l of its constants matter (188 for
         Par-128L = 64+64+60), matching the paper's FIFO-depth accounting.
         """
-        if self.kind == "hera":
-            return self.n_arks * self.n
-        return self.rounds * self.n + self.l
+        return self.schedule().n_round_constants
 
     @property
     def n_noise(self) -> int:

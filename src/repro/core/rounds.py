@@ -1,5 +1,10 @@
 """Shared round-function components for HERA and Rubato (pure JAX).
 
+These are the *primitives*; the round structure that composes them lives
+as data in `core/schedule.py` (`build_schedule`), and the pure-JAX
+interpreter `execute_schedule` — which `core/hera.py` / `core/rubato.py`
+wrap — applies them in program order.
+
 State convention: a keystream block's state is a (..., n) uint32 vector in
 Z_q, viewed row-major as a (..., v, v) matrix per Eq. (1) of the paper.
 
@@ -75,9 +80,10 @@ def mrmc(params: CipherParams, x):
 def mrmc_transposed(params: CipherParams, x_t):
     """MRMC applied to a transposed (column-major) state.
 
-    By Eq. 2, MRMC(X^T) = (MRMC(X))^T — used by tests to verify the
-    transposition-invariance the data schedule exploits, and by the kernel
-    to accept either streaming order.
+    By Eq. 2, MRMC(X^T) = (MRMC(X))^T, so this equals plain :func:`mrmc`
+    on the stored array — the identity that licenses the alternating-
+    orientation schedule variant's transposed-state rounds
+    (core/schedule.py); tests/test_schedule.py asserts it directly.
     """
     v = params.v
     X = x_t.reshape(x_t.shape[:-1] + (v, v))
@@ -103,11 +109,6 @@ def feistel(params: CipherParams, x):
         [jnp.zeros_like(x[..., :1]), sq], axis=-1
     )
     return mod.add(x, shifted)
-
-
-def truncate(params: CipherParams, x):
-    """Tr_{n,l}: keep the first l elements."""
-    return x[..., : params.l]
 
 
 def agn(params: CipherParams, x, noise_signed):

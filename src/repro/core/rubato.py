@@ -4,20 +4,22 @@
     RF  = ARK ∘ Feistel ∘ MixRows ∘ MixColumns
     Fin = Tr ∘ ARK ∘ MixRows ∘ MixColumns ∘ Feistel ∘ MixRows ∘ MixColumns
 
-Round-constant accounting: r ARKs × n + final ARK × l (truncation makes the
-trailing n−l constants of the final ARK dead) = 64+64+60 = 188 for Par-128L,
-matching the paper's FIFO-depth discussion.
+The round structure is *data*: `core/schedule.py` emits it once
+(`build_schedule`) and this module interprets it via `execute_schedule` —
+the same program the fused Pallas kernel runs.  Round-constant accounting
+(r ARKs × n + final ARK × l, truncation making the trailing n−l constants
+of the final ARK dead = 64+64+60 = 188 for Par-128L, the paper's
+FIFO-depth discussion) is a property of that program.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.core import rounds as R
 from repro.core.params import CipherParams
+from repro.core.schedule import build_schedule, execute_schedule
 
 
-def rubato_stream_key(params: CipherParams, key, rc, noise_signed, ic=None):
+def rubato_stream_key(params: CipherParams, key, rc, noise_signed, ic=None,
+                      variant: str = "normal"):
     """Generate keystream blocks.
 
     key: (..., n) uint32 in Z_q.
@@ -25,26 +27,9 @@ def rubato_stream_key(params: CipherParams, key, rc, noise_signed, ic=None):
     noise_signed: (..., l) int32 discrete-Gaussian samples (AGN), or None.
     Returns (..., l) uint32 keystream block.
     """
-    n, l, r = params.n, params.l, params.rounds
     if rc.shape[-1] != params.n_round_constants:
         raise ValueError(
             f"rc last dim {rc.shape[-1]} != {params.n_round_constants}"
         )
-    if ic is None:
-        ic = jnp.asarray(R.ic_vector(params))
-    x = jnp.broadcast_to(ic, rc.shape[:-1] + (n,))
-
-    x = R.ark(params, x, key, rc[..., 0:n])
-    for j in range(1, r):                      # RF_1 .. RF_{r-1}
-        x = R.mrmc(params, x)
-        x = R.feistel(params, x)
-        x = R.ark(params, x, key, rc[..., j * n : (j + 1) * n])
-    # Fin
-    x = R.mrmc(params, x)
-    x = R.feistel(params, x)
-    x = R.mrmc(params, x)
-    x = R.truncate(params, x)
-    x = R.ark(params, x, key[..., :l], rc[..., r * n : r * n + l])
-    if noise_signed is not None and params.sigma > 0:
-        x = R.agn(params, x, noise_signed)
-    return x
+    sched = build_schedule(params, variant)
+    return execute_schedule(params, sched, key, rc, noise_signed, ic=ic)

@@ -1,0 +1,384 @@
+"""Round-schedule IR: the cipher as a declarative program (docs/DESIGN.md §9).
+
+Presto's core move is treating HERA/Rubato not as code but as a *schedule*:
+a linear sequence of vectorized modules (ARK, MRMC, nonlinearity, truncate,
+AGN) whose round constants stream in from a decoupled RNG and whose
+MixColumns/MixRows orientation may alternate between normal and transposed
+state (Eq. 2 transposition-invariance) so the datapath never stalls on a
+relayout.  This module is that schedule as data:
+
+  * :class:`ARK` / :class:`MRMC` / :class:`NONLINEAR` / :class:`TRUNCATE` /
+    :class:`AGN` — one op each, annotated with its round-constant slice and
+    the state **orientation** it executes in (``normal`` | ``transposed``);
+  * :func:`build_schedule` — emits the HERA and Rubato programs from ONE
+    skeleton (both ciphers share ARK ∘ [MRMC ∘ NL ∘ ARK]^{r-1} ∘ MRMC ∘ NL ∘
+    MRMC ∘ [Tr] ∘ ARK ∘ [AGN]), in a ``normal`` variant (every op row-major)
+    and an ``alternating`` variant that flips MRMC orientation per round —
+    the TPU analogue of the paper's bubble elimination: because MRMC
+    commutes with transposition (Eq. 2), an orientation flip costs nothing
+    in the unrolled kernel (it is a static relabeling of which sublanes get
+    combined), and downstream ARK/Feistel consume the state in whatever
+    orientation it was left in;
+  * :func:`execute_schedule` — the pure-JAX interpreter.  `core/hera.py`,
+    `core/rubato.py`, and `kernels/keystream/ref.py` are thin wrappers over
+    it; `kernels/keystream/keystream.py` interprets the same program as a
+    fused Pallas kernel; `core/transcipher.py` interprets it with
+    FV-style multiplicative-depth tracking.
+
+Round-constant accounting (``n_arks``, ``n_round_constants``) is derived
+from the program — `core/params.py` delegates to it — so the paper's
+FIFO-depth numbers (96 for HERA Par-128a, 188 = 64+64+60 for Rubato
+Par-128L) are a property of the schedule, not a duplicated formula.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import TYPE_CHECKING, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rounds as R
+from repro.core.rounds import ic_vector
+
+if TYPE_CHECKING:  # params imports us lazily (accounting properties)
+    from repro.core.params import CipherParams
+
+NORMAL = "normal"
+TRANSPOSED = "transposed"
+ORIENTATIONS = (NORMAL, TRANSPOSED)
+
+#: Schedule variants build_schedule understands.
+VARIANTS = ("normal", "alternating")
+
+
+def _flip(orientation: str) -> str:
+    return TRANSPOSED if orientation == NORMAL else NORMAL
+
+
+def transpose_perm(v: int) -> np.ndarray:
+    """The state-transposition permutation on flat row-major indices.
+
+    ``perm[c*v + r] = r*v + c`` — the stored element at flat position i of a
+    transposed state is the logical element ``perm[i]``.  An involution, so
+    the same array maps stored->logical and logical->stored.
+    """
+    return np.arange(v * v).reshape(v, v).T.reshape(-1)
+
+
+# ==========================================================================
+# Ops
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class Op:
+    """Base: every op carries the orientation its input state is stored in."""
+
+    orientation: str = NORMAL
+
+
+@dataclasses.dataclass(frozen=True)
+class ARK(Op):
+    """Add-round-key x + k ⊙ rc, with the randomized key schedule.
+
+    ``rc_slice`` is the [start, stop) window of the flat logical
+    round-constant stream this op consumes — the paper's RNG-FIFO
+    accounting: the producer must have delivered exactly ``stop`` constants
+    before this op fires.  ``key_len`` is n except for Rubato's final
+    truncated ARK (l: the trailing n−l constants are dead).
+    """
+
+    rc_slice: Tuple[int, int] = (0, 0)
+    key_len: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MRMC(Op):
+    """Fused MixRows∘MixColumns M_v·X·M_vᵀ.
+
+    ``out_orientation`` may differ from ``orientation``: by Eq. 2
+    (MRMC(Xᵀ) = MRMC(X)ᵀ) the stored-state computation is *identical* in
+    both orientations, and a flip is a free relabeling of the output
+    stacking — this is what lets the alternating variant hand each round
+    the state in the orientation the previous round left it.
+    """
+
+    out_orientation: str = NORMAL
+
+
+@dataclasses.dataclass(frozen=True)
+class NONLINEAR(Op):
+    """Elementwise cipher nonlinearity: HERA ``cube`` or Rubato ``feistel``.
+
+    Cube is orientation-agnostic; Feistel couples flat-index neighbors, so
+    in transposed orientation the neighbor pattern becomes a static
+    row/column shift of the (v, v) view (no data transpose).
+    """
+
+    kind: str = "cube"
+
+
+@dataclasses.dataclass(frozen=True)
+class TRUNCATE(Op):
+    """Tr_{n,l}: keep the first ``keep`` logical elements (normal-only)."""
+
+    keep: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class AGN(Op):
+    """Add the cipher's own discrete-Gaussian noise (Rubato; client-side).
+
+    Executors apply it only when noise is supplied — the op records that
+    the *program* ends with an AGN stage, not that every run draws noise.
+    """
+
+
+# ==========================================================================
+# Schedule
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """One cipher program: ops plus the static facts executors need."""
+
+    name: str          # e.g. "hera-128a/alternating"
+    kind: str          # "hera" | "rubato"
+    variant: str       # "normal" | "alternating"
+    n: int
+    l: int
+    v: int
+    ops: Tuple[Op, ...]
+
+    # ---- derived accounting (the single source of truth) -----------------
+    @property
+    def n_arks(self) -> int:
+        return sum(isinstance(op, ARK) for op in self.ops)
+
+    @property
+    def n_round_constants(self) -> int:
+        return max(op.rc_slice[1] for op in self.ops if isinstance(op, ARK))
+
+    @property
+    def n_mrmc(self) -> int:
+        return sum(isinstance(op, MRMC) for op in self.ops)
+
+    @property
+    def has_transposed_ops(self) -> bool:
+        return any(op.orientation == TRANSPOSED for op in self.ops)
+
+    # ---- layout helpers --------------------------------------------------
+    def rc_storage_perm(self) -> Optional[np.ndarray]:
+        """Logical→storage constant reorder for lane-major kernels.
+
+        Returns a permutation p with ``rc_storage = rc_logical[p]`` such
+        that every ARK reads a *contiguous* slice already matching its
+        orientation — the RNG FIFO delivers constants in exactly the order
+        the datapath consumes them, so a transposed-orientation ARK costs
+        no in-kernel gather.  None when the program is all-normal.
+        """
+        if not self.has_transposed_ops:
+            return None
+        perm = np.arange(self.n_round_constants)
+        tp = transpose_perm(self.v)
+        for op in self.ops:
+            if isinstance(op, ARK) and op.orientation == TRANSPOSED:
+                a, b = op.rc_slice
+                perm[a:b] = a + tp[: b - a]
+        return perm
+
+    # ---- validation ------------------------------------------------------
+    def validate(self) -> "Schedule":
+        """Check orientation continuity and round-constant coverage."""
+        cur = NORMAL
+        next_rc = 0
+        width = self.n
+        for i, op in enumerate(self.ops):
+            if op.orientation != cur:
+                raise ValueError(
+                    f"{self.name}: op {i} ({type(op).__name__}) expects "
+                    f"{op.orientation} state but the schedule is {cur} here"
+                )
+            if isinstance(op, ARK):
+                a, b = op.rc_slice
+                if a != next_rc or b - a != op.key_len or op.key_len != width:
+                    raise ValueError(
+                        f"{self.name}: ARK {i} rc_slice {op.rc_slice} / "
+                        f"key_len {op.key_len} inconsistent (state width "
+                        f"{width}, next constant {next_rc})"
+                    )
+                next_rc = b
+            elif isinstance(op, MRMC):
+                cur = op.out_orientation
+            elif isinstance(op, TRUNCATE):
+                if cur != NORMAL:
+                    raise ValueError(
+                        f"{self.name}: TRUNCATE needs normal orientation"
+                    )
+                width = op.keep
+            elif isinstance(op, AGN) and cur != NORMAL:
+                raise ValueError(f"{self.name}: AGN needs normal orientation")
+        if cur != NORMAL:
+            raise ValueError(f"{self.name}: program must end normal")
+        if next_rc != self.n_round_constants:
+            raise ValueError(f"{self.name}: round constants not contiguous")
+        return self
+
+    def describe(self) -> str:
+        """Human-readable program listing (docs/DESIGN.md §9 format)."""
+        rows = [f"schedule {self.name}  (n={self.n}, l={self.l}, "
+                f"{self.n_arks} ARKs, {self.n_round_constants} constants)"]
+        for i, op in enumerate(self.ops):
+            o = "T" if op.orientation == TRANSPOSED else "N"
+            if isinstance(op, ARK):
+                a, b = op.rc_slice
+                rows.append(f"  {i:2d}  ARK[{o}]      rc[{a}:{b}]  "
+                            f"key[:{op.key_len}]")
+            elif isinstance(op, MRMC):
+                oo = "T" if op.out_orientation == TRANSPOSED else "N"
+                rows.append(f"  {i:2d}  MRMC[{o}->{oo}]")
+            elif isinstance(op, NONLINEAR):
+                rows.append(f"  {i:2d}  {op.kind.upper()}[{o}]")
+            elif isinstance(op, TRUNCATE):
+                rows.append(f"  {i:2d}  TRUNCATE[{o}] keep {op.keep}")
+            elif isinstance(op, AGN):
+                rows.append(f"  {i:2d}  AGN[{o}]")
+        return "\n".join(rows)
+
+
+# ==========================================================================
+# Builder
+# ==========================================================================
+@functools.lru_cache(maxsize=None)
+def build_schedule(params: "CipherParams", variant: str = "normal") -> Schedule:
+    """Emit the cipher program for ``params`` — the ONE place the HERA and
+    Rubato round structures are written down.
+
+    Both ciphers share the skeleton (paper §III):
+
+        ARK ∘ [MRMC ∘ NL ∘ ARK]^{r-1} ∘ MRMC ∘ NL ∘ MRMC ∘ [Tr] ∘ ARK ∘ [AGN]
+
+    differing only in the nonlinearity (Cube vs Feistel), truncation
+    (Rubato: l < n makes the final ARK's trailing constants dead) and AGN.
+
+    ``variant="alternating"`` flips MRMC orientation per application; when
+    the MRMC count is odd the last one stays put so TRUNCATE/output see
+    normal orientation.  Cached per (params, variant) — CipherParams is
+    frozen/hashable — so accounting properties can call this freely.
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown schedule variant {variant!r}; "
+                         f"have {VARIANTS}")
+    n, l, r, v = params.n, params.l, params.rounds, params.v
+    nl = "cube" if params.kind == "hera" else "feistel"
+    n_mrmc = r + 1
+    # flip at every MRMC; with an odd count the last one keeps orientation
+    # so truncation and the output stage always see normal state
+    flips = (n_mrmc - (n_mrmc % 2)) if variant == "alternating" else 0
+
+    ops = []
+    cur = NORMAL
+    mrmc_seen = 0
+
+    def mrmc():
+        nonlocal cur, mrmc_seen
+        out = _flip(cur) if mrmc_seen < flips else cur
+        ops.append(MRMC(orientation=cur, out_orientation=out))
+        cur = out
+        mrmc_seen += 1
+
+    ops.append(ARK(orientation=cur, rc_slice=(0, n), key_len=n))
+    for j in range(1, r):                          # RF_1 .. RF_{r-1}
+        mrmc()
+        ops.append(NONLINEAR(orientation=cur, kind=nl))
+        ops.append(ARK(orientation=cur, rc_slice=(j * n, (j + 1) * n),
+                       key_len=n))
+    # Fin
+    mrmc()
+    ops.append(NONLINEAR(orientation=cur, kind=nl))
+    mrmc()
+    if l < n:
+        ops.append(TRUNCATE(orientation=cur, keep=l))
+    ops.append(ARK(orientation=cur, rc_slice=(r * n, r * n + l), key_len=l))
+    if params.kind == "rubato" and params.sigma > 0:
+        ops.append(AGN(orientation=cur))
+
+    return Schedule(
+        name=f"{params.name}/{variant}", kind=params.kind, variant=variant,
+        n=n, l=l, v=v, ops=tuple(ops),
+    ).validate()
+
+
+# ==========================================================================
+# Pure-JAX interpreter (the reference executor)
+# ==========================================================================
+def _mrmc_flat(params: "CipherParams", x, flip_out: bool):
+    """M_v·X·M_vᵀ on flat (..., n) state; flip_out transposes the output
+    (free by Eq. 2 — the stored-state compute is orientation-independent,
+    which is also why the no-flip transposed case is plain R.mrmc)."""
+    out = R.mrmc(params, x)
+    if flip_out:
+        v = params.v
+        O = out.reshape(out.shape[:-1] + (v, v))
+        out = jnp.swapaxes(O, -1, -2).reshape(out.shape)
+    return out
+
+
+def _feistel_transposed(params: "CipherParams", x):
+    """Feistel on transposed-stored state, as static shifts of the (v, v)
+    view: stored (c, r) holds logical r·v + c, so the logical predecessor
+    sits one row up — wrapping to (v-1, r-1) at the row boundary."""
+    mod, v = params.mod, params.v
+    S = x.reshape(x.shape[:-1] + (v, v))          # axes (..., c, r)
+    sq = mod.square(S)
+    row0 = jnp.concatenate(
+        [jnp.zeros_like(sq[..., :1, :1]), sq[..., v - 1:, : v - 1]], axis=-1
+    )
+    shifted = jnp.concatenate([row0, sq[..., : v - 1, :]], axis=-2)
+    return mod.add(S, shifted).reshape(x.shape)
+
+
+def execute_schedule(params: "CipherParams", schedule: Schedule, key, rc,
+                     noise_signed=None, ic=None):
+    """Interpret ``schedule`` in pure JAX — the oracle all backends match.
+
+    key: (..., n) u32 in Z_q; rc: (..., n_round_constants) u32 in *logical*
+    (producer) order; noise_signed: (..., l) i32 or None; returns (..., l)
+    u32 keystream.  Orientation handling: transposed ARKs index key/rc
+    through the transpose permutation (a static gather on small vectors);
+    MRMC flips are output relabelings; the state itself is never transposed
+    except at explicit MRMC orientation changes.
+    """
+    if rc.shape[-1] != schedule.n_round_constants:
+        raise ValueError(
+            f"rc last dim {rc.shape[-1]} != {schedule.n_round_constants} "
+            f"(schedule {schedule.name})"
+        )
+    if ic is None:
+        ic = jnp.asarray(ic_vector(params))
+    x = jnp.broadcast_to(ic, rc.shape[:-1] + (params.n,))
+    tp = transpose_perm(schedule.v)
+
+    for op in schedule.ops:
+        if isinstance(op, ARK):
+            a, b = op.rc_slice
+            rcs = rc[..., a:b]
+            k = key[..., : op.key_len]
+            if op.orientation == TRANSPOSED:
+                rcs, k = rcs[..., tp], key[..., tp]
+            x = R.ark(params, x, k, rcs)
+        elif isinstance(op, MRMC):
+            x = _mrmc_flat(params, x, op.orientation != op.out_orientation)
+        elif isinstance(op, NONLINEAR):
+            if op.kind == "cube":
+                x = R.cube(params, x)            # orientation-agnostic
+            elif op.orientation == TRANSPOSED:
+                x = _feistel_transposed(params, x)
+            else:
+                x = R.feistel(params, x)
+        elif isinstance(op, TRUNCATE):
+            x = x[..., : op.keep]
+        elif isinstance(op, AGN):
+            if noise_signed is not None and params.sigma > 0:
+                x = R.agn(params, x, noise_signed)
+    return x

@@ -24,6 +24,7 @@ from typing import Any
 import jax.numpy as jnp
 
 from repro.core import rounds as R
+from repro.core import schedule as S
 from repro.core.cipher import Cipher
 from repro.core.params import CipherParams
 
@@ -64,10 +65,17 @@ class CircuitMod:
 def evaluate_decryption_circuit(cipher: Cipher, block_ctrs):
     """Evaluate the stream-key circuit with depth tracking.
 
+    Interprets the SAME ``build_schedule(params)`` program the client
+    executors run (core/schedule.py), with DepthTracked values — the server
+    circuit cannot drift from the cipher because both are one schedule.
+    The normal-orientation variant is used: orientation is a client-side
+    layout concern; the FV circuit is slot-order agnostic.
+
     Returns (keystream, mult_depth).  HERA Par-128a: depth 2 per Cube × 5
     nonlinear layers = 10.  Rubato Par-128L: depth 1 per Feistel × 2 = 2.
     """
     p = cipher.params
+    sched = S.build_schedule(p)
     consts = cipher.round_constant_stream(block_ctrs)
     cm = CircuitMod(p)
     mod = p.mod
@@ -79,16 +87,6 @@ def evaluate_decryption_circuit(cipher: Cipher, block_ctrs):
     # the key is the FV-encrypted input; everything derived from it carries depth
     x = DepthTracked(ic, 0)
     k = DepthTracked(key, 0)
-
-    def ark(x, rc):
-        return cm.add(x, cm.mul_pt(k, rc))
-
-    def ark_trunc(x, rc, l):
-        kt = DepthTracked(k.value[..., :l], k.depth)
-        return cm.add(x, DepthTracked(mod.mul(kt.value, rc), kt.depth))
-
-    def linear(fn, x):
-        return DepthTracked(fn(p, x.value), x.depth)
 
     def cube(x):
         sq = cm.mul_ct(x, x)
@@ -103,33 +101,24 @@ def evaluate_decryption_circuit(cipher: Cipher, block_ctrs):
         return DepthTracked(mod.add(x.value, shifted), max(x.depth, sq.depth))
 
     rc = consts["rc"]
-    if p.kind == "hera":
-        rcs = rc.reshape(rc.shape[:-1] + (p.n_arks, p.n))
-        x = ark(x, rcs[..., 0, :])
-        for j in range(1, p.rounds):
-            x = linear(R.mrmc, x)
-            x = cube(x)
-            x = ark(x, rcs[..., j, :])
-        x = linear(R.mrmc, x)
-        x = cube(x)
-        x = linear(R.mrmc, x)
-        x = ark(x, rcs[..., p.rounds, :])
-        return x.value, x.depth
-
-    n, l, r = p.n, p.l, p.rounds
-    x = ark(x, rc[..., 0:n])
-    for j in range(1, r):
-        x = linear(R.mrmc, x)
-        x = feistel(x)
-        x = ark(x, rc[..., j * n : (j + 1) * n])
-    x = linear(R.mrmc, x)
-    x = feistel(x)
-    x = linear(R.mrmc, x)
-    x = DepthTracked(R.truncate(p, x.value), x.depth)
-    x = ark_trunc(x, rc[..., r * n : r * n + l], l)
-    # AGN noise is added by the *client*; the server's circuit stops here —
-    # the noise rides along inside the symmetric ciphertext (that is the
-    # point of Rubato: the cipher's own noise doubles as HE noise).
+    for op in sched.ops:
+        if isinstance(op, S.ARK):
+            a, b = op.rc_slice
+            kt = DepthTracked(k.value[..., : op.key_len], k.depth)
+            x = cm.add(x, DepthTracked(
+                mod.mul(kt.value, rc[..., a:b]), kt.depth))
+        elif isinstance(op, S.MRMC):
+            x = DepthTracked(R.mrmc(p, x.value), x.depth)  # plaintext linear
+        elif isinstance(op, S.NONLINEAR):
+            x = cube(x) if op.kind == "cube" else feistel(x)
+        elif isinstance(op, S.TRUNCATE):
+            x = DepthTracked(x.value[..., : op.keep], x.depth)
+        elif isinstance(op, S.AGN):
+            # AGN noise is added by the *client*; the server's circuit stops
+            # here — the noise rides along inside the symmetric ciphertext
+            # (that is the point of Rubato: the cipher's own noise doubles
+            # as HE noise).
+            pass
     return x.value, x.depth
 
 

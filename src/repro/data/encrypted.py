@@ -130,12 +130,14 @@ class FarmEncryptedSource:
     def __init__(self, source, batch: CipherBatch,
                  session: Optional[StreamSession] = None,
                  engine=None, consumer: Optional[str] = None, mesh=None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 variant: Optional[str] = None):
         self.source = source
         self.batch = batch
         self.session = session if session is not None else batch.add_session()
         self.farm = KeystreamFarm(batch, engine=engine, consumer=consumer,
-                                  mesh=mesh, interpret=interpret)
+                                  mesh=mesh, interpret=interpret,
+                                  variant=variant)
 
     @property
     def cipher(self) -> Cipher:

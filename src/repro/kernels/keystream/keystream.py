@@ -19,6 +19,22 @@ T1–T4 technique mapping below is documented in docs/DESIGN.md §3:
     multiplies that remain (key schedule, Cube/Feistel) use the 14-bit limb
     scheme, uint32 only.
 
+The kernel body is a *schedule interpreter*: it executes the declarative
+round program from `core/schedule.py` — the same `build_schedule(params)`
+ops the pure-JAX reference interprets — so there is ONE code path for both
+ciphers and any future scheme is a schedule, not a new kernel.  Orientation
+handling (the paper's alternating MixColumns/MixRows order, Eq. 2):
+
+  * a transposed-orientation MRMC is the identical shift-add datapath with
+    the output stacking relabeled (`mrmc_matrix_apply(transpose_out=...)`)
+    — no relayout, the TPU bubble elimination;
+  * transposed ARKs read constants the wrapper pre-permuted into storage
+    order (`Schedule.rc_storage_perm`) — the RNG FIFO delivers constants in
+    exactly the order the datapath consumes them — and a second, permuted
+    key column rides along in the (n, 2) key input;
+  * transposed Feistel is a static row/column shift of the (v, v, BLK)
+    view (logical neighbors sit one sublane-row up).
+
 Layout: lane-major (state dim on sublanes, keystream lanes on vector lanes).
 """
 
@@ -31,8 +47,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core import schedule as S
 from repro.core.params import CipherParams
-
+from repro.core.schedule import Schedule, build_schedule, transpose_perm
 from repro.crypto.modmath import Modulus
 from repro.kernels.mrmc.mrmc import mrmc_matrix_apply
 
@@ -46,7 +63,21 @@ def _feistel(mod: Modulus, x):
     return mod.add(x, shifted)
 
 
-def _keystream_kernel(params: CipherParams, with_noise: bool, *refs):
+def _feistel_transposed(mod: Modulus, v: int, x):
+    """Feistel on transposed-stored (n, BLK) state via static shifts of the
+    (v, v, BLK) view: stored row c*v+r holds logical element r*v+c, so the
+    logical predecessor is one view-row up, wrapping to (v-1, r-1)."""
+    sq = mod.mul(x, x).reshape(v, v, -1)          # axes (c, r, lane)
+    row0 = jnp.concatenate(
+        [jnp.zeros_like(sq[:1, :1]), sq[v - 1:, : v - 1]], axis=1
+    )
+    shifted = jnp.concatenate([row0, sq[: v - 1]], axis=0).reshape(x.shape)
+    return mod.add(x, shifted)
+
+
+def _keystream_kernel(params: CipherParams, sched: Schedule,
+                      with_noise: bool, *refs):
+    """One grid step: interpret the schedule program on a (n, BLK) block."""
     if with_noise:
         key_ref, rc_ref, noise_ref, o_ref = refs
     else:
@@ -56,83 +87,98 @@ def _keystream_kernel(params: CipherParams, with_noise: bool, *refs):
     p = params
     mod = p.mod
     mat = p.mix_matrix()
-    n, l, v, r = p.n, p.l, p.v, p.rounds
+    n, v = p.n, p.v
 
-    key = key_ref[...]          # (n, 1) — broadcasts against (n, BLK)
-    rc = rc_ref[...]            # (n_round_constants, BLK)
-    # ic = (1, ..., n) built in-kernel (n < q, so no reduction needed)
+    key2 = key_ref[...]         # (n, 2): col 0 normal, col 1 transposed
+    rc = rc_ref[...]            # (n_round_constants, BLK), STORAGE order
+    # ic = (1, ..., n) built in-kernel (n < q, so no reduction needed);
+    # programs always start in normal orientation
     x = jax.lax.broadcasted_iota(
         jnp.uint32, (n, rc.shape[-1]), 0
     ) + jnp.uint32(1)
 
-    def ark(x, rc_slice, keyv):
-        return mod.add(x, mod.mul(keyv, rc_slice))
-
-    def mrmc(x):
-        X = x.reshape(v, v, -1)
-        return mrmc_matrix_apply(mod, mat, X).reshape(n, -1)
-
-    if p.kind == "hera":
-        rcs = [rc[i * n : (i + 1) * n] for i in range(p.n_arks)]
-        x = ark(x, rcs[0], key)
-        for j in range(1, r):
-            x = mrmc(x)
-            x = mod.cube(x)
-            x = ark(x, rcs[j], key)
-        x = mrmc(x)
-        x = mod.cube(x)
-        x = mrmc(x)
-        x = ark(x, rcs[r], key)
-        o_ref[...] = x
-        return
-
-    # rubato
-    x = ark(x, rc[0:n], key)
-    for j in range(1, r):
-        x = mrmc(x)
-        x = _feistel(mod, x)
-        x = ark(x, rc[j * n : (j + 1) * n], key)
-    x = mrmc(x)
-    x = _feistel(mod, x)
-    x = mrmc(x)
-    x = x[:l]
-    x = ark(x, rc[r * n : r * n + l], key[:l])
-    if noise_ref is not None:
-        e = noise_ref[...]
-        x = mod.add(x, mod.reduce(
-            jnp.where(e < 0, e + jnp.int32(mod.q), e).astype(jnp.uint32),
-            2 * mod.q,
-        ))
+    for op in sched.ops:
+        if isinstance(op, S.ARK):
+            a, b = op.rc_slice
+            col = 1 if op.orientation == S.TRANSPOSED else 0
+            k = key2[:, col : col + 1][: op.key_len]
+            x = mod.add(x, mod.mul(k, rc[a:b]))
+        elif isinstance(op, S.MRMC):
+            x = mrmc_matrix_apply(
+                mod, mat, x.reshape(v, v, -1),
+                transpose_out=op.orientation != op.out_orientation,
+            ).reshape(n, -1)
+        elif isinstance(op, S.NONLINEAR):
+            if op.kind == "cube":
+                x = mod.cube(x)
+            elif op.orientation == S.TRANSPOSED:
+                x = _feistel_transposed(mod, v, x)
+            else:
+                x = _feistel(mod, x)
+        elif isinstance(op, S.TRUNCATE):
+            x = x[: op.keep]
+        elif isinstance(op, S.AGN) and noise_ref is not None:
+            e = noise_ref[...]
+            x = mod.add(x, mod.reduce(
+                jnp.where(e < 0, e + jnp.int32(mod.q), e).astype(jnp.uint32),
+                2 * mod.q,
+            ))
     o_ref[...] = x
 
 
 def keystream_pallas(params: CipherParams, key_n1, rc_cl, noise_ll=None, *,
-                     interpret: bool):
-    """key_n1: (n, 1) u32; rc_cl: (n_consts, lanes) u32;
-    noise_ll: (l, lanes) int32 or None.  lanes % BLK == 0.
-    Returns (l, lanes) u32 keystream (lane-major)."""
+                     interpret: bool, schedule: Schedule | None = None):
+    """key_n1: (n, 1) u32; rc_cl: (n_consts, lanes) u32 in logical order;
+    noise_ll: (l, lanes) int32 or None.  Returns (l, lanes) u32 keystream
+    (lane-major).
+
+    Ragged lane counts are padded up to a BLK multiple and trimmed on the
+    way out, so any farm window size compiles (the pad lanes compute junk
+    keystream that is discarded).  ``schedule`` defaults to the normal
+    variant of ``build_schedule(params)``.
+    """
     p = params
+    if schedule is None:
+        schedule = build_schedule(p)
     lanes = rc_cl.shape[-1]
-    assert lanes % BLK == 0, lanes
+    pad = (-lanes) % BLK
+    if pad:
+        rc_cl = jnp.pad(rc_cl, ((0, 0), (0, pad)))
+        if noise_ll is not None:
+            noise_ll = jnp.pad(noise_ll, ((0, 0), (0, pad)))
+    padded = lanes + pad
     nc = p.n_round_constants
+
+    # deliver constants in storage order (transposed ARK slices pre-permuted
+    # — the RNG-FIFO ordering the datapath consumes) and both key
+    # orientations; static gathers on tiny host-visible arrays, outside the
+    # kernel
+    rc_perm = schedule.rc_storage_perm()
+    if rc_perm is not None:
+        rc_cl = rc_cl[rc_perm]
+    key_n2 = jnp.concatenate(
+        [key_n1, key_n1[np.asarray(transpose_perm(p.v))]], axis=1
+    )
+
     with_noise = noise_ll is not None
-    grid = (lanes // BLK,)
+    grid = (padded // BLK,)
 
     in_specs = [
-        pl.BlockSpec((p.n, 1), lambda i: (0, 0)),       # key: replicated
+        pl.BlockSpec((p.n, 2), lambda i: (0, 0)),       # key: replicated
         pl.BlockSpec((nc, BLK), lambda i: (0, i)),      # constants: streamed
     ]
-    args = [key_n1, rc_cl]
+    args = [key_n2, rc_cl]
     if with_noise:
         in_specs.append(pl.BlockSpec((p.l, BLK), lambda i: (0, i)))
         args.append(noise_ll)
 
-    kernel = functools.partial(_keystream_kernel, p, with_noise)
-    return pl.pallas_call(
+    kernel = functools.partial(_keystream_kernel, p, schedule, with_noise)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((p.l, BLK), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((p.l, lanes), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((p.l, padded), jnp.uint32),
         interpret=interpret,
     )(*args)
+    return out[:, :lanes] if pad else out

@@ -25,7 +25,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.params import CipherParams
-from repro.kernels.keystream.keystream import BLK, keystream_pallas
+from repro.core.schedule import build_schedule
+from repro.kernels.keystream.keystream import keystream_pallas
 
 if TYPE_CHECKING:  # annotation only — core.engine imports this module
     from repro.core.cipher import Cipher
@@ -35,28 +36,35 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("params", "interpret"))
+@functools.partial(jax.jit, static_argnames=("params", "interpret", "variant"))
 def keystream_kernel_apply(params: CipherParams, key, rc, noise=None,
-                           interpret: bool | None = None):
+                           interpret: bool | None = None,
+                           variant: str = "normal"):
     """key: (n,) u32; rc: (lanes, n_round_constants) u32; noise: (lanes, l)
-    int32 or None.  Returns (lanes, l) u32 keystream blocks."""
+    int32 or None.  Returns (lanes, l) u32 keystream blocks.
+
+    ``variant`` selects the schedule orientation plan ("normal" |
+    "alternating", see core/schedule.py) — bit-exact either way.  Ragged
+    lane counts are padded/trimmed inside :func:`keystream_pallas`.
+    """
     if interpret is None:
         interpret = _auto_interpret()
-    lanes = rc.shape[0]
-    pad = (-lanes) % BLK
-    rc_p = jnp.pad(rc, ((0, pad), (0, 0))).T          # (n_consts, lanes_p)
+    sched = build_schedule(params, variant)
+    rc_p = rc.T                                       # (n_consts, lanes)
     noise_p = None
     if noise is not None and params.n_noise:
-        noise_p = jnp.pad(noise, ((0, pad), (0, 0))).T  # (l, lanes_p)
+        noise_p = noise.T                             # (l, lanes)
     out = keystream_pallas(
-        params, key[:, None], rc_p, noise_p, interpret=interpret
+        params, key[:, None], rc_p, noise_p, interpret=interpret,
+        schedule=sched,
     )
-    return out.T[:lanes]
+    return out.T
 
 
 def keystream_kernel_sharded(params: CipherParams, key, rc, noise=None, *,
                              mesh=None, axis: str = "data",
-                             interpret: bool | None = None):
+                             interpret: bool | None = None,
+                             variant: str = "normal"):
     """Lane-sharded fused consumer: rc/noise split over ``mesh[axis]``.
 
     Same signature/semantics as :func:`keystream_kernel_apply`; lanes are
@@ -66,7 +74,7 @@ def keystream_kernel_sharded(params: CipherParams, key, rc, noise=None, *,
     """
     if mesh is None or mesh.shape.get(axis, 1) == 1:
         return keystream_kernel_apply(params, key, rc, noise,
-                                      interpret=interpret)
+                                      interpret=interpret, variant=variant)
     ndev = mesh.shape[axis]
     lanes = rc.shape[0]
     pad = (-lanes) % ndev
@@ -80,7 +88,7 @@ def keystream_kernel_sharded(params: CipherParams, key, rc, noise=None, *,
     def shard_fn(key_s, rc_s, *noise_s):
         return keystream_kernel_apply(
             params, key_s, rc_s, noise_s[0] if noise_s else None,
-            interpret=interpret,
+            interpret=interpret, variant=variant,
         )
 
     out = shard_map(

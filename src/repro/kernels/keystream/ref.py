@@ -1,16 +1,24 @@
-"""Pure-jnp oracle for the fused keystream kernel: the core cipher itself."""
+"""Pure-jnp oracle for the fused keystream kernel: the core cipher itself.
+
+Delegates to the SAME `build_schedule(params)` program the Pallas kernel
+interprets (core/schedule.py) — the oracle and the kernel cannot drift
+because they execute one shared cipher description.
+"""
 
 from __future__ import annotations
 
-from repro.core.hera import hera_stream_key
 from repro.core.params import CipherParams
-from repro.core.rubato import rubato_stream_key
+from repro.core.schedule import build_schedule, execute_schedule
 
 
-def keystream_ref(params: CipherParams, key, rc, noise=None):
+def keystream_ref(params: CipherParams, key, rc, noise=None,
+                  variant: str = "normal"):
     """key: (n,) u32; rc: (lanes, n_round_constants) u32; noise: (lanes, l)
-    int32 or None.  Returns (lanes, l) u32 keystream blocks."""
-    if params.kind == "hera":
-        rcs = rc.reshape(rc.shape[:-1] + (params.n_arks, params.n))
-        return hera_stream_key(params, key, rcs)
-    return rubato_stream_key(params, key, rc, noise)
+    int32 or None.  Returns (lanes, l) u32 keystream blocks.
+
+    ``variant`` picks the schedule orientation plan ("normal" |
+    "alternating") — bit-exact by Eq. 2, property-tested in
+    tests/test_schedule.py.
+    """
+    sched = build_schedule(params, variant)
+    return execute_schedule(params, sched, key, rc, noise)

@@ -54,9 +54,18 @@ def _combine(mod: Modulus, terms):
     return mod.reduce(acc, bound)
 
 
-def mrmc_matrix_apply(mod: Modulus, mat: np.ndarray, x):
+def mrmc_matrix_apply(mod: Modulus, mat: np.ndarray, x,
+                      transpose_out: bool = False):
     """Apply M·X·Mᵀ to x of shape (v, v, ...) — shared by this kernel and
-    the fused keystream kernel (state stays wherever it lives; VMEM here)."""
+    the fused keystream kernel (state stays wherever it lives; VMEM here).
+
+    ``transpose_out=True`` emits (M·X·Mᵀ)ᵀ instead — the schedule IR's
+    orientation flip (core/schedule.py).  Because the state dims are fully
+    unrolled, the flip is a static relabeling of the output stacking axis:
+    zero extra compute, no relayout — the TPU form of the paper's Eq. 2
+    bubble elimination (MRMC commutes with transposition, so either
+    orientation runs the identical shift-add datapath).
+    """
     v = mat.shape[0]
     # MixColumns: a[i] = Σ_j M[i,j] · x[j]   (x[j] is state row j: (v, ...))
     a = [
@@ -69,7 +78,9 @@ def mrmc_matrix_apply(mod: Modulus, mat: np.ndarray, x):
         _combine(mod, [_scale_small(mod, a[:, j], int(mat[c, j])) for j in range(v)])
         for c in range(v)
     ]
-    return jnp.stack(y, axis=1)  # (v, v, ...)
+    # y[c] is the c-th *column* of M·X·Mᵀ: stacking on axis 1 lays columns
+    # out as columns (normal); axis 0 lays them out as rows (transposed)
+    return jnp.stack(y, axis=0 if transpose_out else 1)
 
 
 def _mrmc_kernel(mat: np.ndarray, q: int, x_ref, o_ref):
@@ -81,7 +92,11 @@ def mrmc_pallas(params: CipherParams, x_vvl, *, interpret: bool):
     """x_vvl: (v, v, lanes) uint32, lanes % BLK == 0.  Returns same shape."""
     v = params.v
     lanes = x_vvl.shape[-1]
-    assert lanes % BLK == 0, lanes
+    if lanes % BLK != 0:
+        raise ValueError(
+            f"mrmc_pallas needs lanes % {BLK} == 0 (got {lanes}); use "
+            "mrmc_kernel_apply, which pads and trims ragged lane counts"
+        )
     grid = (lanes // BLK,)
     kernel = functools.partial(_mrmc_kernel, params.mix_matrix(), params.mod.q)
     return pl.pallas_call(

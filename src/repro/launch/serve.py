@@ -53,7 +53,7 @@ class EncryptedChannel:
     """
 
     def __init__(self, cipher_name: str, batch: int, engine: str = "auto",
-                 window: int = 0, seed: int = 0):
+                 window: int = 0, seed: int = 0, variant: str = "auto"):
         self.batch = CipherBatch(cipher_name, seed=seed)
         self.lanes = batch
         self.l = self.batch.params.l
@@ -63,13 +63,17 @@ class EncryptedChannel:
         self.window = window
         self.server: HHEServer | None = None
         self.engine = engine
+        # schedule-orientation plan: "auto" = the engine's preferred one
+        # (alternating on the unrolled kernel; bit-exact either way)
+        self.variant = variant
         for _ in range(batch):
             self.batch.add_session()
 
     def _server(self, blocks_hint: int) -> HHEServer:
         if self.server is None:
             w = self.window or max(1, self.lanes * blocks_hint)
-            self.server = HHEServer(self.batch, window=w, engine=self.engine)
+            self.server = HHEServer(self.batch, window=w, engine=self.engine,
+                                    variant=self.variant)
             self.server.warmup()
         return self.server
 
@@ -157,6 +161,10 @@ def main(argv=None):
     ap.add_argument("--window", type=int, default=0,
                     help="farm window lanes for --encrypted "
                          "(0 = one prompt wave)")
+    ap.add_argument("--schedule-variant", default="auto",
+                    choices=["auto", "normal", "alternating"],
+                    help="cipher schedule-orientation plan for --encrypted "
+                         "(core/schedule.py; 'auto' = engine preference)")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -180,13 +188,15 @@ def main(argv=None):
     chan = None
     if args.encrypted:
         chan = EncryptedChannel(args.cipher, args.batch, engine=args.engine,
-                                window=args.window, seed=args.seed)
+                                window=args.window, seed=args.seed,
+                                variant=args.schedule_variant)
         cts = chan.client_encrypt(prompts)                 # client side
         toks = chan.serve_decrypt_prompts(cts, args.prompt_len)
         np.testing.assert_array_equal(np.asarray(toks), prompts)
         batch = {"tokens": toks}
         print(f"prompts arrived HHE-encrypted; decrypted through "
               f"KeystreamFarm windows (engine={chan.server.farm.engine.name}"
+              f", schedule={chan.server.farm.engine.variant}"
               f", window={chan.server.window}, "
               f"{args.batch} sessions)")
     else:

@@ -99,14 +99,15 @@ class HHEServer:
     def __init__(self, batch: CipherBatch, window: int = 256,
                  engine=None, *, consumer: Optional[str] = None, mesh=None,
                  axis: str = "data", interpret: Optional[bool] = None,
-                 auto_rotate: bool = True):
+                 variant: Optional[str] = None, auto_rotate: bool = True):
         if window <= 0:
             raise ValueError("window must be positive")
         self.batch = batch
         self.window = window
         self.auto_rotate = auto_rotate
         self.farm = KeystreamFarm(batch, engine=engine, consumer=consumer,
-                                  mesh=mesh, axis=axis, interpret=interpret)
+                                  mesh=mesh, axis=axis, interpret=interpret,
+                                  variant=variant)
         self._queue: List[tuple] = []     # (request, ctrs, t_submit)
         self._done: List[HHEResponse] = []   # rotation-forced early flushes
         self.latencies: List[float] = []

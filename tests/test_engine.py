@@ -27,9 +27,10 @@ from repro.kernels.keystream.ref import keystream_ref
 
 # every preset in core/params.py REGISTRY; every engine that can run on any
 # backend (compiled "pallas" and "sharded" need TPU / a mesh — covered
-# separately below)
+# separately below); both schedule-orientation variants (core/schedule.py)
 PRESETS = ["hera-128a", "rubato-128s", "rubato-128m", "rubato-128l"]
 PORTABLE_ENGINES = ["ref", "jax", "pallas-interpret"]
+VARIANTS = ["normal", "alternating"]
 LANES = 3
 
 
@@ -41,18 +42,20 @@ def _constants(name, with_noise):
 
 
 # ---------------------------------------------------------------------------
-# The engine matrix: bit-exactness across backends
+# The engine matrix: bit-exactness across backends and schedule variants
 # ---------------------------------------------------------------------------
+@pytest.mark.parametrize("variant", VARIANTS)
 @pytest.mark.parametrize("with_noise", [False, True])
 @pytest.mark.parametrize("name", PRESETS)
 @pytest.mark.parametrize("engine", PORTABLE_ENGINES)
-def test_engine_matrix_bit_exact(engine, name, with_noise):
+def test_engine_matrix_bit_exact(engine, name, with_noise, variant):
     p = get_params(name)
     if with_noise and not p.n_noise:
         pytest.skip("preset has no AGN noise (HERA)")
     ci, rc, noise = _constants(name, with_noise)
     want = np.array(keystream_ref(p, ci.key, rc, noise))
-    eng = make_engine(engine, p, ci.key)
+    eng = make_engine(engine, p, ci.key, variant=variant)
+    assert eng.variant == variant
     got = np.array(eng.keystream_from_constants(rc, noise))
     np.testing.assert_array_equal(got, want)
     assert got.shape == (LANES, p.l)
@@ -98,6 +101,53 @@ def test_engine_caps_report():
     if jax.default_backend() != "tpu":
         assert not caps["pallas"].available
         assert "pallas-interpret" in caps["pallas"].reason
+    # schedule-variant reporting: every backend executes both orientation
+    # plans; the unrolled kernel prefers the bubble-free alternating one
+    for c in caps.values():
+        assert set(c.schedule_variants) == {"normal", "alternating"}
+        assert c.preferred_variant in c.schedule_variants
+    assert caps["pallas"].preferred_variant == "alternating"
+    assert caps["ref"].preferred_variant == "normal"
+
+
+def test_engine_variant_auto_and_validation():
+    ci = make_cipher("hera-128a", seed=1)
+    eng = make_engine("pallas-interpret", ci.params, ci.key, variant="auto")
+    assert eng.variant == "alternating"
+    assert eng.schedule.name == "hera-128a/alternating"
+    assert make_engine("jax", ci.params, ci.key, variant="auto").variant == \
+        "normal"
+    with pytest.raises(ValueError, match="schedule variant"):
+        make_engine("ref", ci.params, ci.key, variant="diagonal")
+
+
+def test_make_engine_instance_variant_contract():
+    """A pre-bound engine passes through with its own plan (variant
+    unspecified or matching), but an explicit contradicting variant must
+    raise rather than be silently ignored."""
+    ci = make_cipher("hera-128a", seed=1)
+    eng = make_engine("jax", ci.params, ci.key, variant="alternating")
+    assert make_engine(eng, ci.params, ci.key) is eng
+    assert make_engine(eng, ci.params, ci.key,
+                       variant="alternating") is eng
+    with pytest.raises(ValueError, match="already executes"):
+        make_engine(eng, ci.params, ci.key, variant="normal")
+    with pytest.raises(ValueError, match="already executes"):
+        KeystreamFarm(_batch_for(ci), engine=eng, variant="normal")
+
+
+def _batch_for(ci):
+    cb = CipherBatch(ci.params, key=np.asarray(ci.key), seed=9)
+    cb.add_session()
+    return cb
+
+
+def test_engine_describe_table():
+    from repro.core.engine import describe
+    text = describe()
+    for name in registered_engines():
+        assert name in text
+    assert "auto resolves to" in text
 
 
 def test_resolve_auto_matches_backend():

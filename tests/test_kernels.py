@@ -90,6 +90,23 @@ def test_keystream_kernel_ragged_lanes_no_noise(lanes):
     assert got.shape == (lanes, p.l)
 
 
+def test_keystream_pallas_direct_ragged_lanes():
+    """keystream_pallas itself (lane-major entry) pads ragged lane counts
+    to a BLK multiple and trims the output — no `lanes % BLK` assert left
+    for farm windows to trip."""
+    from repro.kernels.keystream.keystream import keystream_pallas
+
+    ci = make_cipher("hera-128a", seed=11)
+    p = ci.params
+    lanes = 5
+    consts = ci.round_constant_stream(jnp.arange(lanes, dtype=jnp.uint32))
+    got = np.array(keystream_pallas(
+        p, ci.key[:, None], consts["rc"].T, None, interpret=True))
+    want = np.array(keystream_ref(p, ci.key, consts["rc"], None)).T
+    assert got.shape == (p.l, lanes)
+    np.testing.assert_array_equal(got, want)
+
+
 def test_keystream_kernel_sharded_single_device():
     """1-device mesh: the shard_map path must reduce to the plain apply."""
     ci = make_cipher("hera-128a", seed=11)

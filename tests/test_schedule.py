@@ -1,0 +1,206 @@
+"""Round-schedule IR tests (core/schedule.py).
+
+Three layers of protection:
+
+  * **golden vectors** — checked-in SHA-256 digests of the keystream for
+    every preset × noise on/off, generated from the pre-IR (PR 2) executors.
+    Any schedule/executor drift — op order, rc-slice accounting, orientation
+    handling — breaks these.  scripts/ci.sh runs this file in its
+    schedule-drift stage.
+  * **orientation property** — the alternating-orientation variant is
+    bit-exact with the normal one on every preset (the executable form of
+    Eq. 2: MRMC commutes with transposition, so the orientation plan is
+    pure scheduling), for both the pure-JAX interpreter and the Pallas
+    kernel.
+  * **program structure** — accounting (n_arks, n_round_constants) matches
+    the paper's FIFO-depth numbers and params derives it from the program;
+    validate() rejects malformed orientation chains.
+"""
+
+import dataclasses
+import hashlib
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build_schedule, execute_schedule, make_cipher
+from repro.core import schedule as S
+from repro.core.params import get_params
+from repro.kernels.keystream.ops import keystream_kernel_apply
+from repro.kernels.keystream.ref import keystream_ref
+
+PRESETS = ["hera-128a", "rubato-128s", "rubato-128m", "rubato-128l"]
+SEED, LANES = 123, 4
+
+# SHA-256 of the little-endian uint32 keystream bytes for
+# make_cipher(name, seed=123) over block counters 0..3 — generated from the
+# pre-schedule-IR executors (PR 2 tree).  These digests pin the cipher
+# itself: regenerating them is only legitimate when the cipher definition
+# deliberately changes, never to "fix" a refactor.
+GOLDEN = {
+    ("hera-128a", "plain"): "894abb58f75f5306e40200bc670d9e4672dd5e345d1f0ad97545c22f1b1132b2",
+    ("rubato-128s", "plain"): "9c46b0244571ba344f043498875dea5576c0a6775e39676294191a7e0adf315f",
+    ("rubato-128s", "noise"): "e5d632a451be7b27918ac669ef8bf177fd814b779658d28550e396eedc97ee75",
+    ("rubato-128m", "plain"): "28a0da4bdad86ca4d35079d7997441efc183508227ff3be81cd271c950b86d8b",
+    ("rubato-128m", "noise"): "37acf76c4ab8438e866e6ee38f69c32170fb09462d6012991e3787953921b9ee",
+    ("rubato-128l", "plain"): "286453548ffff0abc2231c2603cd895410bab849f334f58b6eff6276d74a5471",
+    ("rubato-128l", "noise"): "f89adf017a718905d2e7c40eaac8aebb014111ecba24975b52b75ac7cfca2099",
+}
+
+
+def _constants(name):
+    ci = make_cipher(name, seed=SEED)
+    consts = ci.round_constant_stream(jnp.arange(LANES, dtype=jnp.uint32))
+    return ci, consts
+
+
+def _digest(z) -> str:
+    return hashlib.sha256(np.array(z).astype("<u4").tobytes()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors: schedule executors vs the checked-in pre-IR keystream
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("with_noise", [False, True])
+@pytest.mark.parametrize("name", PRESETS)
+def test_golden_keystream_digest(name, with_noise):
+    p = get_params(name)
+    if with_noise and not p.n_noise:
+        pytest.skip("preset has no AGN noise (HERA)")
+    ci, consts = _constants(name)
+    noise = consts["noise"] if with_noise else None
+    z = keystream_ref(p, ci.key, consts["rc"], noise)
+    assert _digest(z) == GOLDEN[(name, "noise" if with_noise else "plain")]
+
+
+@pytest.mark.parametrize("name", PRESETS)
+def test_golden_digest_alternating_variant(name):
+    """The alternating orientation plan must hit the same golden digest."""
+    p = get_params(name)
+    ci, consts = _constants(name)
+    z = keystream_ref(p, ci.key, consts["rc"], consts["noise"],
+                      variant="alternating")
+    assert _digest(z) == GOLDEN[(name, "noise" if p.n_noise else "plain")]
+
+
+# ---------------------------------------------------------------------------
+# Orientation property: alternating == normal, bit for bit (Eq. 2)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", PRESETS)
+def test_alternating_bit_exact_pure_jax(name):
+    p = get_params(name)
+    ci, consts = _constants(name)
+    a = execute_schedule(p, build_schedule(p, "normal"), ci.key,
+                         consts["rc"], consts["noise"])
+    b = execute_schedule(p, build_schedule(p, "alternating"), ci.key,
+                         consts["rc"], consts["noise"])
+    np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+@pytest.mark.parametrize("name", ["hera-128a", "rubato-128s"])
+def test_alternating_bit_exact_kernel(name):
+    """Kernel-side orientation handling (storage-order constants, permuted
+    key column, transposed Feistel shifts) vs the normal plan.  The full
+    engine × preset × variant matrix lives in tests/test_engine.py; this is
+    the fast direct-kernel check."""
+    p = get_params(name)
+    ci, consts = _constants(name)
+    a = keystream_kernel_apply(p, ci.key, consts["rc"], consts["noise"],
+                               interpret=True, variant="normal")
+    b = keystream_kernel_apply(p, ci.key, consts["rc"], consts["noise"],
+                               interpret=True, variant="alternating")
+    np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+@pytest.mark.parametrize("name", PRESETS)
+def test_eq2_licenses_transposed_rounds(name, rng):
+    """Eq. 2: MRMC(Xᵀ) = MRMC(X)ᵀ ⇒ mrmc_transposed ≡ mrmc on the stored
+    array — exactly why the alternating variant's transposed-state MRMC
+    runs the unmodified datapath, and why a flip is a pure output relabel
+    (_mrmc_flat's swapaxes)."""
+    from repro.core import rounds as R
+    from repro.core.schedule import _mrmc_flat
+
+    p = get_params(name)
+    x = jnp.asarray(rng.integers(0, p.mod.q, (6, p.n), dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.array(R.mrmc_transposed(p, x)), np.array(R.mrmc(p, x)))
+    v = p.v
+    flipped = np.array(_mrmc_flat(p, x, flip_out=True)).reshape(6, v, v)
+    plain = np.array(_mrmc_flat(p, x, flip_out=False)).reshape(6, v, v)
+    np.testing.assert_array_equal(flipped, np.swapaxes(plain, 1, 2))
+
+
+def test_alternating_uses_both_orientations():
+    """The alternating plan must actually flip (else the property test is
+    vacuous): transposed ARKs and nonlinear layers appear for every preset,
+    and Eq. 2 (mrmc_transposed) is what licenses them."""
+    for name in PRESETS:
+        sched = build_schedule(get_params(name), "alternating")
+        assert any(op.orientation == S.TRANSPOSED for op in sched.ops
+                   if isinstance(op, S.ARK)), name
+        assert any(op.orientation == S.TRANSPOSED for op in sched.ops
+                   if isinstance(op, S.NONLINEAR)), name
+        assert not build_schedule(get_params(name)).has_transposed_ops
+
+
+# ---------------------------------------------------------------------------
+# Program structure and derived accounting
+# ---------------------------------------------------------------------------
+def test_accounting_derives_from_program():
+    # Presto §IV-C FIFO depths: HERA 96, Rubato Par-128L 188 = 64+64+60
+    hera = build_schedule(get_params("hera-128a"))
+    rub = build_schedule(get_params("rubato-128l"))
+    assert hera.n_arks == 6 and hera.n_round_constants == 96
+    assert rub.n_arks == 3 and rub.n_round_constants == 188
+    # params delegates to the program (no duplicated formulas)
+    assert get_params("hera-128a").n_round_constants == 96
+    assert get_params("rubato-128l").n_arks == 3
+
+
+def test_program_shapes():
+    hera = build_schedule(get_params("hera-128a"))
+    rub = build_schedule(get_params("rubato-128l"))
+    # HERA: no truncation, no AGN; Rubato: both
+    assert not any(isinstance(op, (S.TRUNCATE, S.AGN)) for op in hera.ops)
+    assert any(isinstance(op, S.TRUNCATE) for op in rub.ops)
+    assert isinstance(rub.ops[-1], S.AGN)
+    # both ciphers share the skeleton: r+1 MRMCs, r nonlinear layers
+    for name in PRESETS:
+        p = get_params(name)
+        sched = build_schedule(p)
+        assert sched.n_mrmc == p.rounds + 1
+        assert sum(isinstance(op, S.NONLINEAR)
+                   for op in sched.ops) == p.rounds
+
+
+def test_validate_rejects_broken_orientation_chain():
+    sched = build_schedule(get_params("hera-128a"), "alternating")
+    ops = list(sched.ops)
+    # claim the final ARK runs transposed without an MRMC flip before it
+    ops[-1] = dataclasses.replace(ops[-1], orientation=S.TRANSPOSED)
+    with pytest.raises(ValueError, match="expects transposed"):
+        dataclasses.replace(sched, ops=tuple(ops)).validate()
+
+
+def test_unknown_variant_raises():
+    with pytest.raises(ValueError, match="unknown schedule variant"):
+        build_schedule(get_params("hera-128a"), "diagonal")
+
+
+def test_rc_storage_perm_is_slicewise_involution():
+    """The FIFO reorder permutes only within transposed ARK slices, so the
+    producer's constant *count* accounting is untouched."""
+    sched = build_schedule(get_params("rubato-128l"), "alternating")
+    perm = sched.rc_storage_perm()
+    assert perm is not None
+    assert sorted(perm) == list(range(sched.n_round_constants))
+    np.testing.assert_array_equal(perm[perm], np.arange(len(perm)))
+    assert build_schedule(get_params("rubato-128l")).rc_storage_perm() is None
+
+
+def test_describe_listing():
+    text = build_schedule(get_params("hera-128a"), "alternating").describe()
+    assert "MRMC[N->T]" in text and "CUBE[T]" in text
+    assert "rc[80:96]" in text  # final ARK slice — the 96-constant FIFO
