@@ -1,5 +1,5 @@
 """Keystream-farm bench: decoupled-batched pipeline vs coupled baseline,
-per registered engine.
+per registered engine × producer × pipeline depth.
 
     PYTHONPATH=src python benchmarks/keystream_farm_bench.py [--quick]
     PYTHONPATH=src python benchmarks/keystream_farm_bench.py --smoke   # CI
@@ -14,17 +14,22 @@ Measured here per cipher parameter set:
     `keystream_coupled` dispatch per session per window (XOF → sampling →
     rounds pinned in order by an optimization barrier, no cross-session
     batching, no overlap).
-  * **farm[<engine>]** — the `KeystreamFarm` pipeline with each consumer
-    engine from the `repro.core.engine` registry (--engines; default: the
-    "auto" engine plus "jax").  All sessions' lanes packed into one
-    window, the jit'd XOF/sampler producer for window i+1 dispatched
-    before window i's consumer runs.
+  * **farm[<engine>|<producer>|d<depth>]** — the `KeystreamFarm` pipeline
+    with each consumer engine from the `repro.core.engine` registry
+    (--engines; default: the "auto" engine plus "jax"), each constants
+    producer from the `repro.core.producer` registry (--producer;
+    default: the preset's declared XOF stream), and each producer→
+    consumer FIFO depth (--depth; default: 2, classic double buffering).
+    All sessions' lanes packed into one window, producers for up to
+    depth-1 windows ahead dispatched before each consume.
 
-Reported per engine: throughput (Melem/s of Z_q keystream) and per-window
-p50/p99 latency, across a lane-count sweep (fixed session pool, growing
-blocks-per-session) — throughput should rise monotonically with lane count
-until dispatch overhead is amortized (saturation), and the primary (auto)
-engine should dominate the coupled baseline at every size.
+Reported per mode: throughput (Melem/s of Z_q keystream), per-window
+p50/p99 latency, and the **producer/consumer overlap ratio** — the
+fraction of the producer's own latency hidden behind the consumer,
+measured as (serialized-pipeline p50 − pipelined p50) / producer-only
+p50, clamped to [0, 1].  ~1.0 means the XOF/sampling phase is fully
+hidden (the paper's T3 payoff); ~0 means a synchronous backend or a
+producer slower than the consumer.
 
 --schedule {normal,alternating} picks the schedule-orientation plan
 (core/schedule.py) the farm consumers execute; non-smoke runs additionally
@@ -33,7 +38,7 @@ primary engine (both are bit-exact — the delta is pure scheduling cost).
 
 --smoke runs a tiny sweep with no PASS/FAIL gating — the CI drift canary
 (scripts/ci.sh) that keeps every engine dispatching end-to-end on the
-selected schedule variant.
+selected schedule variant, overlap report included.
 """
 
 import sys, pathlib
@@ -60,6 +65,16 @@ def _percentiles(ts):
     return float(np.percentile(a, 50)), float(np.percentile(a, 99))
 
 
+def _window_plans(sessions, lanes, n_windows, start=0):
+    """The bench's window schedule: all sessions' lanes in one window."""
+    blocks = lanes // sessions
+    for w in range(start, start + n_windows):
+        sids = np.tile(np.arange(sessions, dtype=np.int64), blocks)
+        ctrs = np.repeat(
+            np.arange(w * blocks, (w + 1) * blocks, dtype=np.int64), sessions)
+        yield WindowPlan(sids, ctrs)
+
+
 def bench_coupled(batch: CipherBatch, lanes: int, n_windows: int):
     """One serialized keystream_coupled dispatch per session per window."""
     S = len(batch.sessions)
@@ -82,23 +97,15 @@ def bench_coupled(batch: CipherBatch, lanes: int, n_windows: int):
 
 
 def bench_farm(farm: KeystreamFarm, lanes: int, n_windows: int):
-    """Double-buffered batched windows over the same session pool."""
+    """Depth-buffered batched windows over the same session pool."""
     S = len(farm.batch.sessions)
-    blocks = lanes // S
-
-    def plans(start):
-        for w in range(start, start + n_windows):
-            sids = np.tile(np.arange(S, dtype=np.int64), blocks)
-            ctrs = np.repeat(
-                np.arange(w * blocks, (w + 1) * blocks, dtype=np.int64), S)
-            yield WindowPlan(sids, ctrs)
 
     # warmup / compile
-    for _, z in farm.run(plans(0)):
+    for _, z in farm.run(_window_plans(S, lanes, 1)):
         jax.block_until_ready(z)
         break
     lat = []
-    it = farm.run(plans(n_windows))
+    it = farm.run(_window_plans(S, lanes, n_windows, start=n_windows))
     t0 = time.perf_counter()
     while True:
         # time around the generator advance so per-window latency includes
@@ -114,27 +121,76 @@ def bench_farm(farm: KeystreamFarm, lanes: int, n_windows: int):
     return total, lat
 
 
+def bench_producer_only(farm: KeystreamFarm, lanes: int, n_windows: int):
+    """Per-window latency of the producer phase alone (XOF + sampling)."""
+    S = len(farm.batch.sessions)
+    for plan in _window_plans(S, lanes, 1):
+        jax.block_until_ready(farm.produce(plan))        # warmup
+    lat = []
+    for plan in _window_plans(S, lanes, n_windows, start=2 * n_windows):
+        tw = time.perf_counter()
+        jax.block_until_ready(farm.produce(plan))
+        lat.append(time.perf_counter() - tw)
+    return lat
+
+
+def overlap_ratio(farm: KeystreamFarm, serial_farm: KeystreamFarm,
+                  lanes: int, n_windows: int):
+    """Fraction of producer latency hidden behind the consumer.
+
+    (p50 of the depth-1 serialized pipeline − p50 of the depth-d
+    pipeline) / p50 of the producer alone, clamped to [0, 1] — the
+    window-level measurement of the paper's T3 overlap.  A memoizing
+    producer can push the serialized p50 below the pipelined one
+    (negative numerator → 0.0): nothing left to hide.
+    """
+    p_lat = bench_producer_only(farm, lanes, n_windows)
+    _, s_lat = bench_farm(serial_farm, lanes, n_windows)
+    _, d_lat = bench_farm(farm, lanes, n_windows)
+    p50_p, _ = _percentiles(p_lat)
+    p50_s, _ = _percentiles(s_lat)
+    p50_d, _ = _percentiles(d_lat)
+    if p50_p <= 0:
+        return 0.0
+    return float(np.clip((p50_s - p50_d) / p50_p, 0.0, 1.0))
+
+
 def run(name: str, lane_sweep, sessions: int, n_windows: int, reps: int,
-        engines, variant: str = "normal"):
-    """Bench one cipher: coupled baseline + one farm lap per engine.
+        engines, variant: str = "normal", producers=(None,), depths=(2,)):
+    """Bench one cipher: coupled baseline + one farm lap per
+    (engine, producer, depth) combo.
 
     ``variant`` is the schedule-orientation plan (core/schedule.py) the
-    farm consumers execute.  Returns (coupled_thr, {engine: thr}) across
+    farm consumers execute.  Returns (coupled_thr, {label: thr}) across
     the sweep for the gate."""
-    batch = CipherBatch(name, seed=0)
-    batch.add_sessions(sessions)
-    farms = {e: KeystreamFarm(batch, engine=e, variant=variant)
-             for e in engines}
-    l = batch.params.l
-    print(f"\n{name}  (sessions={sessions}, engines={list(farms)}, "
+    batches = {}
+    for prod in producers:
+        b = CipherBatch(name, seed=0, producer=prod)
+        b.add_sessions(sessions)
+        batches[b.producer.name] = b
+    base = next(iter(batches.values()))
+    # one engine instance per name, shared across farms (same params/key
+    # for every producer batch: seed=0) — no per-combo retracing
+    shared = {e: base.make_engine(e, variant=variant) for e in engines}
+    farms, serial_farms = {}, {}
+    for plabel, b in batches.items():
+        for e in engines:
+            for d in depths:
+                label = f"farm[{e}|{plabel}|d{d}]"
+                farms[label] = KeystreamFarm(b, engine=shared[e], depth=d)
+                serial_farms[label] = KeystreamFarm(b, engine=shared[e],
+                                                    depth=1)
+    l = base.params.l
+    print(f"\n{name}  (sessions={sessions}, engines={list(engines)}, "
+          f"producers={list(batches)}, depths={list(depths)}, "
           f"schedule={variant}, backend={jax.default_backend()}, "
           f"windows={n_windows})")
-    print(f"  {'lanes':>6}  {'mode':24} {'Melem/s':>9} {'win p50 ms':>11} "
-          f"{'win p99 ms':>11}")
-    modes = [("coupled/session", bench_coupled, batch)]
-    modes += [(f"farm[{e}]", bench_farm, farm) for e, farm in farms.items()]
+    print(f"  {'lanes':>6}  {'mode':28} {'Melem/s':>9} {'win p50 ms':>11} "
+          f"{'win p99 ms':>11} {'overlap':>8}")
+    modes = [("coupled/session", bench_coupled, base)]
+    modes += [(label, bench_farm, farm) for label, farm in farms.items()]
     coupled_thr = []
-    farm_thr = {e: [] for e in farms}
+    farm_thr = {label: [] for label in farms}
     for lanes in lane_sweep:
         # best-of-reps, modes interleaved within each rep so machine-load
         # drift cannot systematically favor one mode
@@ -148,22 +204,28 @@ def run(name: str, lane_sweep, sessions: int, n_windows: int, reps: int,
         for label, _, _ in modes:
             thr, lat = best[label]
             p50, p99 = _percentiles(lat)
-            print(f"  {lanes:6d}  {label:24} {thr:9.2f} {p50:11.2f} "
-                  f"{p99:11.2f}")
+            if label in farms:
+                ov = overlap_ratio(farms[label], serial_farms[label],
+                                   lanes, n_windows)
+                ov_s = f"{ov:8.2f}"
+            else:
+                ov_s = f"{'-':>8}"
+            print(f"  {lanes:6d}  {label:28} {thr:9.2f} {p50:11.2f} "
+                  f"{p99:11.2f} {ov_s}")
         coupled_thr.append(best["coupled/session"][0])
-        for e in farms:
-            farm_thr[e].append(best[f"farm[{e}]"][0])
-    return np.asarray(coupled_thr), {e: np.asarray(t)
-                                     for e, t in farm_thr.items()}
+        for label in farms:
+            farm_thr[label].append(best[label][0])
+    return np.asarray(coupled_thr), {label: np.asarray(t)
+                                     for label, t in farm_thr.items()}
 
 
-def check(name, lane_sweep, coupled, farm, engine):
+def check(name, lane_sweep, coupled, farm, label):
     ok_beat = bool(np.all(farm >= coupled))
     # monotonic up to saturation: strictly rising (3% tolerance) until the
     # peak, flat-to-noisy after
     sat = int(np.argmax(farm))
     ok_mono = all(farm[i + 1] > farm[i] * 0.97 for i in range(sat))
-    print(f"  {name}: farm[{engine}] >= coupled at every lane count: "
+    print(f"  {name}: {label} >= coupled at every lane count: "
           f"{'PASS' if ok_beat else 'FAIL'} "
           f"(min ratio {float(np.min(farm / coupled)):.2f}x)")
     print(f"  {name}: throughput monotonic up to saturation "
@@ -214,6 +276,13 @@ def main():
                     help="farm consumer engines to sweep (default: auto + "
                          "jax; 'all' = every available non-interpret "
                          "engine)")
+    ap.add_argument("--producer", nargs="*", default=None,
+                    help="constants producers to sweep (repro.core.producer"
+                         " names; default: the preset's declared XOF "
+                         "stream)")
+    ap.add_argument("--depth", type=int, nargs="*", default=None,
+                    help="farm pipeline depths to sweep (default: 2 = "
+                         "double buffering)")
     ap.add_argument("--schedule", choices=["normal", "alternating"],
                     default="normal",
                     help="schedule-orientation plan the farm consumers "
@@ -239,21 +308,28 @@ def main():
                    if c.available and n != "pallas-interpret"]
     elif not engines:
         engines = default_engines()
+    producers = args.producer or [None]
+    depths = args.depth or [2]
     # gate on the auto engine when it's in the sweep (with --engines all
     # the list is alphabetical — position 0 is not the primary)
     auto = resolve_engine("auto")
-    primary = auto if auto in engines else engines[0]
+    primary_engine = auto if auto in engines else engines[0]
 
     ok = True
     for name in ("hera-128a", "rubato-128l"):
         coupled, farm = run(name, sweep, args.sessions, args.windows,
-                            args.reps, engines, variant=args.schedule)
+                            args.reps, engines, variant=args.schedule,
+                            producers=producers, depths=depths)
+        # the gate rides on the primary engine's first (producer, depth)
+        primary = next(label for label in farm
+                       if label.startswith(f"farm[{primary_engine}|"))
         if not args.smoke:
             ok &= check(name, sweep, coupled, farm[primary], primary)
-            orientation_delta(name, primary, sweep[-1], args.sessions,
-                              args.windows)
+            orientation_delta(name, primary_engine, sweep[-1],
+                              args.sessions, args.windows)
     if args.smoke:
-        print(f"\nsmoke lap complete (schedule={args.schedule}, no gating)")
+        print(f"\nsmoke lap complete (schedule={args.schedule}, no gating; "
+              "overlap column reported above)")
         return 0
     print(f"\noverall: {'PASS' if ok else 'FAIL'}")
     return 0 if ok else 1

@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CipherBatch, KeystreamFarm, plan_windows
+from repro.core import CipherBatch, KeystreamFarm, StreamPlan, plan_windows
 from repro.core.cipher import make_cipher
+from repro.core.tuner import load_plan
 from repro.kernels.keystream.ops import keystream_kernel_apply
 from repro.serve.hhe_loop import HHERequest, HHEServer
 
@@ -83,11 +84,22 @@ def main():
               f"(macro RNG-decoupling, docs/DESIGN.md T3)")
 
         # ---- multi-stream farm: many sessions, one batched dispatch ----
+        # the farm's whole pipeline configuration is ONE StreamPlan value
+        # (producer x engine x variant x window x depth): a measured plan
+        # from the tuner cache when this host has one, else a static
+        # double-buffered default.  `python -m repro.core.tuner --autotune`
+        # (or serve.py --autotune) populates the cache.
         batch = CipherBatch(name, seed=0)
         sessions = batch.add_sessions(8)
-        farm = KeystreamFarm(batch)
         bps = max(1, lanes // 8)            # blocks per session per pass
         window = bps * 8
+        plan = load_plan(name, lanes) or StreamPlan(
+            producer=batch.params.xof, engine="auto", variant="auto",
+            window=window, depth=2)
+        farm = KeystreamFarm(batch, plan=plan)
+        print(f"  farm plan: producer={batch.producer.name} "
+              f"engine={farm.engine.name} variant={farm.engine.variant} "
+              f"depth={farm.depth}")
         plans = plan_windows(sessions, blocks_per_session=bps, window=window)
         for _, z in farm.run(plans):        # warmup/compile
             jax.block_until_ready(z)

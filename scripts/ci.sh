@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 verify entry point (ROADMAP.md): engine-drift smoke first, then
-# the fast lap, then the slow interpret-mode Pallas sweeps.  One command,
-# three stages:
+# Tier-1 verify entry point (ROADMAP.md): drift smokes first (engine
+# matrix, schedule golden vectors, engine+producer availability, tuner
+# persist/reload, farm-bench canaries), then the fast lap, then the slow
+# interpret-mode Pallas sweeps.  One command:
 #
 #   scripts/ci.sh          # smoke + fast lap + slow lap (full tier-1)
 #   scripts/ci.sh --fast   # smoke + fast lap (developer inner loop)
@@ -38,9 +39,56 @@ print("engine x variant availability ok:",
       {n: c.available for n, c in caps.items()})
 PYEOF
 
+echo "=== producer drift: producer availability must not regress ==="
+python - <<'PYEOF'
+from repro.core.params import get_params
+from repro.core.producer import (compatible_producers, producer_caps,
+                                 registered_producers)
+caps = producer_caps()
+must = {"aes", "threefry", "cached"}               # portable on every host
+missing = sorted(n for n in must if n not in caps or not caps[n].available)
+assert not missing, f"producer availability regressed: {missing}"
+for name, c in caps.items():
+    assert c.available or c.reason, f"{name} unavailable without a reason"
+# every preset keeps >= 2 stream-preserving (interchangeable) producers
+for preset in ("hera-128a", "rubato-128l"):
+    comp = compatible_producers(get_params(preset))
+    assert len(comp) >= 2, f"{preset}: stream-preserving set shrank: {comp}"
+print("producer availability ok:", sorted(registered_producers()))
+PYEOF
+
+echo "=== tuner smoke: measured StreamPlan persists + reloads deterministically ==="
+TUNER_CACHE="$(mktemp -d)/streamplans.json"
+REPRO_TUNER_CACHE="$TUNER_CACHE" python - <<'PYEOF'
+from repro.core.tuner import StreamPlan, autotune, default_cache_path, load_plan
+
+# tiny measured lap: producers x depths on the jax engine, 8-lane windows
+plan = autotune("rubato-128s", 8, sessions=2, n_windows=2, reps=1,
+                engines=["jax"], variants=["normal"], windows=[8],
+                depths=[2, 3], verbose=True)
+assert isinstance(plan, StreamPlan), plan
+assert default_cache_path().exists(), "plan was not persisted"
+# JSON round trip is bit-identical
+assert StreamPlan.from_json(plan.to_json()) == plan
+# a second autotune must be a deterministic cache hit (no re-timing)
+again = autotune("rubato-128s", 8, sessions=2, n_windows=2, reps=1)
+assert again == plan, (again, plan)
+# and the cache-only lookup "auto" resolution consults agrees
+loaded = load_plan("rubato-128s", 8)
+assert loaded == plan, (loaded, plan)
+# "auto" resolution consults the persisted plan
+from repro.core.engine import resolve_engine
+from repro.core.params import get_params
+assert resolve_engine("auto", params=get_params("rubato-128s")) == plan.engine
+print("tuner smoke ok:", plan.describe())
+PYEOF
+rm -rf "$(dirname "$TUNER_CACHE")"
+
 echo "=== smoke: keystream farm bench (tiny, no gating; both variants) ==="
 python benchmarks/keystream_farm_bench.py --smoke --schedule normal
 python benchmarks/keystream_farm_bench.py --smoke --schedule alternating
+echo "=== smoke: farm bench producer/depth sweep (cached producer, depth 3) ==="
+python benchmarks/keystream_farm_bench.py --smoke --producer aes cached --depth 2 3
 
 echo "=== fast lap (-m 'not slow'; engine/schedule suites already ran) ==="
 python -m pytest -x -q -m "not slow" --ignore=tests/test_engine.py \

@@ -20,7 +20,22 @@ from repro.core.engine import (
     registered_engines,
     resolve_engine,
 )
-from repro.core.farm import KeystreamFarm, WindowPlan, plan_windows
+from repro.core.farm import (
+    KeystreamFarm,
+    WindowPlan,
+    pack_windows,
+    plan_windows,
+)
+from repro.core.producer import (
+    ConstantsProducer,
+    ProducerCaps,
+    compatible_producers,
+    make_producer,
+    producer_caps,
+    registered_producers,
+    resolve_producer,
+)
+from repro.core.tuner import StreamPlan, autotune, load_plan
 from repro.core.hera import hera_stream_key
 from repro.core.rubato import rubato_stream_key
 from repro.core.schedule import (
@@ -48,7 +63,18 @@ __all__ = [
     "resolve_engine",
     "KeystreamFarm",
     "WindowPlan",
+    "pack_windows",
     "plan_windows",
+    "ConstantsProducer",
+    "ProducerCaps",
+    "compatible_producers",
+    "make_producer",
+    "producer_caps",
+    "registered_producers",
+    "resolve_producer",
+    "StreamPlan",
+    "autotune",
+    "load_plan",
     "Schedule",
     "build_schedule",
     "execute_schedule",

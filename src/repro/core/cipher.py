@@ -6,6 +6,9 @@ Producer/consumer split (the paper's T3, "RNG decoupling"):
     sampling + Gaussian sampling.  Depends only on (nonce, block counters),
     NOT on the key or message, so it can be dispatched concurrently with
     the previous batch's compute (async dispatch on TPU) or precomputed.
+    Producers are pluggable :mod:`repro.core.producer` backends (the
+    registry mirroring the consumer side); a Cipher binds the preset's
+    declared XOF stream by default.
   * :meth:`Cipher.keystream` — the *consumer*: the round pipeline, taking
     the constants as an explicit input.  Consumers are pluggable
     :mod:`repro.core.engine` backends; a Cipher binds the eager ``ref``
@@ -40,38 +43,12 @@ import numpy as np
 
 from repro.core.engine import EngineSpec, make_engine
 from repro.core.params import CipherParams, get_params
-from repro.crypto.aes import aes128_key_expand
-from repro.crypto.sampler import (
-    DGaussTable,
-    discrete_gaussian,
-    uniform_mod_q_stream,
-    words_needed_uniform_stream,
+from repro.core.producer import (
+    ConstantsProducer,
+    ProducerSpec,
+    SessionMaterial,
+    make_producer,
 )
-from repro.crypto.xof import (
-    aes_xof_words_batched,
-    threefry_root_key,
-    threefry_xof_words_batched,
-    xof_words,
-)
-
-
-def _constants_from_words(params: CipherParams, words, gauss: Optional[DGaussTable]):
-    """Shared producer tail: XOF words -> dict(rc=..., noise=...).
-
-    words: (..., total) uint32 where total = words_needed_uniform_stream(
-    n_round_constants) + 2*n_noise.  Used by both the single-stream and the
-    batched producer so the two are bit-exact by construction.
-    """
-    p = params
-    n_u = p.n_round_constants
-    w_u = words_needed_uniform_stream(n_u)
-    rc = uniform_mod_q_stream(words[..., :w_u], n_u, p.mod)
-    noise = None
-    if p.n_noise:
-        hi = words[..., w_u : w_u + p.n_noise]
-        lo = words[..., w_u + p.n_noise : w_u + 2 * p.n_noise]
-        noise = discrete_gaussian(hi, lo, gauss)
-    return {"rc": rc, "noise": noise}
 
 
 def encode_fixed(mod, m_real, delta: float):
@@ -96,15 +73,17 @@ class Cipher:
     key: jnp.ndarray          # (n,) uint32 in Z_q — the symmetric secret
     nonce: np.ndarray         # (16,) uint8, public
     engine: EngineSpec = "ref"   # consumer backend (see repro.core.engine)
+    producer: ProducerSpec = None  # RNG backend (None = params.xof; see
+                                   # repro.core.producer)
 
     def __post_init__(self):
         self.key = jnp.asarray(self.key, dtype=jnp.uint32)
         if self.key.shape != (self.params.n,):
             raise ValueError(f"key shape {self.key.shape} != ({self.params.n},)")
         self.nonce = np.asarray(self.nonce, dtype=np.uint8).reshape(16)
-        self._gauss = (
-            DGaussTable.build(self.params.sigma) if self.params.n_noise else None
-        )
+        # the producer half of T3: a registered ConstantsProducer bound to
+        # params (None = the preset's declared XOF stream, statically)
+        self._producer = make_producer(self.producer, self.params)
         # the single-stream default is the eager reference engine — the
         # oracle everything else (farm engines, kernels) is checked against
         self._engine = make_engine(self.engine, self.params, self.key)
@@ -115,10 +94,7 @@ class Cipher:
 
         rc: (lanes, n_round_constants) uint32; noise: (lanes, l) int32 or None.
         """
-        p = self.params
-        total = words_needed_uniform_stream(p.n_round_constants) + 2 * p.n_noise
-        words = xof_words(p.xof, self.nonce, block_ctrs, total)
-        return _constants_from_words(p, words, self._gauss)
+        return self._producer.constants_for_nonce(self.nonce, block_ctrs)
 
     # ---------------- consumer (round pipeline) --------------------------
     def keystream_from_constants(self, rc, noise=None):
@@ -158,7 +134,8 @@ class Cipher:
 
 
 def make_cipher(name: str, key=None, nonce=None, seed: int = 0,
-                engine: EngineSpec = "ref") -> Cipher:
+                engine: EngineSpec = "ref",
+                producer: ProducerSpec = None) -> Cipher:
     """Convenience constructor; random key/nonce from ``seed`` if omitted."""
     p = get_params(name)
     rng = np.random.default_rng(seed)
@@ -166,7 +143,7 @@ def make_cipher(name: str, key=None, nonce=None, seed: int = 0,
         key = rng.integers(1, p.mod.q, size=(p.n,), dtype=np.uint32)
     if nonce is None:
         nonce = rng.integers(0, 256, size=(16,), dtype=np.uint8)
-    return Cipher(p, jnp.asarray(key, jnp.uint32), nonce, engine)
+    return Cipher(p, jnp.asarray(key, jnp.uint32), nonce, engine, producer)
 
 
 # ==========================================================================
@@ -233,10 +210,15 @@ class CipherBatch:
     Per-session XOF material (expanded AES round keys / threefry roots) is
     precompiled host-side at `add_session` time and gathered per lane on
     device, so adding sessions never retriggers tracing.
+
+    The producer is a pluggable :mod:`repro.core.producer` backend
+    (``producer=``: a registered name, an instance, "auto" = the tuner's
+    measured plan, or None = the preset's declared XOF stream) —
+    symmetric to the pluggable consumer engines.
     """
 
     def __init__(self, params: CipherParams | str, key=None, seed: int = 0,
-                 engine: EngineSpec = "ref"):
+                 engine: EngineSpec = "ref", producer: ProducerSpec = None):
         if isinstance(params, str):
             params = get_params(params)
         self.params = params
@@ -248,16 +230,12 @@ class CipherBatch:
         if self.key.shape != (params.n,):
             raise ValueError(f"key shape {self.key.shape} != ({params.n},)")
         self._rng = rng
-        self._gauss = (
-            DGaussTable.build(params.sigma) if params.n_noise else None
-        )
         self._engine = self.make_engine(engine)
+        self.producer: ConstantsProducer = make_producer(producer, params)
         self.sessions: List[StreamSession] = []
-        # host-side per-session XOF material, stacked lazily into tables
-        self._rk_host: List[np.ndarray] = []      # aes: (11, 16) u8 each
-        self._root_host: list = []                # threefry: key each
+        # host-side per-session producer material, stacked lazily
+        self._mat_host: List[SessionMaterial] = []
         self._tables = None                       # device tables, lazy
-        self._producer = None                     # built once, pool-agnostic
 
     def make_engine(self, spec: EngineSpec = "auto", *, mesh=None,
                     axis: str = "data", interpret=None,
@@ -272,16 +250,43 @@ class CipherBatch:
         return make_engine(spec, self.params, self.key, mesh=mesh,
                            axis=axis, interpret=interpret, variant=variant)
 
+    # ---------------- producer plumbing -----------------------------------
+    def set_producer(self, spec: ProducerSpec) -> ConstantsProducer:
+        """Swap the RNG backend in place (e.g. applying a tuned StreamPlan).
+
+        Per-session material is rebuilt from the live nonces, so existing
+        sessions keep their (nonce, counter) spaces.  Only stream-
+        preserving swaps are allowed (see `repro.core.producer.
+        compatible_producers`): swapping a live pool onto a different XOF
+        stream would make the same (nonce, ctr) pairs yield different
+        keystream — clients' earlier ciphertexts would decrypt to garbage
+        with no error — so a mismatched spec raises instead.  (Choosing a
+        different stream outright is a *construction-time* decision:
+        ``CipherBatch(..., producer=...)``.)
+        """
+        prod = make_producer(spec, self.params)
+        if prod.caps.stream not in (None, self.params.xof):
+            raise ValueError(
+                f"producer {prod.name!r} emits the {prod.caps.stream!r} "
+                f"stream but this pool's preset declares "
+                f"{self.params.xof!r}; swapping a live pool across streams "
+                "would silently change every keystream — construct a new "
+                "CipherBatch for a different stream"
+            )
+        self.producer = prod
+        self._mat_host = [
+            self.producer.session_material(s.nonce) for s in self.sessions
+        ]
+        self._tables = None
+        return self.producer
+
     # ---------------- session pool ---------------------------------------
     def add_session(self, nonce=None) -> StreamSession:
         if nonce is None:
             nonce = self._rng.integers(0, 256, size=(16,), dtype=np.uint8)
         s = StreamSession(index=len(self.sessions), nonce=nonce)
         self.sessions.append(s)
-        if self.params.xof == "aes":
-            self._rk_host.append(aes128_key_expand(s.nonce))
-        else:
-            self._root_host.append(threefry_root_key(s.nonce))
+        self._mat_host.append(self.producer.session_material(s.nonce))
         self._tables = None
         return s
 
@@ -305,10 +310,7 @@ class CipherBatch:
         s = StreamSession(index=session_id, nonce=nonce,
                           generation=old.generation + 1)
         self.sessions[session_id] = s
-        if self.params.xof == "aes":
-            self._rk_host[session_id] = aes128_key_expand(s.nonce)
-        else:
-            self._root_host[session_id] = threefry_root_key(s.nonce)
+        self._mat_host[session_id] = self.producer.session_material(s.nonce)
         self._tables = None
         return s
 
@@ -317,61 +319,24 @@ class CipherBatch:
 
     def session_cipher(self, session_id: int) -> Cipher:
         """Single-stream view of one session (the bit-exactness oracle)."""
-        return Cipher(self.params, self.key, self.sessions[session_id].nonce)
+        return Cipher(self.params, self.key, self.sessions[session_id].nonce,
+                      producer=self.producer.name)
 
     def xof_tables(self):
-        """Device-side per-session XOF material, rebuilt lazily on growth."""
+        """Device-side per-session producer material, rebuilt lazily on
+        growth/rotation (the producer's `stack_tables` over the pool)."""
         if self._tables is None:
-            if self.params.xof == "aes":
-                rk = jnp.asarray(np.stack(self._rk_host))      # (S, 11, 16)
-                n12 = jnp.asarray(
-                    np.stack([s.nonce[:12] for s in self.sessions])
-                )                                              # (S, 12)
-                self._tables = (rk, n12)
-            else:
-                self._tables = (jnp.stack(self._root_host),)   # (S,) keys
+            self._tables = self.producer.stack_tables(self._mat_host)
         return self._tables
 
     # ---------------- producer (decoupled, multi-stream) ------------------
-    def make_producer_fn(self):
-        """Pure producer ``fn(tables, session_ids, block_ctrs) -> constants``.
-
-        Tables are runtime args (not baked constants) so a jit of this
-        function stays valid — and retraces on shape change — as the
-        session pool grows.  `core/farm.py` jits this as its producer.
-        The closure depends only on (params, gauss), both fixed, so it is
-        built once and cached.
-        """
-        if self._producer is not None:
-            return self._producer
-        p, gauss = self.params, self._gauss
-        total = words_needed_uniform_stream(p.n_round_constants) + 2 * p.n_noise
-
-        if p.xof == "aes":
-            def producer(tables, session_ids, block_ctrs):
-                rk, n12 = tables
-                sid = jnp.asarray(session_ids, jnp.int32)
-                ctrs = jnp.asarray(block_ctrs, jnp.uint32)
-                words = aes_xof_words_batched(rk[sid], n12[sid], ctrs, total)
-                return _constants_from_words(p, words, gauss)
-        else:
-            def producer(tables, session_ids, block_ctrs):
-                (roots,) = tables
-                sid = jnp.asarray(session_ids, jnp.int32)
-                ctrs = jnp.asarray(block_ctrs, jnp.uint32)
-                words = threefry_xof_words_batched(roots[sid], ctrs, total)
-                return _constants_from_words(p, words, gauss)
-
-        self._producer = producer
-        return producer
-
     def round_constant_stream(self, session_ids, block_ctrs):
         """Per-lane randomness for lanes drawn from many sessions.
 
         session_ids/block_ctrs: (lanes,) int arrays (parallel).  Returns
         dict(rc=(lanes, n_round_constants) u32, noise=(lanes, l) i32|None).
         """
-        return self.make_producer_fn()(
+        return self.producer.produce(
             self.xof_tables(), session_ids, block_ctrs
         )
 

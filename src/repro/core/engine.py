@@ -173,14 +173,41 @@ def engine_caps(*, mesh=None, axis: str = "data") -> Dict[str, EngineCaps]:
     }
 
 
+def _tuned_engine(params, mesh, axis: str = "data") -> Optional[str]:
+    """Consult the StreamPlan cache for a measured engine choice.
+
+    Lazy import (the tuner sits above this module); returns None — never
+    raises — when no params context is given, no plan is cached for this
+    (preset, host), or the cached engine is unavailable here.  Looked up
+    with lanes=None (engines are lane-agnostic at bind time): the nearest
+    tuned lane count for the preset decides.  Lane-exact plan application
+    is the ``plan=`` path on the farm/server.
+    """
+    if params is None:
+        return None
+    try:
+        from repro.core.tuner import load_plan
+
+        plan = load_plan(params, lanes=None, mesh=mesh, axis=axis)
+    except Exception:
+        return None
+    if plan is None or plan.engine not in _REGISTRY:
+        return None
+    caps = _REGISTRY[plan.engine].query_caps(mesh=mesh, axis=axis)
+    return plan.engine if caps.available else None
+
+
 def resolve_engine(spec: str, *, interpret: Optional[bool] = None,
-                   mesh=None) -> str:
+                   mesh=None, params=None, axis: str = "data") -> str:
     """THE single place backend auto-selection lives.
 
     ``spec`` is an engine name, "auto", or a legacy farm consumer spelling:
 
-      * "auto"   -> the fused kernel on TPU ("sharded" when a mesh is
-        given, else "pallas"), "jax" elsewhere;
+      * "auto"   -> with a ``params`` context, the measured `StreamPlan`
+        from the tuner cache (`repro.core.tuner.load_plan`) when one
+        exists for this (preset, host); otherwise the static preference —
+        the fused kernel on TPU ("sharded" when a mesh is given, else
+        "pallas"), "jax" elsewhere;
       * "kernel" -> the fused kernel: "sharded" when a mesh is given,
         "pallas" when compiled Pallas can run (TPU, or interpret
         explicitly False), else "pallas-interpret" — exactly the old
@@ -191,7 +218,8 @@ def resolve_engine(spec: str, *, interpret: Optional[bool] = None,
     Unknown names raise ValueError listing the registered engines.
     """
     if spec == "auto":
-        spec = "kernel" if jax.default_backend() == "tpu" else "jax"
+        spec = (_tuned_engine(params, mesh, axis)
+                or ("kernel" if jax.default_backend() == "tpu" else "jax"))
     if spec == "kernel":  # legacy farm consumer name
         on_tpu = jax.default_backend() == "tpu"
         if mesh is not None:
@@ -252,7 +280,8 @@ def make_engine(spec: EngineSpec, params: CipherParams, key, *, mesh=None,
                 "— rebind with make_engine instead of passing the instance"
             )
         return spec
-    name = resolve_engine(spec, interpret=interpret, mesh=mesh)
+    name = resolve_engine(spec, interpret=interpret, mesh=mesh,
+                          params=params, axis=axis)
     cls = _REGISTRY[name]
     caps = cls.query_caps(mesh=mesh, axis=axis)
     if not caps.available:

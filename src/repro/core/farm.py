@@ -1,4 +1,4 @@
-"""Multi-stream keystream farm: double-buffered producer→consumer windows.
+"""Multi-stream keystream farm: depth-configurable producer→consumer windows.
 
 The paper's T3 ("RNG decoupling") separates the XOF/sampler *producer* from
 the round-pipeline *consumer* so the two overlap.  The fused Pallas kernel
@@ -10,20 +10,30 @@ target:
   * a *window* is a fixed-size batch of lanes, each lane an arbitrary
     (session, block-counter) pair from a :class:`repro.core.cipher.
     CipherBatch` pool — one key, many nonces;
-  * :class:`KeystreamFarm` runs a window schedule with depth-2 double
-    buffering: the jit'd producer for window i+1 is *dispatched* (async on
-    TPU) before the consumer of window i runs, so XOF/sampling for the next
-    window hides behind the current window's round computation;
-  * the consumer is a pluggable :class:`repro.core.engine.KeystreamEngine`
-    — any registered backend (ref / jax / pallas / pallas-interpret /
-    sharded) or a pre-bound engine instance; "auto" and the legacy
-    `consumer="kernel"` spelling resolve in `repro.core.engine`, the one
-    place backend policy lives.
+  * :class:`KeystreamFarm` runs a window schedule with a configurable
+    pipeline ``depth`` (the paper's FIFO-depth knob lifted to window
+    granularity): producers for up to ``depth-1`` windows ahead are
+    *dispatched* (async on TPU) before the consumer of window i runs, so
+    XOF/sampling for upcoming windows hides behind the current window's
+    round computation.  depth=2 is classic double buffering (the
+    default); depth=1 serializes producer and consumer (the D1 baseline
+    shape); deeper FIFOs absorb producer-latency jitter;
+  * the *producer* is the pool's pluggable :class:`repro.core.producer.
+    ConstantsProducer` (aes / threefry / cached — see that registry), and
+    the *consumer* is a pluggable :class:`repro.core.engine.
+    KeystreamEngine` — any registered backend or a pre-bound instance;
+    "auto" and the legacy `consumer="kernel"` spelling resolve in
+    `repro.core.engine`, the one place backend policy lives;
+  * the whole (producer, engine, variant, window, depth) tuple can be
+    applied at once from a measured :class:`repro.core.tuner.StreamPlan`
+    (``plan=``), the autotuner's unit of selection.
 
-Fixed window sizes keep every producer/consumer call shape-stable, so the
-farm compiles exactly two XLA programs regardless of how many sessions or
-windows it serves.  `serve/hhe_loop.py` packs ragged request traffic into
-these windows; `data/encrypted.py` streams training batches through them.
+Fixed window sizes keep every producer/consumer call shape-stable —
+:func:`pack_windows` pads ragged tails by repeating the last real lane
+(outputs trimmed on yield), so the farm compiles exactly two XLA programs
+regardless of how many sessions, windows, or stragglers it serves.
+`serve/hhe_loop.py` packs ragged request traffic into these windows;
+`data/encrypted.py` streams training batches through them.
 """
 
 from __future__ import annotations
@@ -42,21 +52,62 @@ from repro.core.engine import EngineSpec
 
 @dataclasses.dataclass
 class WindowPlan:
-    """One farm step: parallel per-lane (session, counter) arrays."""
+    """One farm step: parallel per-lane (session, counter) arrays.
+
+    ``valid`` counts the real lanes; lanes past it are padding (repeats of
+    the last real lane — recomputed keystream, discarded on trim, never
+    fresh counters).  Defaults to all lanes.
+    """
 
     session_ids: np.ndarray   # (lanes,) int32
     block_ctrs: np.ndarray    # (lanes,) uint32
     meta: Any = None          # opaque caller tag (e.g. request slices)
+    valid: Optional[int] = None
 
     def __post_init__(self):
         self.session_ids = np.asarray(self.session_ids, np.int32).reshape(-1)
         self.block_ctrs = np.asarray(self.block_ctrs, np.uint32).reshape(-1)
         if self.session_ids.shape != self.block_ctrs.shape:
             raise ValueError("session_ids / block_ctrs length mismatch")
+        if self.valid is None:
+            self.valid = self.session_ids.shape[0]
+        if not 0 < self.valid <= self.session_ids.shape[0]:
+            raise ValueError(
+                f"valid={self.valid} out of range for "
+                f"{self.session_ids.shape[0]} lanes")
 
     @property
     def lanes(self) -> int:
         return self.session_ids.shape[0]
+
+
+def pack_windows(session_ids, block_ctrs, window: int) -> List[WindowPlan]:
+    """THE window slicer: per-lane arrays -> fixed-size `WindowPlan`s.
+
+    Every window has exactly ``window`` lanes: a non-dividing tail is
+    padded by repeating its last real lane (the pad+trim idiom
+    `keystream_pallas` uses for ragged lanes), with ``plan.valid`` marking
+    where the real lanes end — so ragged totals never force a fresh XLA
+    compile for a one-off tail shape.  All slicing-into-windows in the
+    farm, the serving loop, and the tuner goes through here, so the
+    padding rule lives in exactly one place.
+    """
+    if window <= 0:
+        raise ValueError("window must be positive")
+    sids = np.asarray(session_ids).reshape(-1)
+    ctrs = np.asarray(block_ctrs).reshape(-1)
+    if sids.shape != ctrs.shape:
+        raise ValueError("session_ids / block_ctrs length mismatch")
+    plans = []
+    for i in range(0, sids.shape[0], window):
+        s, c = sids[i : i + window], ctrs[i : i + window]
+        valid = s.shape[0]
+        if valid < window:                      # ragged tail: pad + mark
+            pad = window - valid
+            s = np.concatenate([s, np.full(pad, s[-1], s.dtype)])
+            c = np.concatenate([c, np.full(pad, c[-1], c.dtype)])
+        plans.append(WindowPlan(s, c, valid=valid))
+    return plans
 
 
 def plan_windows(sessions, blocks_per_session: int, window: int,
@@ -66,8 +117,9 @@ def plan_windows(sessions, blocks_per_session: int, window: int,
 
     interleave=True round-robins sessions across lanes (many short streams
     per window — the serving traffic shape); False keeps each session's
-    lanes contiguous (bulk re-keying shape).  The tail window is NOT padded;
-    use a window size dividing the total for shape-stable jits.
+    lanes contiguous (bulk re-keying shape).  A non-dividing total is
+    padded to the window size (`pack_windows`), so every window is
+    shape-stable; ``plan.valid`` marks the real lanes of the tail.
     """
     pairs = []
     for s in sessions:
@@ -79,14 +131,11 @@ def plan_windows(sessions, blocks_per_session: int, window: int,
         flat = stacked.transpose(2, 0, 1).reshape(-1, 2)   # ctr-major
     else:
         flat = stacked.transpose(0, 2, 1).reshape(-1, 2)   # session-major
-    return [
-        WindowPlan(flat[i : i + window, 0], flat[i : i + window, 1])
-        for i in range(0, flat.shape[0], window)
-    ]
+    return pack_windows(flat[:, 0], flat[:, 1], window)
 
 
 class KeystreamFarm:
-    """Double-buffered producer→consumer pipeline over a CipherBatch pool.
+    """Depth-configurable producer→consumer pipeline over a CipherBatch pool.
 
     ``engine`` selects the consumer backend: any name registered in
     `repro.core.engine` ("ref", "jax", "pallas", "pallas-interpret",
@@ -98,29 +147,55 @@ class KeystreamFarm:
     ValueError listing the registered engines.  ``variant`` picks the
     schedule-orientation plan the consumer executes (core/schedule.py;
     "auto" = the backend's preferred one; bit-exact either way).
+
+    ``depth`` sets the producer→consumer FIFO depth: producers for up to
+    ``depth-1`` windows ahead are dispatched before each consume (2 =
+    double buffering, the default; 1 = serialized).  The producer itself
+    is the pool's pluggable `repro.core.producer` backend.
+
+    ``plan`` applies a measured :class:`repro.core.tuner.StreamPlan` in
+    one shot — producer (rebound on the pool), engine, variant, and depth
+    — with any explicitly-passed argument taking precedence.
     """
 
     def __init__(self, batch: CipherBatch, engine: Optional[EngineSpec] = None,
                  *, consumer: Optional[str] = None, mesh=None,
                  axis: str = "data", interpret: Optional[bool] = None,
-                 variant: Optional[str] = None):
+                 variant: Optional[str] = None, depth: Optional[int] = None,
+                 plan=None):
         if engine is not None and consumer is not None:
             raise ValueError("pass engine= or the legacy consumer=, not both")
+        self.plan = plan
+        self.window: Optional[int] = None
+        if plan is not None:
+            if engine is None and consumer is None:
+                engine = plan.engine
+            if variant is None:
+                variant = plan.variant
+            if depth is None:
+                depth = plan.depth
+            self.window = plan.window
+            batch.set_producer(plan.producer)
         spec = consumer if engine is None else engine
         if spec is None:
             spec = "auto"
+        depth = 2 if depth is None else int(depth)
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1 (got {depth})")
+        self.depth = depth
         self.batch = batch
         self.engine = batch.make_engine(spec, mesh=mesh, axis=axis,
                                         interpret=interpret, variant=variant)
         self.consumer = self.engine.name     # backwards-compatible attr
         self.mesh = mesh
         self.axis = axis
-        self._producer = jax.jit(batch.make_producer_fn())
 
     # ------------------------------------------------------------------
     def produce(self, plan: WindowPlan):
-        """Dispatch the (async) producer for one window."""
-        return self._producer(
+        """Dispatch the (async) producer for one window — the pool's
+        pluggable `ConstantsProducer` (memoizing backends short-circuit
+        repeated windows here)."""
+        return self.batch.producer.produce(
             self.batch.xof_tables(), plan.session_ids, plan.block_ctrs
         )
 
@@ -131,48 +206,48 @@ class KeystreamFarm:
     # ------------------------------------------------------------------
     def run(self, plans: Iterable[WindowPlan]
             ) -> Iterator[Tuple[WindowPlan, jnp.ndarray]]:
-        """Yield (plan, keystream) per window, double-buffered.
+        """Yield (plan, keystream) per window, pipeline-depth buffered.
 
-        The producer for window i+1 is dispatched *before* window i's
-        consumer runs — on an async backend the XOF/sampling of the next
-        window overlaps the current round computation (depth-2 FIFO, the
-        paper's T3 lifted to window granularity).
+        Producers for up to ``self.depth - 1`` windows ahead are
+        dispatched *before* window i's consumer runs — on an async
+        backend the XOF/sampling of upcoming windows overlaps the current
+        round computation (the paper's T3 FIFO, its depth now a knob,
+        lifted to window granularity).  depth=1 degenerates to the
+        serialized D1 shape.
         """
-        it = iter(plans)
-        try:
-            cur = next(it)
-        except StopIteration:
-            return
-        cur_c = self.produce(cur)
-        for nxt in it:
-            nxt_c = self.produce(nxt)          # overlaps consume(cur)
-            yield cur, self.consume(cur_c)
-            cur, cur_c = nxt, nxt_c
-        yield cur, self.consume(cur_c)
+        fifo: deque = deque()                 # (plan, in-flight constants)
+        for plan in plans:
+            fifo.append((plan, self.produce(plan)))
+            if len(fifo) >= self.depth:
+                p, c = fifo.popleft()
+                yield p, self.consume(c)
+        while fifo:
+            p, c = fifo.popleft()
+            yield p, self.consume(c)
 
     def keystream(self, session_ids, block_ctrs, window: Optional[int] = None):
         """Convenience: full keystream for per-lane pairs, windowed.
 
-        window=None runs everything as a single window.  Returns
-        (lanes, l) uint32, lane order preserved.
+        window=None uses the plan's window when one was applied, else runs
+        everything as a single window.  Ragged totals are padded to the
+        window size and trimmed on return (`pack_windows`), so every
+        dispatch is shape-stable.  Returns (lanes, l) uint32, lane order
+        preserved.
         """
         sid = np.asarray(session_ids, np.int64).reshape(-1)
         ctr = np.asarray(block_ctrs, np.int64).reshape(-1)
         if window is None:
-            window = sid.shape[0]
-        plans = [
-            WindowPlan(sid[i : i + window], ctr[i : i + window])
-            for i in range(0, sid.shape[0], window)
-        ]
-        outs = [z for _, z in self.run(plans)]
+            window = self.window or sid.shape[0]
+        plans = pack_windows(sid, ctr, window)
+        outs = [z[: p.valid] for p, z in self.run(plans)]
         return jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
 
     # ------------------------------------------------------------------
     def _payload_stream(self, plans_and_payloads):
         """Split (plan, payload) pairs lazily: feed plans to run(), FIFO the
-        payloads alongside.  run() reads at most one plan ahead (the double
-        buffer), so the queue never holds more than two payloads — the
-        stream stays a stream."""
+        payloads alongside.  run() reads at most depth-1 plans ahead, so
+        the queue never holds more than ``depth`` payloads — the stream
+        stays a stream."""
         payloads: deque = deque()
 
         def plans():
@@ -185,7 +260,7 @@ class KeystreamFarm:
 
     def encrypt_stream(self, plans_and_msgs, delta: float = 1024.0):
         """Streaming encrypt: iterable of (WindowPlan, (lanes, l) float)
-        -> yields (plan, ciphertext).  Keystream double-buffered as in run().
+        -> yields (plan, ciphertext).  Keystream pipelined as in run().
         """
         mod = self.batch.params.mod
         for plan, m, z in self._payload_stream(plans_and_msgs):

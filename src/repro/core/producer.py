@@ -1,0 +1,524 @@
+"""Pluggable constants-producer registry: the producer half of T3.
+
+The paper's central architectural move (T3) decouples the RNG phase — XOF,
+rejection sampling, Gaussian sampling, round-constant assembly — from the
+key computation so the two pipeline halves can be engineered and tuned
+independently.  `core/engine.py` gave the *consumer* half a first-class
+registry; this module is its mirror for the *producer* half.  Every way to
+turn (session material, block counters) into the constants dict the
+engines consume is a registered :class:`ConstantsProducer` with declared
+capabilities, and all producer policy ("auto" selection, availability
+checks, stream compatibility) lives here and nowhere else.
+
+Registered producers (see `registered_producers()` / `producer_caps()`):
+
+  * ``aes``      — AES-128-CTR XOF (paper §IV-D conformance; the stream the
+                   spec defines).  Per-session material: expanded round keys.
+  * ``threefry`` — JAX's counter-based threefry2x32 PRF (TPU-native fast
+                   path: add/xor/rotate only).  A *different* stream.
+  * ``cached``   — memoizing wrapper over the stream-matching producer:
+                   repeated (session nonce, counter-window) requests return
+                   the memoized constants plane instead of re-running the
+                   XOF — the re-keying traffic shape, where the same window
+                   is regenerated for retries / replays.  Bit-exact with
+                   its inner producer by construction.
+
+Stream identity: ``ProducerCaps.stream`` names the XOF stream a producer
+emits ("aes" / "threefry"); ``None`` means it follows ``params.xof``
+(the ``cached`` wrapper).  Producers whose stream matches ``params.xof``
+are interchangeable without changing a single keystream bit — that is the
+set the :mod:`repro.core.tuner` selects among, so a tuned `StreamPlan`
+can never silently change the cipher a client decrypts against.
+
+Usage:
+
+    prod = make_producer("auto", params)        # policy decided HERE
+    mat = prod.session_material(nonce)          # host-side, once/session
+    tables = prod.stack_tables([mat, ...])      # device tables
+    consts = prod.produce(tables, session_ids, block_ctrs)
+
+`core/cipher.py` binds a producer per Cipher/CipherBatch,
+`core/farm.py` pipelines `produce` against its consumer engine, and
+`python -m repro.core.producer` prints the registry table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple, Type, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import CipherParams
+from repro.crypto.aes import aes128_key_expand
+from repro.crypto.sampler import (
+    DGaussTable,
+    discrete_gaussian,
+    uniform_mod_q_stream,
+    words_needed_uniform_stream,
+)
+from repro.crypto.xof import (
+    aes_xof_words_batched,
+    threefry_root_key,
+    threefry_xof_words_batched,
+)
+
+
+def constants_from_words(params: CipherParams, words,
+                         gauss: Optional[DGaussTable]):
+    """Shared producer tail: XOF words -> dict(rc=..., noise=...).
+
+    words: (..., total) uint32 where total = words_needed_uniform_stream(
+    n_round_constants) + 2*n_noise.  Every producer backend funnels through
+    this one function, so producers emitting the same word stream are
+    bit-exact by construction.
+    """
+    p = params
+    n_u = p.n_round_constants
+    w_u = words_needed_uniform_stream(n_u)
+    rc = uniform_mod_q_stream(words[..., :w_u], n_u, p.mod)
+    noise = None
+    if p.n_noise:
+        hi = words[..., w_u : w_u + p.n_noise]
+        lo = words[..., w_u + p.n_noise : w_u + 2 * p.n_noise]
+        noise = discrete_gaussian(hi, lo, gauss)
+    return {"rc": rc, "noise": noise}
+
+
+class SessionMaterial(NamedTuple):
+    """Host-side per-session producer material.
+
+    ``nonce`` is the raw 16-byte public nonce — the cache identity a
+    memoizing producer keys on; ``payload`` is backend-specific precompiled
+    material (expanded AES round keys, threefry root key, ...).
+    """
+
+    nonce: bytes
+    payload: Any
+
+
+class ProducerTables(NamedTuple):
+    """Stacked session tables: the device pytree the jit'd producer fn
+    gathers from, plus the per-session nonce identities it was stacked
+    from.  Carrying the nonces ON the tables (rather than as producer
+    instance state) means a memoizing producer keys its cache on exactly
+    the tables a `produce` call uses — a producer instance shared between
+    two pools (or a pool and a single-stream Cipher) can never mix up
+    whose nonce owns a cached plane."""
+
+    device: Any               # backend-specific device arrays
+    nonces: Tuple[bytes, ...]  # parallel to the session axis of ``device``
+
+
+@dataclasses.dataclass(frozen=True)
+class ProducerCaps:
+    """What one producer backend can do, queried without instantiating it.
+
+    ``stream`` names the XOF stream the backend emits ("aes"/"threefry");
+    ``None`` means it follows ``params.xof`` (wrappers).  Producers with
+    the same effective stream are interchangeable bit-for-bit — the set a
+    tuned `StreamPlan` may select among.  ``memoizes`` marks backends that
+    reuse materialized constants for repeated windows.
+    """
+
+    name: str
+    description: str
+    available: bool
+    reason: str = ""
+    stream: Optional[str] = None
+    memoizes: bool = False
+    jitted: bool = True
+
+
+class ConstantsProducer:
+    """One way to materialize round constants (+ noise) from counters.
+
+    Subclasses implement `session_material` / `stack_tables` /
+    `producer_fn`; the base class owns the jit plumbing and the
+    single-stream convenience path so every backend honors the same
+    contract.  Producers are bound to ``params`` at construction (they own
+    the Gaussian table and the word budget); the key never enters — that
+    is the whole point of T3.
+    """
+
+    name: str = "?"
+
+    def __init__(self, params: CipherParams):
+        self.params = params
+        self._gauss = (
+            DGaussTable.build(params.sigma) if params.n_noise else None
+        )
+        #: uint32 XOF words one lane consumes (constants + noise)
+        self.total_words = (
+            words_needed_uniform_stream(params.n_round_constants)
+            + 2 * params.n_noise
+        )
+        self.caps = type(self).query_caps()
+        self._jit = None
+
+    # -- capability reporting (class-level: no instance needed) ------------
+    @classmethod
+    def query_caps(cls) -> ProducerCaps:
+        raise NotImplementedError
+
+    # -- backend surface ---------------------------------------------------
+    def session_material(self, nonce) -> SessionMaterial:
+        """Precompile one session's nonce material (host-side, once)."""
+        raise NotImplementedError
+
+    def _stack_payloads(self, materials: List[SessionMaterial]):
+        """Stack per-session payloads into the device gather pytree."""
+        raise NotImplementedError
+
+    def stack_tables(self, materials: List[SessionMaterial]) -> ProducerTables:
+        """Stack per-session materials into gather tables (+ identities)."""
+        return ProducerTables(
+            self._stack_payloads(materials),
+            tuple(m.nonce for m in materials),
+        )
+
+    def producer_fn(self):
+        """Pure ``fn(device_tables, session_ids, block_ctrs) -> constants``.
+
+        Tables are runtime args (not baked constants) so one jit stays
+        valid — and retraces only on shape change — as a session pool
+        grows.  The closure depends only on (params, gauss), both fixed.
+        """
+        raise NotImplementedError
+
+    # -- the producer ------------------------------------------------------
+    def jitted(self):
+        """The jit'd producer fn (built once per instance)."""
+        if self._jit is None:
+            self._jit = jax.jit(self.producer_fn())
+        return self._jit
+
+    def produce(self, tables: ProducerTables, session_ids, block_ctrs):
+        """Materialize constants for per-lane (session, counter) pairs.
+
+        tables: a `stack_tables` result; session_ids: (lanes,) int;
+        block_ctrs: (lanes,) uint32.  Returns dict(rc=(lanes,
+        n_round_constants) u32, noise=(lanes, l) i32|None).
+        """
+        return self.jitted()(tables.device, session_ids, block_ctrs)
+
+    def constants_for_nonce(self, nonce, block_ctrs):
+        """Single-stream path: one nonce, a vector of counters (Cipher)."""
+        tables = self.stack_tables([self.session_material(nonce)])
+        ctrs = jnp.asarray(block_ctrs, jnp.uint32)
+        return self.produce(tables, jnp.zeros(ctrs.shape, jnp.int32), ctrs)
+
+    def __repr__(self):
+        return f"<ConstantsProducer {self.name} params={self.params.name}>"
+
+
+# ==========================================================================
+# Registry
+# ==========================================================================
+_REGISTRY: Dict[str, Type[ConstantsProducer]] = {}
+
+
+def register_producer(cls: Type[ConstantsProducer]) -> Type[ConstantsProducer]:
+    """Class decorator: add a producer to the registry under ``cls.name``."""
+    if cls.name in _REGISTRY:
+        raise ValueError(f"producer {cls.name!r} already registered")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def registered_producers() -> Tuple[str, ...]:
+    """Names of all registered producers (available or not), sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def producer_caps() -> Dict[str, ProducerCaps]:
+    """Capability report for every registered producer."""
+    return {name: cls.query_caps() for name, cls in sorted(_REGISTRY.items())}
+
+
+def compatible_producers(params: CipherParams) -> Tuple[str, ...]:
+    """Producers whose stream matches ``params.xof`` — interchangeable
+    without changing a single keystream bit (the tuner's candidate set)."""
+    return tuple(
+        name for name, c in producer_caps().items()
+        if c.available and c.stream in (None, params.xof)
+    )
+
+
+def _tuned_producer(params: Optional[CipherParams]) -> Optional[str]:
+    """Consult the StreamPlan cache for a measured producer choice.
+
+    Lazy import (the tuner sits above this module); returns None — never
+    raises — when there is no cache, no plan for this (preset, host), or
+    the cached producer is no longer registered / stream-compatible."""
+    if params is None:
+        return None
+    try:
+        from repro.core.tuner import load_plan
+
+        plan = load_plan(params, lanes=None)
+    except Exception:
+        return None
+    if plan is None or plan.producer not in _REGISTRY:
+        return None
+    caps = _REGISTRY[plan.producer].query_caps()
+    if not caps.available or caps.stream not in (None, params.xof):
+        return None
+    return plan.producer
+
+
+def resolve_producer(spec: Optional[str],
+                     params: Optional[CipherParams] = None) -> str:
+    """THE single place producer selection lives.
+
+    ``spec`` is a producer name, None (= the preset's declared XOF,
+    static), or "auto" (= the measured `StreamPlan` from the tuner cache
+    when one exists for this (preset, host), else the static preference —
+    the tuner consultation the ROADMAP named).  Unknown names raise
+    ValueError listing the registered producers.
+    """
+    if spec == "auto":
+        spec = _tuned_producer(params)
+    if spec is None:
+        spec = params.xof if params is not None else "aes"
+    if spec not in _REGISTRY:
+        raise ValueError(
+            f"unknown constants producer {spec!r}; registered producers: "
+            f"{list(registered_producers())} (plus 'auto'; run "
+            "`python -m repro.core.producer` for the table)"
+        )
+    return spec
+
+
+ProducerSpec = Union[str, ConstantsProducer, None]
+
+
+def make_producer(spec: ProducerSpec, params: CipherParams,
+                  **kwargs) -> ConstantsProducer:
+    """Resolve ``spec`` and bind it to ``params``.
+
+    ``spec`` may already be a ConstantsProducer instance (passed through —
+    the pluggable-producer path), but only if it is bound to the SAME
+    params: a producer sampling for different (q, constant-count) would
+    emit constants no engine of this pool can consume correctly.  Raises
+    RuntimeError when the resolved producer is unavailable, with the
+    backend's own reason.
+    """
+    if isinstance(spec, ConstantsProducer):
+        if spec.params != params:
+            raise ValueError(
+                f"producer {spec.name!r} is bound to different params "
+                f"(producer has {spec.params.name}); rebind it with "
+                "make_producer for this pool"
+            )
+        return spec
+    name = resolve_producer(spec, params)
+    cls = _REGISTRY[name]
+    caps = cls.query_caps()
+    if not caps.available:
+        raise RuntimeError(
+            f"constants producer {name!r} unavailable here: {caps.reason} "
+            "(run `python -m repro.core.producer` for the registry table)"
+        )
+    return cls(params, **kwargs)
+
+
+# ==========================================================================
+# Backends
+# ==========================================================================
+@register_producer
+class AesProducer(ConstantsProducer):
+    """AES-128-CTR XOF — the paper's §IV-D conformance stream."""
+
+    name = "aes"
+
+    @classmethod
+    def query_caps(cls) -> ProducerCaps:
+        return ProducerCaps(
+            name=cls.name,
+            description="AES-128-CTR XOF (paper conformance stream)",
+            available=True,
+            stream="aes",
+        )
+
+    def session_material(self, nonce) -> SessionMaterial:
+        nonce = np.asarray(nonce, dtype=np.uint8).reshape(16)
+        return SessionMaterial(
+            nonce.tobytes(),
+            (aes128_key_expand(nonce), nonce[:12].copy()),
+        )
+
+    def _stack_payloads(self, materials):
+        rk = jnp.asarray(np.stack([m.payload[0] for m in materials]))
+        n12 = jnp.asarray(np.stack([m.payload[1] for m in materials]))
+        return (rk, n12)                                   # (S,11,16),(S,12)
+
+    def producer_fn(self):
+        p, gauss, total = self.params, self._gauss, self.total_words
+
+        def producer(tables, session_ids, block_ctrs):
+            rk, n12 = tables
+            sid = jnp.asarray(session_ids, jnp.int32)
+            ctrs = jnp.asarray(block_ctrs, jnp.uint32)
+            words = aes_xof_words_batched(rk[sid], n12[sid], ctrs, total)
+            return constants_from_words(p, words, gauss)
+
+        return producer
+
+
+@register_producer
+class ThreefryProducer(ConstantsProducer):
+    """Counter-based threefry2x32 PRF — the TPU-native fast stream."""
+
+    name = "threefry"
+
+    @classmethod
+    def query_caps(cls) -> ProducerCaps:
+        return ProducerCaps(
+            name=cls.name,
+            description="threefry2x32 counter PRF (TPU-native fast stream)",
+            available=True,
+            stream="threefry",
+        )
+
+    def session_material(self, nonce) -> SessionMaterial:
+        nonce = np.asarray(nonce, dtype=np.uint8).reshape(16)
+        return SessionMaterial(nonce.tobytes(), threefry_root_key(nonce))
+
+    def _stack_payloads(self, materials):
+        return (jnp.stack([m.payload for m in materials]),)   # (S,) keys
+
+    def producer_fn(self):
+        p, gauss, total = self.params, self._gauss, self.total_words
+
+        def producer(tables, session_ids, block_ctrs):
+            (roots,) = tables
+            sid = jnp.asarray(session_ids, jnp.int32)
+            ctrs = jnp.asarray(block_ctrs, jnp.uint32)
+            words = threefry_xof_words_batched(roots[sid], ctrs, total)
+            return constants_from_words(p, words, gauss)
+
+        return producer
+
+
+@register_producer
+class CachedProducer(ConstantsProducer):
+    """Memoizing wrapper over the stream-matching producer.
+
+    Repeated (session nonce, counter-window) requests — the re-keying
+    traffic shape, where the same window is regenerated for retries,
+    replays, or decrypt-after-encrypt round trips — return the memoized
+    constants plane instead of re-running the XOF.  Keys are the raw
+    per-lane nonce bytes (read from the `ProducerTables` each `produce`
+    call actually uses, never from instance state) plus the counter
+    vector, so a session *rotation* (fresh nonce) can never serve a stale
+    plane; entries are LRU-evicted at ``max_entries`` windows.  Bit-exact
+    with the inner producer by construction (a hit returns what the inner
+    producer materialized).  Under a jax trace (e.g. inside
+    `keystream_coupled`) the cache is bypassed — tracers have no host
+    identity to key on.
+    """
+
+    name = "cached"
+    MAX_ENTRIES = 64
+
+    def __init__(self, params: CipherParams, *, inner: Optional[str] = None,
+                 max_entries: Optional[int] = None):
+        super().__init__(params)
+        inner = inner if inner is not None else params.xof
+        if inner == self.name:
+            raise ValueError("cached producer cannot wrap itself")
+        self.inner = make_producer(inner, params)
+        self.max_entries = max_entries or self.MAX_ENTRIES
+        self._cache: "OrderedDict[tuple, dict]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @classmethod
+    def query_caps(cls) -> ProducerCaps:
+        return ProducerCaps(
+            name=cls.name,
+            description="memoizes RC planes for repeated (session, ctr) "
+                        "windows over the stream-matching producer",
+            available=True,
+            stream=None,          # follows params.xof (the inner stream)
+            memoizes=True,
+        )
+
+    # material/tables delegate to the inner backend; the nonce identities
+    # the cache keys on ride on the ProducerTables themselves
+    def session_material(self, nonce) -> SessionMaterial:
+        return self.inner.session_material(nonce)
+
+    def _stack_payloads(self, materials):
+        return self.inner._stack_payloads(materials)
+
+    def producer_fn(self):
+        return self.inner.producer_fn()
+
+    @staticmethod
+    def _key(tables: ProducerTables, session_ids, block_ctrs):
+        sid = np.asarray(session_ids).reshape(-1)
+        ctr = np.asarray(block_ctrs, np.uint64).reshape(-1)
+        try:
+            nonces = b"".join(tables.nonces[int(s)] for s in sid)
+        except IndexError:   # lanes beyond the stacked tables: don't cache
+            return None
+        return (nonces, ctr.tobytes())
+
+    def produce(self, tables, session_ids, block_ctrs):
+        if isinstance(session_ids, jax.core.Tracer) or isinstance(
+                block_ctrs, jax.core.Tracer):
+            return self.inner.produce(tables, session_ids, block_ctrs)
+        key = self._key(tables, session_ids, block_ctrs)
+        if key is not None and key in self._cache:
+            self.hits += 1
+            self._cache.move_to_end(key)
+            return self._cache[key]
+        out = self.inner.produce(tables, session_ids, block_ctrs)
+        if key is not None:
+            self.misses += 1
+            self._cache[key] = out
+            while len(self._cache) > self.max_entries:
+                self._cache.popitem(last=False)
+        return out
+
+    def cache_stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "entries": len(self._cache),
+            "hit_rate": self.hits / total if total else 0.0,
+        }
+
+
+# ==========================================================================
+# Introspection CLI: `python -m repro.core.producer`
+# ==========================================================================
+def describe() -> str:
+    """The producer registry as a table: one row per backend, with
+    availability, stream identity, and memoization."""
+    caps = producer_caps()
+    rows = [("producer", "available", "stream", "memoizes",
+             "description / reason")]
+    for name, c in caps.items():
+        stream = c.stream if c.stream is not None else "(params.xof)"
+        detail = c.description if c.available else f"UNAVAILABLE: {c.reason}"
+        rows.append((name, "yes" if c.available else "no", stream,
+                     "yes" if c.memoizes else "no", detail))
+    widths = [max(len(r[i]) for r in rows) for i in range(4)]
+    lines = []
+    for i, r in enumerate(rows):
+        lines.append("  ".join(r[j].ljust(widths[j]) for j in range(4))
+                     + "  " + r[4])
+        if i == 0:
+            lines.append("  ".join("-" * w for w in widths) + "  " + "-" * 24)
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(describe())

@@ -1,0 +1,434 @@
+"""Measured StreamPlan autotuner: producer × engine × variant × window × depth.
+
+The ROADMAP's named follow-up to the engine registry — "latency-measured
+autotuning of (engine, variant)" — generalized to the full pipeline tuple
+now that the producer half is a registry too.  DNA-HHE's dual-mode
+accelerator and Medha's microcoded configurability both win by *selecting*
+among execution strategies per workload shape; this module makes that
+selection measured, cached, and first-class:
+
+  * :class:`StreamPlan` — one immutable pipeline configuration: which
+    `repro.core.producer` backend materializes constants, which
+    `repro.core.engine` backend consumes them, under which schedule
+    orientation, at what window size, behind what FIFO depth.
+  * :func:`autotune` — times every candidate plan on the *real*
+    `KeystreamFarm` loop (same dispatch pattern the serving path runs,
+    not a microbenchmark), picks by measured per-window p50, and persists
+    the winner to a JSON cache keyed by (preset, lanes, noise, host
+    fingerprint) so serving restarts skip re-tuning.
+  * :func:`load_plan` — the cheap cache-only lookup "auto" resolution
+    consults (`repro.core.engine.resolve_engine` /
+    `repro.core.producer.resolve_producer`); static preference remains
+    the no-cache fallback.
+
+Candidate plans are *stream-preserving* by construction: only producers
+whose XOF stream matches ``params.xof`` are eligible
+(`repro.core.producer.compatible_producers`), and every engine × variant
+is bit-exact by the registry contract — so a tuned plan can change
+latency, never a keystream bit.
+
+    PYTHONPATH=src python -m repro.core.tuner                 # tables
+    PYTHONPATH=src python -m repro.core.tuner --autotune \\
+        --preset rubato-128l --lanes 256                      # measure
+
+The cache lives at ``$REPRO_TUNER_CACHE`` (or
+``~/.cache/repro-presto/streamplans.json``); `scripts/ci.sh` smokes the
+measure→persist→reload loop with a temp cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import platform
+import time
+from typing import List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core.cipher import CipherBatch
+from repro.core.engine import engine_caps, resolve_engine
+from repro.core.farm import KeystreamFarm, pack_windows
+from repro.core.params import CipherParams, get_params
+from repro.core.producer import compatible_producers, producer_caps
+
+CACHE_VERSION = 1
+_ENV_CACHE = "REPRO_TUNER_CACHE"
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """One pipeline configuration — the autotuner's unit of selection.
+
+    Round-trips through JSON bit-identically (`to_json`/`from_json`):
+    every field is a primitive, and unknown keys on load are ignored so
+    cache entries can carry measurement metadata beside the plan.
+    """
+
+    producer: str      # repro.core.producer backend name
+    engine: str        # repro.core.engine backend name
+    variant: str       # schedule orientation (core/schedule.py)
+    window: int        # lanes per farm window
+    depth: int         # producer->consumer FIFO depth (farm)
+
+    def to_json(self) -> dict:
+        return {
+            "producer": self.producer,
+            "engine": self.engine,
+            "variant": self.variant,
+            "window": int(self.window),
+            "depth": int(self.depth),
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "StreamPlan":
+        return cls(
+            producer=str(d["producer"]),
+            engine=str(d["engine"]),
+            variant=str(d["variant"]),
+            window=int(d["window"]),
+            depth=int(d["depth"]),
+        )
+
+    def describe(self) -> str:
+        return (f"producer={self.producer} engine={self.engine} "
+                f"variant={self.variant} window={self.window} "
+                f"depth={self.depth}")
+
+
+# ==========================================================================
+# Cache: JSON keyed by (preset, lanes, noise, host fingerprint)
+# ==========================================================================
+def host_fingerprint() -> str:
+    """Stable id for "this machine, this backend" — a plan measured on one
+    host must not steer another (the tuner's answer is hardware-shaped)."""
+    dev = jax.devices()[0]
+    raw = "|".join([
+        platform.machine(),
+        platform.system(),
+        jax.default_backend(),
+        getattr(dev, "device_kind", "?"),
+        str(jax.device_count()),
+        str(os.cpu_count()),
+    ])
+    return hashlib.sha1(raw.encode()).hexdigest()[:12]
+
+
+def cache_key(params: CipherParams, lanes: Optional[int]) -> str:
+    return (f"{params.name}|lanes={lanes}|noise={params.n_noise}"
+            f"|host={host_fingerprint()}")
+
+
+def default_cache_path() -> pathlib.Path:
+    env = os.environ.get(_ENV_CACHE)
+    if env:
+        return pathlib.Path(env)
+    return (pathlib.Path.home() / ".cache" / "repro-presto"
+            / "streamplans.json")
+
+
+def _read_cache(path: pathlib.Path) -> dict:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return {"version": CACHE_VERSION, "plans": {}}
+    if data.get("version") != CACHE_VERSION:
+        return {"version": CACHE_VERSION, "plans": {}}
+    return data
+
+
+def _write_cache(path: pathlib.Path, data: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def _coerce_params(params: Union[CipherParams, str]) -> CipherParams:
+    return get_params(params) if isinstance(params, str) else params
+
+
+def _plan_is_valid(plan: StreamPlan, params: CipherParams, *,
+                   mesh=None, axis: str = "data") -> bool:
+    """A cached plan is only trusted if every named backend still exists,
+    is available here, and preserves the preset's XOF stream."""
+    pcaps = producer_caps().get(plan.producer)
+    if pcaps is None or not pcaps.available:
+        return False
+    if pcaps.stream not in (None, params.xof):
+        return False
+    ecaps = engine_caps(mesh=mesh, axis=axis).get(plan.engine)
+    if ecaps is None or not ecaps.available:
+        return False
+    if plan.variant not in ecaps.schedule_variants:
+        return False
+    return plan.window >= 1 and plan.depth >= 1
+
+
+def save_plan(params: Union[CipherParams, str], lanes: int, plan: StreamPlan,
+              p50_ms: float, cache_path=None) -> pathlib.Path:
+    """Persist a measured plan (with its measurement, as metadata)."""
+    params = _coerce_params(params)
+    path = pathlib.Path(cache_path) if cache_path else default_cache_path()
+    data = _read_cache(path)
+    entry = plan.to_json()
+    entry.update({"p50_ms": float(p50_ms), "measured_at": time.time(),
+                  "backend": jax.default_backend()})
+    data["plans"][cache_key(params, lanes)] = entry
+    _write_cache(path, data)
+    return path
+
+
+def load_plan(params: Union[CipherParams, str], lanes: Optional[int] = None,
+              cache_path=None, *, mesh=None,
+              axis: str = "data") -> Optional[StreamPlan]:
+    """Cache-only lookup (never measures): the tuned plan for (preset,
+    lanes) on this host, or None.
+
+    With ``lanes=None`` — or when the exact lane count was never tuned —
+    falls back to the nearest tuned lane count for the same (preset,
+    noise, host), deterministically (closest; ties break toward the
+    smaller).  Plans naming backends that are gone or unavailable here
+    are ignored rather than trusted.
+    """
+    params = _coerce_params(params)
+    path = pathlib.Path(cache_path) if cache_path else default_cache_path()
+    plans = _read_cache(path)["plans"]
+    exact = plans.get(cache_key(params, lanes))
+    if exact is not None:
+        plan = StreamPlan.from_json(exact)
+        return plan if _plan_is_valid(plan, params, mesh=mesh,
+                                      axis=axis) else None
+    # nearest-lanes fallback within the same (preset, noise, host) family
+    prefix = f"{params.name}|lanes="
+    suffix = f"|noise={params.n_noise}|host={host_fingerprint()}"
+    candidates: List[Tuple[int, StreamPlan]] = []
+    for key, entry in plans.items():
+        if not (key.startswith(prefix) and key.endswith(suffix)):
+            continue
+        lane_s = key[len(prefix) : len(key) - len(suffix)]
+        try:
+            lane_n = int(lane_s)
+        except ValueError:
+            continue
+        plan = StreamPlan.from_json(entry)
+        if _plan_is_valid(plan, params, mesh=mesh, axis=axis):
+            candidates.append((lane_n, plan))
+    if not candidates:
+        return None
+    target = lanes if lanes is not None else max(n for n, _ in candidates)
+    candidates.sort(key=lambda np_: (abs(np_[0] - target), np_[0]))
+    return candidates[0][1]
+
+
+# ==========================================================================
+# Measurement: the real farm loop, per candidate plan
+# ==========================================================================
+def candidate_plans(params: Union[CipherParams, str], lanes: int, *,
+                    mesh=None, axis: str = "data",
+                    producers: Optional[Sequence[str]] = None,
+                    engines: Optional[Sequence[str]] = None,
+                    variants: Optional[Sequence[str]] = None,
+                    windows: Optional[Sequence[int]] = None,
+                    depths: Optional[Sequence[int]] = None) -> List[StreamPlan]:
+    """The default candidate grid for one (preset, lanes) workload shape.
+
+    Producers: every stream-preserving registered backend.  Engines: every
+    available backend except the oracles ("ref") and interpret-mode Pallas
+    (correctness tools, not serving paths).  Windows: the full batch and a
+    half-batch split (more pipelining); depths: double and triple
+    buffering.  Pass explicit sequences to override any dimension.
+    """
+    params = _coerce_params(params)
+    if producers is None:
+        producers = compatible_producers(params)
+    if engines is None:
+        caps = engine_caps(mesh=mesh, axis=axis)
+        engines = [n for n, c in caps.items()
+                   if c.available and n not in ("ref", "pallas-interpret")]
+        if not engines:
+            engines = ["jax"]
+    if variants is None:
+        variants = ("normal", "alternating")
+    if windows is None:
+        half = lanes // 2
+        windows = sorted({lanes, half} - {0})
+    if depths is None:
+        depths = (2, 3)
+    plans = []
+    for prod in producers:
+        for eng in engines:
+            for var in variants:
+                for win in windows:
+                    for dep in depths:
+                        plans.append(StreamPlan(prod, eng, var, int(win),
+                                                int(dep)))
+    return plans
+
+
+def measure_plan(params: Union[CipherParams, str], plan: StreamPlan,
+                 lanes: int, *, sessions: int = 2, n_windows: int = 4,
+                 reps: int = 2, mesh=None, axis: str = "data",
+                 seed: int = 0) -> float:
+    """Per-window p50 latency (seconds) of one plan on the real farm loop.
+
+    Runs ``n_windows`` windows of ``plan.window`` lanes over a
+    ``sessions``-session pool, ``reps`` times (after a warmup lap that
+    absorbs compilation), exactly the dispatch pattern `KeystreamFarm.run`
+    serves — so the number the tuner ranks on is the number serving sees.
+    """
+    params = _coerce_params(params)
+    batch = CipherBatch(params, seed=seed, producer=plan.producer)
+    batch.add_sessions(sessions)
+    farm = KeystreamFarm(batch, engine=plan.engine, variant=plan.variant,
+                         depth=plan.depth, mesh=mesh, axis=axis)
+
+    total = plan.window * n_windows
+    sids = np.resize(np.arange(sessions, dtype=np.int64), total)
+
+    def wplans(base: int):
+        # counters unique per (session, lane occurrence); tuning draws no
+        # real session counters (nothing is ever sent), so plain ranges do
+        ctrs = base + np.arange(total, dtype=np.int64) // sessions
+        return pack_windows(sids, ctrs, plan.window)
+
+    for _, z in farm.run(wplans(0)):        # warmup: compile both programs
+        jax.block_until_ready(z)
+    lat: List[float] = []
+    for rep in range(reps):
+        it = farm.run(wplans((rep + 1) * total))
+        while True:
+            t0 = time.perf_counter()
+            try:
+                _, z = next(it)
+            except StopIteration:
+                break
+            jax.block_until_ready(z)
+            lat.append(time.perf_counter() - t0)
+    return float(np.percentile(np.asarray(lat), 50))
+
+
+def autotune(params: Union[CipherParams, str], lanes: int, *,
+             sessions: int = 2, n_windows: int = 4, reps: int = 2,
+             mesh=None, axis: str = "data",
+             producers: Optional[Sequence[str]] = None,
+             engines: Optional[Sequence[str]] = None,
+             variants: Optional[Sequence[str]] = None,
+             windows: Optional[Sequence[int]] = None,
+             depths: Optional[Sequence[int]] = None,
+             cache_path=None, force: bool = False,
+             verbose: bool = False) -> StreamPlan:
+    """Measure every candidate plan and return (and persist) the winner.
+
+    Consults the cache first: a valid persisted plan for this (preset,
+    lanes, host) is returned as-is (deterministically — no re-timing)
+    unless ``force=True``.  Selection is by measured per-window p50 on
+    the real farm loop; ties break toward the earlier candidate, which
+    orders the grid's defaults (paper-conformance producer, shallower
+    pipeline) first.
+    """
+    params = _coerce_params(params)
+    if not force:
+        cached = load_plan(params, lanes, cache_path, mesh=mesh, axis=axis)
+        if cached is not None:
+            if verbose:
+                print(f"[tuner] cache hit for {params.name}/lanes={lanes}: "
+                      f"{cached.describe()}")
+            return cached
+    plans = candidate_plans(params, lanes, mesh=mesh, axis=axis,
+                            producers=producers, engines=engines,
+                            variants=variants, windows=windows,
+                            depths=depths)
+    if not plans:
+        raise RuntimeError("no candidate StreamPlans (empty grid?)")
+    best: Optional[StreamPlan] = None
+    best_p50 = float("inf")
+    for plan in plans:
+        p50 = measure_plan(params, plan, lanes, sessions=sessions,
+                           n_windows=n_windows, reps=reps, mesh=mesh,
+                           axis=axis)
+        if verbose:
+            print(f"[tuner] {plan.describe():60s} p50={p50 * 1e3:8.3f} ms")
+        if p50 < best_p50:
+            best, best_p50 = plan, p50
+    path = save_plan(params, lanes, best, best_p50 * 1e3, cache_path)
+    if verbose:
+        print(f"[tuner] winner: {best.describe()} "
+              f"(p50={best_p50 * 1e3:.3f} ms) -> {path}")
+    return best
+
+
+# ==========================================================================
+# Introspection CLI: `python -m repro.core.tuner`
+# ==========================================================================
+def describe(cache_path=None) -> str:
+    """The plan table (every cached StreamPlan for this host) printed next
+    to the producer and engine registry tables — one view of the whole
+    selection space."""
+    from repro.core import engine as engine_mod
+    from repro.core import producer as producer_mod
+
+    path = pathlib.Path(cache_path) if cache_path else default_cache_path()
+    plans = _read_cache(path)["plans"]
+    fp = host_fingerprint()
+    lines = ["=== cached StreamPlans (this host) ==="]
+    rows = [("key", "producer", "engine", "variant", "window", "depth",
+             "p50 ms")]
+    for key in sorted(plans):
+        if f"|host={fp}" not in key:
+            continue
+        e = plans[key]
+        rows.append((key.split("|host=")[0], e["producer"], e["engine"],
+                     e["variant"], str(e["window"]), str(e["depth"]),
+                     f"{e.get('p50_ms', float('nan')):.3f}"))
+    if len(rows) == 1:
+        lines.append(f"  (none at {path}; run --autotune, or serve with "
+                     "--autotune)")
+    else:
+        widths = [max(len(r[i]) for r in rows) for i in range(7)]
+        for i, r in enumerate(rows):
+            lines.append("  ".join(r[j].ljust(widths[j]) for j in range(7)))
+            if i == 0:
+                lines.append("  ".join("-" * w for w in widths))
+    lines += ["", "=== producer registry ===", producer_mod.describe(),
+              "", "=== engine registry ===", engine_mod.describe()]
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure (and persist) a plan before printing")
+    ap.add_argument("--preset", default="rubato-128l")
+    ap.add_argument("--lanes", type=int, default=64)
+    ap.add_argument("--sessions", type=int, default=2)
+    ap.add_argument("--windows", type=int, default=4,
+                    help="timed windows per rep")
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--force", action="store_true",
+                    help="re-measure even on a cache hit")
+    ap.add_argument("--cache", default=None,
+                    help=f"cache path (default ${_ENV_CACHE} or "
+                         f"{default_cache_path()})")
+    args = ap.parse_args(argv)
+    if args.autotune:
+        plan = autotune(args.preset, args.lanes, sessions=args.sessions,
+                        n_windows=args.windows, reps=args.reps,
+                        cache_path=args.cache, force=args.force,
+                        verbose=True)
+        print(f"\ntuned plan for {args.preset}/lanes={args.lanes}: "
+              f"{plan.describe()}\n")
+    print(describe(args.cache))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,11 +19,17 @@ up to 2^20 bytes of XOF output per keystream block — vastly more than the
 Two calling conventions per backend:
 
   * single-stream (``aes_xof_words`` / ``threefry_xof_words``): one nonce,
-    a vector of block counters — what a single ``Cipher`` uses;
+    a vector of block counters;
   * multi-stream (``*_xof_words_batched``): per-lane *precompiled* nonce
     material (expanded AES round keys / threefry root keys), so one jit'd
     producer call serves lanes drawn from many concurrent sessions.  Both
     conventions produce bit-identical words for the same (nonce, ctr).
+
+These are the word-stream *primitives*.  Cipher-facing constant
+materialization goes through the :mod:`repro.core.producer` registry
+(`ConstantsProducer` backends wrapping these functions plus the samplers)
+— select producers there, not here; ``make_xof``/``xof_words`` remain only
+as primitive accessors for direct XOF tests.
 """
 
 from __future__ import annotations

@@ -124,20 +124,25 @@ class FarmEncryptedSource:
 
     ``engine`` picks the farm's consumer backend (any registered
     `repro.core.engine` name or instance); ``consumer``/``interpret`` are
-    the legacy spellings.
+    the legacy spellings; ``depth`` sets the farm's producer→consumer
+    FIFO depth (how many batches of XOF/sampling `stream` keeps in
+    flight).  ``plan`` applies a measured :class:`repro.core.tuner.
+    StreamPlan` — producer, engine, variant, depth — in one shot (its
+    window field is moot here: each batch is one fixed-size window).
     """
 
     def __init__(self, source, batch: CipherBatch,
                  session: Optional[StreamSession] = None,
                  engine=None, consumer: Optional[str] = None, mesh=None,
                  interpret: Optional[bool] = None,
-                 variant: Optional[str] = None):
+                 variant: Optional[str] = None,
+                 depth: Optional[int] = None, plan=None):
         self.source = source
         self.batch = batch
         self.session = session if session is not None else batch.add_session()
         self.farm = KeystreamFarm(batch, engine=engine, consumer=consumer,
                                   mesh=mesh, interpret=interpret,
-                                  variant=variant)
+                                  variant=variant, depth=depth, plan=plan)
 
     @property
     def cipher(self) -> Cipher:

@@ -9,9 +9,13 @@ The encrypted path is farm-backed: the server holds ONE symmetric key in a
 :class:`repro.core.cipher.CipherBatch` pool with one `StreamSession` per
 batch lane, and every keystream materialization — prompt decryption AND
 response re-encryption — runs through the :class:`repro.serve.hhe_loop.
-HHEServer` window scheduler over the double-buffered `KeystreamFarm`
-(consumer backend selectable with --engine; see `repro.core.engine`).
-Clients encrypt/decrypt with their own session's single-stream view
+HHEServer` window scheduler over the depth-buffered `KeystreamFarm`
+(consumer backend selectable with --engine; see `repro.core.engine`;
+constants producer per `repro.core.producer`).  The whole pipeline tuple
+(producer, engine, variant, window, depth) can come from a measured
+`repro.core.tuner.StreamPlan`: --autotune measures one for this serving
+shape and persists it; --plan serves from a persisted cache.  Clients
+encrypt/decrypt with their own session's single-stream view
 (`CipherBatch.session_cipher`) — bit-exact with the farm by contract.
 """
 
@@ -53,7 +57,8 @@ class EncryptedChannel:
     """
 
     def __init__(self, cipher_name: str, batch: int, engine: str = "auto",
-                 window: int = 0, seed: int = 0, variant: str = "auto"):
+                 window: int = 0, seed: int = 0, variant: str = "auto",
+                 plan=None):
         self.batch = CipherBatch(cipher_name, seed=seed)
         self.lanes = batch
         self.l = self.batch.params.l
@@ -66,14 +71,24 @@ class EncryptedChannel:
         # schedule-orientation plan: "auto" = the engine's preferred one
         # (alternating on the unrolled kernel; bit-exact either way)
         self.variant = variant
+        # a measured StreamPlan (repro.core.tuner) overrides engine/variant
+        # and supplies producer + FIFO depth + window in one shot
+        self.plan = plan
         for _ in range(batch):
             self.batch.add_session()
 
     def _server(self, blocks_hint: int) -> HHEServer:
         if self.server is None:
-            w = self.window or max(1, self.lanes * blocks_hint)
-            self.server = HHEServer(self.batch, window=w, engine=self.engine,
-                                    variant=self.variant)
+            if self.plan is not None:
+                # honor the plan's measured window unless --window overrode
+                self.server = HHEServer(self.batch,
+                                        window=self.window or None,
+                                        plan=self.plan)
+            else:
+                w = self.window or max(1, self.lanes * blocks_hint)
+                self.server = HHEServer(self.batch, window=w,
+                                        engine=self.engine,
+                                        variant=self.variant)
             self.server.warmup()
         return self.server
 
@@ -165,6 +180,13 @@ def main(argv=None):
                     choices=["auto", "normal", "alternating"],
                     help="cipher schedule-orientation plan for --encrypted "
                          "(core/schedule.py; 'auto' = engine preference)")
+    ap.add_argument("--plan", default=None,
+                    help="StreamPlan JSON cache to serve --encrypted from "
+                         "(repro.core.tuner; looked up by preset + host)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure a StreamPlan for this serving shape "
+                         "before taking traffic (persisted to the tuner "
+                         "cache; overrides --engine/--schedule-variant)")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -187,9 +209,29 @@ def main(argv=None):
 
     chan = None
     if args.encrypted:
+        plan = None
+        if args.plan or args.autotune:
+            from repro.core.params import get_params
+            from repro.core.tuner import autotune, load_plan
+
+            # the serving window shape: one wave of per-lane prompt blocks
+            cl = get_params(args.cipher).l
+            lanes = args.window or max(
+                1, args.batch * (-(args.prompt_len // -cl)))
+            if args.autotune:
+                plan = autotune(args.cipher, lanes, sessions=args.batch,
+                                cache_path=args.plan, verbose=True)
+            else:
+                plan = load_plan(args.cipher, lanes, cache_path=args.plan)
+                if plan is None:
+                    raise SystemExit(
+                        f"no StreamPlan cached for {args.cipher}/"
+                        f"lanes={lanes} on this host in "
+                        f"{args.plan} — run with --autotune first")
+            print(f"serving from measured StreamPlan: {plan.describe()}")
         chan = EncryptedChannel(args.cipher, args.batch, engine=args.engine,
                                 window=args.window, seed=args.seed,
-                                variant=args.schedule_variant)
+                                variant=args.schedule_variant, plan=plan)
         cts = chan.client_encrypt(prompts)                 # client side
         toks = chan.serve_decrypt_prompts(cts, args.prompt_len)
         np.testing.assert_array_equal(np.asarray(toks), prompts)
@@ -197,6 +239,8 @@ def main(argv=None):
         print(f"prompts arrived HHE-encrypted; decrypted through "
               f"KeystreamFarm windows (engine={chan.server.farm.engine.name}"
               f", schedule={chan.server.farm.engine.variant}"
+              f", producer={chan.batch.producer.name}"
+              f", depth={chan.server.farm.depth}"
               f", window={chan.server.window}, "
               f"{args.batch} sessions)")
     else:

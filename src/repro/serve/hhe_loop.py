@@ -37,7 +37,7 @@ from repro.core.cipher import (
     decode_fixed,
     encode_fixed,
 )
-from repro.core.farm import KeystreamFarm, WindowPlan
+from repro.core.farm import KeystreamFarm, WindowPlan, pack_windows
 
 OPS = ("keystream", "encrypt", "decrypt", "encrypt_tokens", "decrypt_tokens")
 
@@ -88,18 +88,26 @@ class HHEServer:
 
     ``engine`` picks the farm's consumer backend (any registered
     `repro.core.engine` name or instance); ``consumer``/``interpret`` are
-    the legacy spellings.  With ``auto_rotate`` (default), a session whose
-    counter space cannot fit an incoming request is rotated to a fresh
-    nonce (pending lanes on the old nonce are flushed first), so
-    long-running streams survive counter exhaustion without keystream
-    reuse; clients observe rotations via ``StreamSession.generation`` and
-    the session's current nonce.
+    the legacy spellings; ``depth`` sets the farm's producer→consumer FIFO
+    depth.  ``plan`` applies a measured :class:`repro.core.tuner.
+    StreamPlan` in one shot — producer, engine, variant, depth, and (when
+    ``window`` is not given) window size.  With ``auto_rotate`` (default),
+    a session whose counter space cannot fit an incoming request is
+    rotated to a fresh nonce (pending lanes on the old nonce are flushed
+    first), so long-running streams survive counter exhaustion without
+    keystream reuse; clients observe rotations via
+    ``StreamSession.generation`` and the session's current nonce.
     """
 
-    def __init__(self, batch: CipherBatch, window: int = 256,
+    DEFAULT_WINDOW = 256
+
+    def __init__(self, batch: CipherBatch, window: Optional[int] = None,
                  engine=None, *, consumer: Optional[str] = None, mesh=None,
                  axis: str = "data", interpret: Optional[bool] = None,
-                 variant: Optional[str] = None, auto_rotate: bool = True):
+                 variant: Optional[str] = None, depth: Optional[int] = None,
+                 plan=None, auto_rotate: bool = True):
+        if window is None:
+            window = plan.window if plan is not None else self.DEFAULT_WINDOW
         if window <= 0:
             raise ValueError("window must be positive")
         self.batch = batch
@@ -107,7 +115,7 @@ class HHEServer:
         self.auto_rotate = auto_rotate
         self.farm = KeystreamFarm(batch, engine=engine, consumer=consumer,
                                   mesh=mesh, axis=axis, interpret=interpret,
-                                  variant=variant)
+                                  variant=variant, depth=depth, plan=plan)
         self._queue: List[tuple] = []     # (request, ctrs, t_submit)
         self._done: List[HHEResponse] = []   # rotation-forced early flushes
         self.latencies: List[float] = []
@@ -185,27 +193,19 @@ class HHEServer:
         queue, self._queue = self._queue, []
         sids, ctrs, owners = self._pack(queue)
 
-        W = self.window
-        pad = (-len(sids)) % W
-        if pad:   # repeat the last real lane; outputs discarded
-            sids = np.concatenate([sids, np.full(pad, sids[-1])])
-            ctrs = np.concatenate([ctrs, np.full(pad, ctrs[-1])])
-
-        plans = [
-            WindowPlan(sids[i : i + W], ctrs[i : i + W],
-                       meta=(i, min(i + W, len(owners))))
-            for i in range(0, len(sids), W)
-        ]
+        # ragged tails pad + trim in ONE place (core/farm.pack_windows);
+        # plan.valid marks where the real lanes end
+        plans = pack_windows(sids, ctrs, self.window)
 
         l = self.batch.params.l
         rows = [np.empty((req.blocks, l), np.uint32) for req, _, _ in queue]
         remaining = [req.blocks for req, _, _ in queue]
         done_t = [0.0] * len(queue)
-        for plan, z in self.farm.run(plans):
+        for widx, (plan, z) in enumerate(self.farm.run(plans)):
             z = np.asarray(jax.block_until_ready(z))
             t_now = time.perf_counter()
-            lo, hi = plan.meta
-            for j in range(hi - lo):
+            lo = widx * self.window
+            for j in range(plan.valid):
                 ridx, row = owners[lo + j]
                 rows[ridx][row] = z[j]
                 remaining[ridx] -= 1

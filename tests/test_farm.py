@@ -13,7 +13,13 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import CipherBatch, KeystreamFarm, WindowPlan, plan_windows
+from repro.core import (
+    CipherBatch,
+    KeystreamFarm,
+    WindowPlan,
+    pack_windows,
+    plan_windows,
+)
 from repro.core.params import get_params
 from repro.data.encrypted import (
     EncryptedSource,
@@ -103,6 +109,57 @@ def test_session_counter_space_exhaustion_raises():
         s.take_window(1)
 
 
+def test_session_overdraw_leaves_cursor_untouched():
+    """An over-drawing take_window must consume NOTHING: a partial grant
+    (or a moved cursor on refusal) would desynchronize client and server
+    counter reservations."""
+    from repro.core.cipher import SESSION_CTR_LIMIT
+
+    cb = CipherBatch("hera-128a", seed=0)
+    s = cb.add_session()
+    s.take_window(SESSION_CTR_LIMIT - 3)        # 3 counters left
+    for n in (4, 10, SESSION_CTR_LIMIT):        # every over-draw size
+        with pytest.raises(RuntimeError, match="counter space exhausted"):
+            s.take_window(n)
+        assert s.remaining() == 3               # cursor never moved
+    assert s.take_window(3).tolist() == [
+        SESSION_CTR_LIMIT - 3, SESSION_CTR_LIMIT - 2, SESSION_CTR_LIMIT - 1]
+
+
+def test_rotation_nonces_never_repeat():
+    """Repeated rotations must always draw fresh nonces — a repeated nonce
+    re-keys into an already-consumed XOF stream (two-time pad)."""
+    cb = CipherBatch("rubato-128s", seed=27)
+    s = cb.add_session()
+    seen = {bytes(s.nonce)}
+    for i in range(32):
+        s = cb.rotate_session(s.index)
+        nb = bytes(s.nonce)
+        assert nb not in seen, f"nonce repeated at rotation {i}"
+        seen.add(nb)
+        assert s.generation == i + 1 and s.next_ctr == 0
+
+
+def test_farm_plan_referencing_rotated_out_session_serves_new_generation():
+    """A WindowPlan captured BEFORE a rotation but produced AFTER it is
+    served from the live generation's table row (the old nonce's material
+    is gone — rotation is a flush boundary, documented in
+    CipherBatch.rotate_session): the output must match the NEW
+    generation's oracle, never silently resurrect the old stream."""
+    cb = CipherBatch("rubato-128s", seed=28)
+    s = cb.add_session()
+    farm = KeystreamFarm(cb, engine="jax")
+    stale_plan = WindowPlan(np.zeros(4, np.int64), np.arange(4))
+    z_old = np.array(farm.consume(farm.produce(stale_plan)))
+    cb.rotate_session(s.index)
+    z_after = np.array(farm.consume(farm.produce(stale_plan)))
+    assert not np.array_equal(z_after, z_old)
+    np.testing.assert_array_equal(
+        z_after,
+        np.array(cb.session_cipher(s.index).keystream(
+            jnp.arange(4, dtype=jnp.uint32))))
+
+
 def test_rotate_session_fresh_nonce_same_index():
     """Rotation retires the (nonce, counter) space: fresh nonce, cursor 0,
     same lane index, generation bumped — and the farm serves the new
@@ -159,6 +216,100 @@ def test_plan_windows_covers_all_pairs(interleave):
         for s, c in zip(p.session_ids, p.block_ctrs)
     }
     assert pairs == {(s, c) for s in range(3) for c in range(4)}
+
+
+def test_pack_windows_pads_ragged_tail_shape_stable():
+    """THE window slicer: a non-dividing total pads the tail by repeating
+    the last real lane (never fresh counters), so every window has the
+    same shape — no per-tail-size recompile."""
+    sids = np.array([0, 1, 2, 0, 1])
+    ctrs = np.array([7, 8, 9, 10, 11])
+    plans = pack_windows(sids, ctrs, window=3)
+    assert [p.lanes for p in plans] == [3, 3]       # shape-stable
+    assert [p.valid for p in plans] == [3, 2]
+    # the pad repeats the last REAL lane of the tail
+    assert plans[1].session_ids.tolist() == [0, 1, 1]
+    assert plans[1].block_ctrs.tolist() == [10, 11, 11]
+
+
+def test_pack_windows_rejects_bad_args():
+    with pytest.raises(ValueError, match="positive"):
+        pack_windows(np.zeros(2), np.zeros(2), 0)
+    with pytest.raises(ValueError, match="mismatch"):
+        pack_windows(np.zeros(2), np.zeros(3), 2)
+
+
+@pytest.mark.parametrize("interleave", [True, False])
+def test_plan_windows_ragged_tail_padded(interleave):
+    """3 sessions x 3 blocks = 9 lanes into window=4: 3 shape-stable
+    windows, tail valid=1, and the padded lanes still cover exactly the
+    reserved (session, ctr) pairs."""
+    cb = CipherBatch("hera-128a", seed=2)
+    sess = cb.add_sessions(3)
+    plans = plan_windows(sess, blocks_per_session=3, window=4,
+                         interleave=interleave)
+    assert [p.lanes for p in plans] == [4, 4, 4]
+    assert [p.valid for p in plans] == [4, 4, 1]
+    pairs = {
+        (int(s), int(c))
+        for p in plans
+        for s, c in zip(p.session_ids[: p.valid], p.block_ctrs[: p.valid])
+    }
+    assert pairs == {(s, c) for s in range(3) for c in range(3)}
+
+
+def test_farm_keystream_ragged_window_trims_and_matches():
+    """keystream() with a non-dividing window must pad+trim (same idiom as
+    keystream_pallas ragged lanes) and stay bit-exact, lane for lane."""
+    cb = CipherBatch("rubato-128s", seed=19)
+    cb.add_sessions(2)
+    sids = np.array([0, 1, 0, 1, 1, 0, 1])      # 7 lanes, window 3
+    ctrs = np.array([0, 0, 1, 1, 2, 2, 3])
+    farm = KeystreamFarm(cb, engine="jax")
+    z = np.array(farm.keystream(sids, ctrs, window=3))
+    assert z.shape == (7, cb.params.l)
+    np.testing.assert_array_equal(z, _oracle(cb, sids, ctrs))
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3, 4])
+def test_farm_depth_bit_exact(depth):
+    """Pipeline depth is pure scheduling: every FIFO depth (serialized
+    through deep buffering) yields identical keystream in order."""
+    cb = CipherBatch("rubato-128s", seed=20)
+    sess = cb.add_sessions(3)
+    farm = KeystreamFarm(cb, engine="jax", depth=depth)
+    assert farm.depth == depth
+    plans = plan_windows(sess, blocks_per_session=4, window=6)
+    seen = 0
+    for plan, z in farm.run(plans):
+        np.testing.assert_array_equal(
+            np.array(z), _oracle(cb, plan.session_ids, plan.block_ctrs))
+        seen += plan.lanes
+    assert seen == 12
+
+
+def test_farm_depth_validation():
+    cb = CipherBatch("hera-128a", seed=1)
+    cb.add_session()
+    with pytest.raises(ValueError, match="depth"):
+        KeystreamFarm(cb, engine="jax", depth=0)
+
+
+def test_farm_depth3_overlaps_more_windows_in_flight():
+    """Behavioral check on the FIFO: with depth=d, the first consume must
+    not happen before d windows were produced (producers run ahead)."""
+    cb = CipherBatch("hera-128a", seed=3)
+    cb.add_session()
+    farm = KeystreamFarm(cb, engine="jax", depth=3)
+    events = []
+    orig_produce, orig_consume = farm.produce, farm.consume
+    farm.produce = lambda p: (events.append("p"), orig_produce(p))[1]
+    farm.consume = lambda c: (events.append("c"), orig_consume(c))[1]
+    plans = [WindowPlan(np.zeros(2, np.int64), np.arange(2) + 2 * i)
+             for i in range(5)]
+    list(farm.run(plans))
+    assert events[:4] == ["p", "p", "p", "c"]     # 3 produced before 1st c
+    assert events.count("p") == 5 and events.count("c") == 5
 
 
 def test_farm_run_double_buffered_bit_exact():

@@ -1,0 +1,273 @@
+"""ConstantsProducer registry: capability reporting, the memoizing
+`cached` backend, and the cross-(producer × engine × variant)
+bit-exactness matrix (ISSUE acceptance: keystreams identical regardless
+of which stream-compatible plan materializes the constants).
+"""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    CipherBatch,
+    compatible_producers,
+    make_cipher,
+    make_engine,
+    make_producer,
+    producer_caps,
+    registered_producers,
+    resolve_producer,
+)
+from repro.core.params import get_params
+from repro.core.producer import CachedProducer, ConstantsProducer
+
+LANES = 3
+
+
+def _threefry_params(base="rubato-128s"):
+    p = get_params(base)
+    return dataclasses.replace(p, name=f"{base}-tf", xof="threefry")
+
+
+# ---------------------------------------------------------------------------
+# Registry + capability reporting
+# ---------------------------------------------------------------------------
+def test_registry_contents():
+    assert set(registered_producers()) >= {"aes", "threefry", "cached"}
+    assert len(registered_producers()) >= 3
+
+
+def test_producer_caps_report():
+    caps = producer_caps()
+    assert set(caps) == set(registered_producers())
+    for c in caps.values():
+        assert c.available or c.reason
+    assert caps["aes"].stream == "aes"
+    assert caps["threefry"].stream == "threefry"
+    # the wrapper follows params.xof and declares its memoization
+    assert caps["cached"].stream is None
+    assert caps["cached"].memoizes and not caps["aes"].memoizes
+
+
+def test_compatible_producers_preserve_stream():
+    """The tuner's candidate set: swapping within it never changes a
+    keystream bit, so 'threefry' must NOT be offered for an aes preset."""
+    comp_aes = compatible_producers(get_params("hera-128a"))
+    assert "aes" in comp_aes and "cached" in comp_aes
+    assert "threefry" not in comp_aes
+    comp_tf = compatible_producers(_threefry_params())
+    assert "threefry" in comp_tf and "cached" in comp_tf
+    assert "aes" not in comp_tf
+
+
+def test_resolve_producer_defaults_to_preset_stream():
+    assert resolve_producer(None, get_params("hera-128a")) == "aes"
+    assert resolve_producer(None, _threefry_params()) == "threefry"
+    assert resolve_producer("cached", get_params("hera-128a")) == "cached"
+
+
+def test_unknown_producer_raises_listing_registry():
+    with pytest.raises(ValueError, match="registered producers"):
+        resolve_producer("chacha", get_params("hera-128a"))
+    with pytest.raises(ValueError, match="registered producers"):
+        CipherBatch("hera-128a", producer="chacha")
+
+
+def test_make_producer_passes_instances_through():
+    p = get_params("hera-128a")
+    prod = make_producer("aes", p)
+    assert make_producer(prod, p) is prod
+
+
+def test_make_producer_rejects_mismatched_params():
+    """A producer sampling for different (q, constant-count) would emit
+    constants no engine of this pool can consume — must fail loudly."""
+    prod = make_producer("aes", get_params("hera-128a"))
+    with pytest.raises(ValueError, match="different params"):
+        make_producer(prod, get_params("rubato-128l"))
+
+
+def test_cached_cannot_wrap_itself():
+    with pytest.raises(ValueError, match="wrap itself"):
+        CachedProducer(get_params("hera-128a"), inner="cached")
+
+
+def test_describe_table_lists_all():
+    from repro.core.producer import describe
+
+    text = describe()
+    for name in registered_producers():
+        assert name in text
+
+
+# ---------------------------------------------------------------------------
+# The matrix: keystream identical regardless of (producer, engine, variant)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["hera-128a", "rubato-128s"])
+@pytest.mark.parametrize("engine", ["ref", "jax", "pallas-interpret"])
+@pytest.mark.parametrize("variant", ["normal", "alternating"])
+def test_plan_matrix_bit_exact(name, engine, variant):
+    """Every stream-compatible producer × engine × variant combination
+    must produce the SAME keystream — a tuned StreamPlan can change
+    latency, never a bit."""
+    rng = np.random.default_rng(3)
+    sids = rng.integers(0, 3, 8)
+    ctrs = rng.integers(0, 2**16, 8)
+    want = None
+    for producer in compatible_producers(get_params(name)):
+        cb = CipherBatch(name, seed=11, producer=producer)
+        cb.add_sessions(3)
+        eng = cb.make_engine(engine, variant=variant)
+        consts = cb.round_constant_stream(sids, ctrs)
+        z = np.array(eng(consts))
+        if want is None:
+            want = z
+        else:
+            np.testing.assert_array_equal(z, want)
+    assert want is not None
+
+
+@pytest.mark.parametrize("producer", ["threefry", "cached"])
+def test_threefry_stream_matrix(producer):
+    """Same matrix property on a threefry-stream preset."""
+    p = _threefry_params()
+    cb = CipherBatch(p, seed=7, producer=producer)
+    cb.add_sessions(2)
+    sids = np.array([0, 1, 1, 0])
+    ctrs = np.array([0, 0, 3, 9])
+    z = np.array(cb.keystream(sids, ctrs))
+    base = CipherBatch(p, seed=7)    # defaults to the threefry stream
+    base.add_sessions(2)
+    np.testing.assert_array_equal(z, np.array(base.keystream(sids, ctrs)))
+
+
+def test_single_stream_cipher_matches_batched_producer():
+    """Cipher (single-nonce path) and CipherBatch (table-gather path) run
+    the same producer backend and must agree bit-for-bit."""
+    cb = CipherBatch("rubato-128l", seed=4, producer="cached")
+    s = cb.add_session()
+    ctrs = np.arange(5)
+    z_batch = np.array(cb.keystream(np.zeros(5, np.int64), ctrs))
+    ci = cb.session_cipher(s.index)
+    assert ci.producer == "cached"    # oracle runs the pool's backend
+    z_single = np.array(ci.keystream(jnp.asarray(ctrs, jnp.uint32)))
+    np.testing.assert_array_equal(z_batch, z_single)
+
+
+# ---------------------------------------------------------------------------
+# The cached producer's memoization semantics
+# ---------------------------------------------------------------------------
+def test_cached_producer_hits_on_repeat_window():
+    cb = CipherBatch("rubato-128s", seed=9, producer="cached")
+    cb.add_sessions(2)
+    sids, ctrs = np.array([0, 1, 0, 1]), np.array([0, 0, 1, 1])
+    z1 = np.array(cb.keystream(sids, ctrs))
+    stats1 = cb.producer.cache_stats()
+    assert stats1["misses"] == 1 and stats1["hits"] == 0
+    z2 = np.array(cb.keystream(sids, ctrs))          # the re-keying shape
+    stats2 = cb.producer.cache_stats()
+    assert stats2["hits"] == 1
+    np.testing.assert_array_equal(z1, z2)
+
+
+def test_cached_producer_invalidates_on_rotation():
+    """Rotation replaces the nonce — the cache key — so a repeated
+    (session, ctr) window after rotation must MISS and produce the new
+    generation's stream, never a stale plane."""
+    cb = CipherBatch("rubato-128s", seed=10, producer="cached")
+    s = cb.add_session()
+    ctrs = np.arange(4)
+    z_old = np.array(cb.keystream(np.zeros(4, np.int64), ctrs))
+    cb.rotate_session(s.index)
+    z_new = np.array(cb.keystream(np.zeros(4, np.int64), ctrs))
+    assert not np.array_equal(z_old, z_new)
+    np.testing.assert_array_equal(
+        z_new,
+        np.array(cb.session_cipher(s.index).keystream(
+            jnp.asarray(ctrs, jnp.uint32))))
+    assert cb.producer.cache_stats()["misses"] == 2   # no stale hit
+
+
+def test_cached_producer_lru_eviction():
+    p = get_params("hera-128a")
+    prod = CachedProducer(p, max_entries=2)
+    cb = CipherBatch(p, seed=12, producer=prod)
+    cb.add_session()
+    for base in (0, 4, 8):
+        cb.keystream(np.zeros(2, np.int64), np.array([base, base + 1]))
+    stats = prod.cache_stats()
+    assert stats["entries"] == 2 and stats["misses"] == 3
+    # the oldest window (base=0) was evicted: re-requesting it misses
+    cb.keystream(np.zeros(2, np.int64), np.array([0, 1]))
+    assert prod.cache_stats()["misses"] == 4
+
+
+def test_cached_producer_traces_through_coupled_path():
+    """Under jax.jit tracing (keystream_coupled) there is no host identity
+    to key on — the cache must be bypassed, not crash."""
+    import jax
+
+    ci = make_cipher("rubato-128s", seed=2, producer="cached")
+    ctrs = jnp.arange(3, dtype=jnp.uint32)
+    z = np.array(jax.jit(ci.keystream_coupled)(ctrs))
+    np.testing.assert_array_equal(z, np.array(ci.keystream(ctrs)))
+
+
+def test_set_producer_rejects_cross_stream_swap():
+    """Swapping a LIVE pool onto a different XOF stream would make the
+    same (nonce, ctr) pairs yield different keystream — clients' earlier
+    ciphertexts would decrypt to garbage silently.  set_producer (the
+    plan-application path) must refuse; a different stream is a
+    construction-time choice."""
+    cb = CipherBatch("hera-128a", seed=1)
+    cb.add_session()
+    with pytest.raises(ValueError, match="stream"):
+        cb.set_producer("threefry")
+    assert cb.producer.name == "aes"          # pool untouched
+    # construction-time choice remains available
+    assert CipherBatch("hera-128a", producer="threefry").producer.name == \
+        "threefry"
+
+
+def test_cached_instance_shared_across_pools_keys_on_tables():
+    """Cache identity rides on the ProducerTables a produce call uses, not
+    on producer-instance state: one cached instance shared between a pool
+    and a single-stream Cipher under a different nonce must never serve
+    the wrong nonce's constants plane."""
+    p = get_params("rubato-128s")
+    prod = CachedProducer(p)
+    cb = CipherBatch(p, seed=30, producer=prod)
+    cb.add_session()
+    ctrs = np.arange(3)
+    sids = np.zeros(3, np.int64)
+    z_pool = np.array(cb.keystream(sids, ctrs))
+    # same instance, different nonce, same counters — fills the cache
+    from repro.core.cipher import Cipher
+
+    other_nonce = np.arange(16, dtype=np.uint8)
+    ci = Cipher(p, cb.key, other_nonce, producer=prod)
+    z_other = np.array(ci.keystream(jnp.asarray(ctrs, jnp.uint32)))
+    assert not np.array_equal(z_other, z_pool)
+    # the pool's repeat request must hit ITS OWN plane, not the Cipher's
+    np.testing.assert_array_equal(np.array(cb.keystream(sids, ctrs)),
+                                  z_pool)
+    # and vice versa
+    np.testing.assert_array_equal(
+        np.array(ci.keystream(jnp.asarray(ctrs, jnp.uint32))), z_other)
+
+
+def test_set_producer_swaps_in_place_bit_exact():
+    """Applying a tuned plan rebinds the pool's producer; a
+    stream-compatible swap changes no keystream bit and keeps live
+    sessions' counter spaces."""
+    cb = CipherBatch("rubato-128s", seed=13)
+    s = cb.add_session()
+    s.take_window(6)
+    sids, ctrs = np.zeros(4, np.int64), np.arange(4)
+    z_aes = np.array(cb.keystream(sids, ctrs))
+    cb.set_producer("cached")
+    assert cb.producer.name == "cached"
+    assert cb.sessions[0].next_ctr == 6        # cursor survives the swap
+    np.testing.assert_array_equal(np.array(cb.keystream(sids, ctrs)), z_aes)

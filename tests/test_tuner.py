@@ -1,0 +1,183 @@
+"""StreamPlan autotuner: JSON cache round trip, deterministic reload,
+measured selection on the real farm loop, and "auto" resolution
+consulting the persisted plan (ISSUE acceptance).
+"""
+
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CipherBatch, KeystreamFarm, StreamPlan
+from repro.core.engine import resolve_engine
+from repro.core.params import get_params
+from repro.core.producer import resolve_producer
+from repro.core.tuner import (
+    autotune,
+    cache_key,
+    candidate_plans,
+    host_fingerprint,
+    load_plan,
+    measure_plan,
+    save_plan,
+)
+
+TINY = dict(sessions=2, n_windows=2, reps=1)
+
+
+def _tiny_autotune(cache, **kw):
+    args = dict(engines=["jax"], variants=["normal"], windows=[8],
+                depths=[2], producers=["aes"], cache_path=cache, **TINY)
+    args.update(kw)
+    return autotune("rubato-128s", 8, **args)
+
+
+# ---------------------------------------------------------------------------
+# StreamPlan serialization
+# ---------------------------------------------------------------------------
+def test_stream_plan_json_roundtrip_bit_identical():
+    plan = StreamPlan(producer="cached", engine="jax", variant="alternating",
+                      window=128, depth=3)
+    d = plan.to_json()
+    assert StreamPlan.from_json(d) == plan
+    # survives an actual JSON encode/decode, and ignores metadata keys
+    d2 = json.loads(json.dumps(dict(d, p50_ms=1.23, measured_at=0.0)))
+    assert StreamPlan.from_json(d2) == plan
+
+
+def test_candidate_plans_are_stream_preserving():
+    plans = candidate_plans("hera-128a", 16, engines=["jax"])
+    assert plans, "empty candidate grid"
+    producers = {p.producer for p in plans}
+    assert "threefry" not in producers      # would change the keystream
+    assert {"aes", "cached"} <= producers
+    assert {p.depth for p in plans} == {2, 3}
+
+
+# ---------------------------------------------------------------------------
+# Cache persistence + deterministic reload
+# ---------------------------------------------------------------------------
+def test_autotune_persists_and_reloads_deterministically(tmp_path):
+    cache = tmp_path / "plans.json"
+    plan = _tiny_autotune(cache, depths=[2, 3])
+    assert cache.exists()
+    # cache hit: no re-measure, bit-identical result — twice
+    for _ in range(2):
+        again = _tiny_autotune(cache, depths=[2, 3])
+        assert again == plan
+    assert load_plan("rubato-128s", 8, cache) == plan
+    # the persisted entry round-trips through the file bit-identically
+    entry = json.loads(cache.read_text())["plans"][
+        cache_key(get_params("rubato-128s"), 8)]
+    assert StreamPlan.from_json(entry) == plan
+
+
+def test_load_plan_nearest_lanes_fallback(tmp_path):
+    cache = tmp_path / "plans.json"
+    p8 = StreamPlan("aes", "jax", "normal", 8, 2)
+    p64 = StreamPlan("cached", "jax", "normal", 64, 3)
+    save_plan("rubato-128s", 8, p8, 1.0, cache)
+    save_plan("rubato-128s", 64, p64, 1.0, cache)
+    assert load_plan("rubato-128s", 8, cache) == p8           # exact
+    assert load_plan("rubato-128s", 48, cache) == p64         # nearest
+    assert load_plan("rubato-128s", None, cache) == p64       # largest
+    assert load_plan("hera-128a", 8, cache) is None           # other preset
+
+
+def test_load_plan_rejects_invalid_cached_backends(tmp_path):
+    """Plans naming gone/unavailable/stream-incompatible backends are
+    ignored, not trusted."""
+    cache = tmp_path / "plans.json"
+    save_plan("hera-128a", 8,
+              StreamPlan("threefry", "jax", "normal", 8, 2), 1.0, cache)
+    assert load_plan("hera-128a", 8, cache) is None     # wrong stream
+    save_plan("hera-128a", 8,
+              StreamPlan("aes", "vulkan", "normal", 8, 2), 1.0, cache)
+    assert load_plan("hera-128a", 8, cache) is None     # unknown engine
+    save_plan("hera-128a", 8,
+              StreamPlan("aes", "jax", "diagonal", 8, 2), 1.0, cache)
+    assert load_plan("hera-128a", 8, cache) is None     # unknown variant
+
+
+def test_cache_key_is_host_scoped():
+    k = cache_key(get_params("rubato-128l"), 32)
+    assert k.startswith("rubato-128l|lanes=32|noise=60|host=")
+    assert k.endswith(host_fingerprint())
+
+
+# ---------------------------------------------------------------------------
+# Measured selection + "auto" resolution
+# ---------------------------------------------------------------------------
+def test_measure_plan_runs_real_farm_loop():
+    p50 = measure_plan("rubato-128s",
+                       StreamPlan("aes", "jax", "normal", 8, 3), 8, **TINY)
+    assert p50 > 0
+
+
+def test_autotune_winner_comes_from_the_grid(tmp_path):
+    cache = tmp_path / "plans.json"
+    plan = _tiny_autotune(cache, producers=["aes", "cached"], depths=[2, 3])
+    assert plan.producer in ("aes", "cached")
+    assert plan.engine == "jax" and plan.variant == "normal"
+    assert plan.window == 8 and plan.depth in (2, 3)
+
+
+def test_auto_resolution_consults_persisted_plan(tmp_path, monkeypatch):
+    cache = tmp_path / "plans.json"
+    monkeypatch.setenv("REPRO_TUNER_CACHE", str(cache))
+    p = get_params("rubato-128s")
+    # no cache -> static fallbacks
+    assert resolve_engine("auto", params=p) == resolve_engine("auto")
+    assert resolve_producer("auto", p) == p.xof
+    save_plan(p, 8, StreamPlan("cached", "jax", "normal", 8, 2), 1.0)
+    assert resolve_engine("auto", params=p) == "jax"
+    assert resolve_producer("auto", p) == "cached"
+    # pool-level: CipherBatch(producer="auto") binds the tuned producer
+    cb = CipherBatch(p, seed=1, producer="auto")
+    assert cb.producer.name == "cached"
+
+
+def test_farm_applies_stream_plan():
+    """KeystreamFarm(plan=...) applies producer, engine, variant, depth in
+    one shot — and stays bit-exact with the default pipeline."""
+    plan = StreamPlan("cached", "jax", "alternating", 4, 3)
+    cb = CipherBatch("rubato-128s", seed=21)
+    cb.add_sessions(2)
+    farm = KeystreamFarm(cb, plan=plan)
+    assert cb.producer.name == "cached"
+    assert farm.engine.name == "jax" and farm.engine.variant == "alternating"
+    assert farm.depth == 3 and farm.window == 4
+    sids = np.array([0, 1, 0, 1, 1, 0])
+    ctrs = np.array([0, 0, 1, 1, 2, 2])
+    z = np.array(farm.keystream(sids, ctrs))    # windowed by plan.window
+    base = CipherBatch("rubato-128s", seed=21)
+    base.add_sessions(2)
+    ref = KeystreamFarm(base, engine="ref")
+    np.testing.assert_array_equal(z, np.array(ref.keystream(sids, ctrs)))
+
+
+def test_farm_explicit_args_override_plan():
+    plan = StreamPlan("aes", "jax", "alternating", 4, 3)
+    cb = CipherBatch("rubato-128s", seed=22)
+    cb.add_session()
+    farm = KeystreamFarm(cb, engine="ref", variant="normal", depth=2,
+                         plan=plan)
+    assert farm.engine.name == "ref"
+    assert farm.engine.variant == "normal" and farm.depth == 2
+
+
+def test_hhe_server_and_encrypted_source_accept_plan():
+    from repro.serve.hhe_loop import HHERequest, HHEServer
+
+    plan = StreamPlan("cached", "jax", "normal", 4, 3)
+    cb = CipherBatch("rubato-128s", seed=23)
+    srv = HHEServer(cb, plan=plan)
+    assert srv.window == 4 and srv.farm.depth == 3
+    assert cb.producer.name == "cached"
+    s = srv.open_session()
+    srv.submit(HHERequest(session_id=s.index, op="keystream", blocks=6))
+    (resp,) = srv.flush()
+    want = np.array(cb.session_cipher(s.index).keystream(
+        jnp.asarray(resp.block_ctrs, jnp.uint32)))
+    np.testing.assert_array_equal(resp.result, want)
