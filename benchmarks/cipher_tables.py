@@ -104,6 +104,8 @@ def bench_resource_table(name: str):
         lowered = jax.jit(fn).lower(ctrs)
         compiled = lowered.compile()
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+            ca = ca[0] if ca else {}
         ma = compiled.memory_analysis()
         n_ops = compiled.as_text().count(" = ")
         rows.append({

@@ -58,6 +58,11 @@ from repro.core import (
     engine_caps,
     resolve_engine,
 )
+from repro.core.params import REGISTRY
+
+# default bench presets: the paper's benchmarked pair plus the large PASTA
+# set — one preset per cipher kind, every kind in the params registry
+DEFAULT_PRESETS = ("hera-128a", "rubato-128l", "pasta-128l")
 
 
 def _percentiles(ts):
@@ -287,6 +292,10 @@ def main():
                     default="normal",
                     help="schedule-orientation plan the farm consumers "
                          "execute (core/schedule.py; bit-exact either way)")
+    ap.add_argument("--presets", nargs="*", default=None,
+                    choices=sorted(REGISTRY),
+                    help="cipher presets to bench (default: one per "
+                         f"cipher kind: {', '.join(DEFAULT_PRESETS)})")
     ap.add_argument("--quick", action="store_true",
                     help="small sweep for smoke runs")
     ap.add_argument("--smoke", action="store_true",
@@ -316,7 +325,7 @@ def main():
     primary_engine = auto if auto in engines else engines[0]
 
     ok = True
-    for name in ("hera-128a", "rubato-128l"):
+    for name in (args.presets or DEFAULT_PRESETS):
         coupled, farm = run(name, sweep, args.sessions, args.windows,
                             args.reps, engines, variant=args.schedule,
                             producers=producers, depths=depths)

@@ -2,12 +2,12 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. Build HERA / Rubato ciphers, generate stream keys.
+1. Build HERA / Rubato / PASTA ciphers, generate stream keys.
 2. Encrypt real-valued client data, decrypt, verify roundtrip.
 3. Run the fused Pallas accelerator kernel (interpret mode on CPU) and
    check it against the reference.
 4. Server-side RtF transciphering with multiplicative-depth accounting —
-   the property (depth 10 vs 2) that motivates Rubato.
+   the property (depth 10 vs 4 vs 2) that motivates the shallow ciphers.
 5. The multi-stream farm: one key, many client sessions, one batched
    dispatch — bit-exact with each session's own single-stream cipher.
 """
@@ -27,14 +27,13 @@ def main():
     rng = np.random.default_rng(0)
 
     print("=== 1. stream keys =========================================")
-    for name in ("hera-128a", "rubato-128l"):
+    for name in ("hera-128a", "rubato-128l", "pasta-128l"):
         ci = make_cipher(name, seed=42)
         ctrs = jnp.arange(4, dtype=jnp.uint32)
         z = ci.keystream(ctrs)
         print(f"{name}: state n={ci.params.n} rounds={ci.params.rounds} "
               f"q={ci.params.mod.q} keystream block shape={z.shape}")
-        print(f"  round constants/key: {ci.params.n_round_constants} "
-              f"(paper: {'96' if 'hera' in name else '188'})")
+        print(f"  round constants/key: {ci.params.n_round_constants}")
 
     print("\n=== 2. encrypt / decrypt ===================================")
     ci = make_cipher("rubato-128l", seed=42)
@@ -52,14 +51,14 @@ def main():
           f"{np.array_equal(z_kernel, z_ref)}")
 
     print("\n=== 4. RtF transciphering (server side) ====================")
-    for name in ("hera-128a", "rubato-128l"):
+    for name in ("hera-128a", "rubato-128l", "pasta-128l"):
         ci = make_cipher(name, seed=7)
         ctrs = jnp.arange(2, dtype=jnp.uint32)
         m = rng.uniform(-4, 4, (2, ci.params.l)).astype(np.float32)
         ct = ci.encrypt(m, ctrs)
         slots, depth = transcipher(ci, ct, ctrs)
         print(f"{name}: multiplicative depth={depth} "
-              f"(paper's motivation: HERA=10, Rubato=2), "
+              f"(HERA=10, PASTA=r+1, Rubato=2 — why shallow ciphers win), "
               f"slot err={np.abs(np.array(slots)-m).max():.1e}")
 
     print("\n=== 5. multi-stream keystream farm ==========================")

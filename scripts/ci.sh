@@ -1,33 +1,68 @@
 #!/usr/bin/env bash
-# Tier-1 verify entry point (ROADMAP.md): drift smokes first (engine
-# matrix, schedule golden vectors, engine+producer availability, tuner
-# persist/reload, farm-bench canaries), then the fast lap, then the slow
-# interpret-mode Pallas sweeps.  One command:
+# Tier-1 verify entry point (ROADMAP.md), as a STAGED pipeline: every drift
+# guard is a named, individually-runnable stage with its own timing, and a
+# summary table prints at the end (docs/DESIGN.md §12 describes what each
+# stage guards).
 #
-#   scripts/ci.sh          # smoke + fast lap + slow lap (full tier-1)
-#   scripts/ci.sh --fast   # smoke + fast lap (developer inner loop)
+#   scripts/ci.sh                         # every stage (full tier-1)
+#   scripts/ci.sh --fast                  # all but the slow interpret lap
+#   scripts/ci.sh --list                  # enumerate stages
+#   scripts/ci.sh --stage schedule-drift  # one stage in isolation
+#   scripts/ci.sh --stage tuner-smoke --stage bench-smoke   # several
 #
-# The smoke stage fails fast on backend drift: the engine bit-exactness
-# matrix (every registered KeystreamEngine vs the reference, both ciphers,
-# all presets) plus a tiny end-to-end keystream_farm_bench lap that keeps
-# every default engine dispatching through the double-buffered farm.  The
-# fast lap excludes tests marked `slow` (full-lane interpret-mode kernel
-# sweeps, see tests/conftest.py); everything else — including the farm
-# bit-exactness cross-checks — runs there.
+# Preset lists inside the availability guards are DERIVED from
+# core/params.py's REGISTRY — a new cipher preset (e.g. PASTA) is covered
+# automatically, never hand-listed here.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== smoke: engine matrix (both schedule variants) ==="
-python -m pytest -x -q tests/test_engine.py
+# --------------------------------------------------------------------------
+# Stage registry: name|what it guards
+# --------------------------------------------------------------------------
+STAGES=(
+  "engine-matrix|engine x preset x noise x variant bit-exactness (tests/test_engine.py)"
+  "schedule-drift|golden keystream vectors + orientation property (tests/test_schedule.py)"
+  "golden-regen|regen_goldens.py --check: regeneration reproduces checked-in digests"
+  "engine-availability|registered engines stay available, with reasons, on every preset"
+  "producer-availability|registered producers + stream-preserving sets per preset"
+  "tuner-smoke|StreamPlan measure -> persist -> deterministic reload -> auto consult"
+  "workflow-lint|.github/workflows/ci.yml parses (the workflow that runs this script)"
+  "bench-smoke|keystream farm bench canary: both variants + producer/depth sweep"
+  "fast-lap|pytest -m 'not slow' (everything else; engine/schedule suites above)"
+  "slow-lap|pytest -m slow: full-lane interpret-mode Pallas sweeps"
+)
 
-echo "=== schedule drift: golden vectors + orientation property ==="
-python -m pytest -x -q tests/test_schedule.py
+stage_names() { local s; for s in "${STAGES[@]}"; do echo "${s%%|*}"; done; }
 
-echo "=== schedule drift: engine availability must not regress ==="
-python - <<'PYEOF'
+list_stages() {
+  echo "stages (run one with --stage <name>):"
+  local s
+  for s in "${STAGES[@]}"; do
+    printf "  %-22s %s\n" "${s%%|*}" "${s#*|}"
+  done
+}
+
+# --------------------------------------------------------------------------
+# Stage bodies
+# --------------------------------------------------------------------------
+stage_engine_matrix() {
+  python -m pytest -x -q tests/test_engine.py
+}
+
+stage_schedule_drift() {
+  python -m pytest -x -q tests/test_schedule.py
+}
+
+stage_golden_regen() {
+  python scripts/regen_goldens.py --check
+}
+
+stage_engine_availability() {
+  python - <<'PYEOF'
 from repro.core.engine import engine_caps
+from repro.core.params import REGISTRY
 caps = engine_caps()
 must = {"ref", "jax", "pallas-interpret"}          # portable on every host
 missing = sorted(n for n in must if not caps[n].available)
@@ -35,13 +70,22 @@ assert not missing, f"engine availability regressed: {missing}"
 for name, c in caps.items():
     assert c.available or c.reason, f"{name} unavailable without a reason"
     assert set(c.schedule_variants) >= {"normal", "alternating"}, name
+# every registered preset (derived, never hand-listed) binds every portable
+# engine — a new cipher that breaks an engine fails here, not in serving
+from repro.core import make_cipher, make_engine
+for preset in sorted(REGISTRY):
+    ci = make_cipher(preset, seed=0)
+    for eng in sorted(must):
+        make_engine(eng, ci.params, ci.key, variant="auto")
 print("engine x variant availability ok:",
-      {n: c.available for n, c in caps.items()})
+      {n: c.available for n, c in caps.items()},
+      "on presets", sorted(REGISTRY))
 PYEOF
+}
 
-echo "=== producer drift: producer availability must not regress ==="
-python - <<'PYEOF'
-from repro.core.params import get_params
+stage_producer_availability() {
+  python - <<'PYEOF'
+from repro.core.params import REGISTRY, get_params
 from repro.core.producer import (compatible_producers, producer_caps,
                                  registered_producers)
 caps = producer_caps()
@@ -50,17 +94,22 @@ missing = sorted(n for n in must if n not in caps or not caps[n].available)
 assert not missing, f"producer availability regressed: {missing}"
 for name, c in caps.items():
     assert c.available or c.reason, f"{name} unavailable without a reason"
-# every preset keeps >= 2 stream-preserving (interchangeable) producers
-for preset in ("hera-128a", "rubato-128l"):
+# every preset keeps >= 2 stream-preserving (interchangeable) producers —
+# the preset list is DERIVED from core/params.py (new ciphers auto-covered)
+for preset in sorted(REGISTRY):
     comp = compatible_producers(get_params(preset))
     assert len(comp) >= 2, f"{preset}: stream-preserving set shrank: {comp}"
-print("producer availability ok:", sorted(registered_producers()))
+print("producer availability ok:", sorted(registered_producers()),
+      "on presets", sorted(REGISTRY))
 PYEOF
+}
 
-echo "=== tuner smoke: measured StreamPlan persists + reloads deterministically ==="
-TUNER_CACHE="$(mktemp -d)/streamplans.json"
-REPRO_TUNER_CACHE="$TUNER_CACHE" python - <<'PYEOF'
-from repro.core.tuner import StreamPlan, autotune, default_cache_path, load_plan
+stage_tuner_smoke() {
+  local tuner_cache
+  tuner_cache="$(mktemp -d)/streamplans.json"
+  REPRO_TUNER_CACHE="$tuner_cache" python - <<'PYEOF'
+from repro.core.tuner import (PLAN_SCHEMA, StreamPlan, autotune,
+                              default_cache_path, load_plan)
 
 # tiny measured lap: producers x depths on the jax engine, 8-lane windows
 plan = autotune("rubato-128s", 8, sessions=2, n_windows=2, reps=1,
@@ -80,24 +129,132 @@ assert loaded == plan, (loaded, plan)
 from repro.core.engine import resolve_engine
 from repro.core.params import get_params
 assert resolve_engine("auto", params=get_params("rubato-128s")) == plan.engine
+# stale-schema entries are invalidated, not trusted
+import json
+path = default_cache_path()
+data = json.loads(path.read_text())
+for entry in data["plans"].values():
+    entry["schema"] = PLAN_SCHEMA - 1
+path.write_text(json.dumps(data))
+assert load_plan("rubato-128s", 8) is None, "stale schema plan was trusted"
 print("tuner smoke ok:", plan.describe())
 PYEOF
-rm -rf "$(dirname "$TUNER_CACHE")"
+  rm -rf "$(dirname "$tuner_cache")"
+}
 
-echo "=== smoke: keystream farm bench (tiny, no gating; both variants) ==="
-python benchmarks/keystream_farm_bench.py --smoke --schedule normal
-python benchmarks/keystream_farm_bench.py --smoke --schedule alternating
-echo "=== smoke: farm bench producer/depth sweep (cached producer, depth 3) ==="
-python benchmarks/keystream_farm_bench.py --smoke --producer aes cached --depth 2 3
+stage_workflow_lint() {
+  python - <<'PYEOF'
+import pathlib, sys
+path = pathlib.Path(".github/workflows/ci.yml")
+assert path.exists(), f"{path} missing"
+text = path.read_text()
+try:
+    import yaml
+    doc = yaml.safe_load(text)
+    assert isinstance(doc, dict) and "jobs" in doc, "workflow has no jobs"
+    # 'on:' parses to the boolean True key in YAML 1.1
+    trig = doc.get("on", doc.get(True))
+    assert trig, "workflow has no triggers"
+    jobs = doc["jobs"]
+    assert any("ci.sh" in str(j) for j in jobs.values()), \
+        "no job invokes scripts/ci.sh"
+    print(f"workflow ok: jobs={sorted(jobs)} triggers={sorted(trig)}")
+except ImportError:   # offline image without pyyaml: structural fallback
+    for needle in ("jobs:", "runs-on:", "scripts/ci.sh"):
+        assert needle in text, f"workflow missing {needle!r}"
+    print("workflow ok (structural check; pyyaml unavailable)")
+PYEOF
+}
 
-echo "=== fast lap (-m 'not slow'; engine/schedule suites already ran) ==="
-python -m pytest -x -q -m "not slow" --ignore=tests/test_engine.py \
-  --ignore=tests/test_schedule.py
+stage_bench_smoke() {
+  echo "--- farm bench smoke: schedule variants (all cipher kinds) ---"
+  python benchmarks/keystream_farm_bench.py --smoke --schedule normal
+  python benchmarks/keystream_farm_bench.py --smoke --schedule alternating
+  echo "--- farm bench smoke: producer/depth sweep (cached producer, depth 3) ---"
+  python benchmarks/keystream_farm_bench.py --smoke --producer aes cached --depth 2 3
+}
 
-if [[ "${1:-}" == "--fast" ]]; then
-  echo "=== fast mode (--fast); skipping slow lap ==="
-  exit 0
+stage_fast_lap() {
+  # engine/schedule suites have their own stages; everything else not slow
+  python -m pytest -x -q -m "not slow" --ignore=tests/test_engine.py \
+    --ignore=tests/test_schedule.py
+}
+
+stage_slow_lap() {
+  python -m pytest -x -q -m slow
+}
+
+run_stage() {
+  # dispatch derived from the name: stage foo-bar runs stage_foo_bar(), so
+  # the STAGES registry is the single place a stage is declared
+  local fn="stage_${1//-/_}"
+  if ! declare -F "$fn" >/dev/null; then
+    echo "stage $1 declared in STAGES but $fn() is missing" >&2
+    return 2
+  fi
+  "$fn"
+}
+
+# --------------------------------------------------------------------------
+# Driver: stage selection, per-stage timing, exit summary table
+# --------------------------------------------------------------------------
+SELECTED=()
+FAST=0
+while [[ $# -gt 0 ]]; do
+  case "$1" in
+    --list) list_stages; exit 0 ;;
+    --fast) FAST=1; shift ;;
+    --stage)
+      [[ $# -ge 2 ]] || { echo "--stage needs a name (--list)" >&2; exit 2; }
+      SELECTED+=("$2"); shift 2 ;;
+    *) echo "unknown argument: $1 (--list | --fast | --stage <name>)" >&2
+       exit 2 ;;
+  esac
+done
+
+if [[ ${#SELECTED[@]} -eq 0 ]]; then
+  while IFS= read -r name; do
+    [[ $FAST -eq 1 && "$name" == "slow-lap" ]] && continue
+    SELECTED+=("$name")
+  done < <(stage_names)
 fi
+# validate names before running anything
+for name in "${SELECTED[@]}"; do
+  stage_names | grep -qx "$name" || {
+    echo "unknown stage: $name" >&2; list_stages >&2; exit 2; }
+done
 
-echo "=== slow lap (-m slow) ==="
-python -m pytest -x -q -m slow
+declare -a RESULT_NAMES RESULT_STATUS RESULT_SECS
+FAILED=0
+for name in "${SELECTED[@]}"; do
+  echo
+  echo "=== stage: $name ==="
+  t0=$SECONDS
+  set +e
+  ( set -e; run_stage "$name" )
+  rc=$?
+  set -e
+  dt=$(( SECONDS - t0 ))
+  RESULT_NAMES+=("$name"); RESULT_SECS+=("$dt")
+  if [[ $rc -eq 0 ]]; then
+    RESULT_STATUS+=("PASS")
+  else
+    RESULT_STATUS+=("FAIL")
+    FAILED=1
+    echo "!!! stage $name FAILED (rc=$rc) — continuing to summarize" >&2
+  fi
+done
+
+echo
+echo "=== ci.sh summary ==="
+printf "%-22s %-6s %8s\n" "stage" "status" "seconds"
+printf "%-22s %-6s %8s\n" "----------------------" "------" "-------"
+for i in "${!RESULT_NAMES[@]}"; do
+  printf "%-22s %-6s %8s\n" \
+    "${RESULT_NAMES[$i]}" "${RESULT_STATUS[$i]}" "${RESULT_SECS[$i]}"
+done
+if [[ $FAILED -ne 0 ]]; then
+  echo "overall: FAIL"
+  exit 1
+fi
+echo "overall: PASS"

@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Regenerate the checked-in golden keystream digests in tests/test_schedule.py.
+
+The golden vectors pin the cipher definitions themselves (every preset in
+`repro.core.params.REGISTRY` × noise on/off, SHA-256 of the little-endian
+uint32 keystream bytes for make_cipher(name, seed=123) over block counters
+0..3).  This script is the ONE legitimate way to touch them:
+
+    PYTHONPATH=src python scripts/regen_goldens.py            # print table
+    PYTHONPATH=src python scripts/regen_goldens.py --check    # CI gate
+    PYTHONPATH=src python scripts/regen_goldens.py --write    # rewrite block
+
+``--check`` exits non-zero if regeneration would change ANY digest (or a
+preset is missing an entry) — the ci.sh ``golden-regen`` stage, so a
+schedule/executor/params drift that would silently re-pin the ciphers
+fails CI instead.  ``--write`` rewrites the marked GOLDEN block in
+tests/test_schedule.py in place; only do that when a cipher definition
+deliberately changes (e.g. a new preset lands), never to "fix" a refactor.
+
+Digest recipe is deliberately identical to tests/test_schedule.py's
+`test_golden_keystream_digest`: the reference executor (`keystream_ref`,
+normal variant) is the oracle, and the alternating-variant / kernel /
+engine matrices all chain to it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import pathlib
+import re
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+TEST_FILE = pathlib.Path(__file__).parent.parent / "tests" / "test_schedule.py"
+BEGIN = "# --- GOLDEN-BEGIN (scripts/regen_goldens.py) ---"
+END = "# --- GOLDEN-END ---"
+SEED, LANES = 123, 4   # must match tests/test_schedule.py
+
+
+def compute_goldens() -> dict:
+    """(preset, "plain"|"noise") -> sha256 hex digest, for every preset."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import make_cipher
+    from repro.core.params import REGISTRY
+    from repro.kernels.keystream.ref import keystream_ref
+
+    out = {}
+    for name, p in REGISTRY.items():
+        ci = make_cipher(name, seed=SEED)
+        consts = ci.round_constant_stream(jnp.arange(LANES, dtype=jnp.uint32))
+        modes = [("plain", None)]
+        if p.n_noise:
+            modes.append(("noise", consts["noise"]))
+        for mode, noise in modes:
+            z = keystream_ref(p, ci.key, consts["rc"], noise)
+            out[(name, mode)] = hashlib.sha256(
+                np.array(z).astype("<u4").tobytes()).hexdigest()
+    return out
+
+
+def render_block(goldens: dict) -> str:
+    """The GOLDEN block body, byte-exact with what the test file carries."""
+    lines = [BEGIN, "GOLDEN = {"]
+    for (name, mode), digest in goldens.items():   # REGISTRY order
+        lines.append(f'    ("{name}", "{mode}"): "{digest}",')
+    lines += ["}", END]
+    return "\n".join(lines)
+
+
+def current_block(text: str) -> str:
+    m = re.search(re.escape(BEGIN) + r".*?" + re.escape(END), text, re.S)
+    if not m:
+        raise SystemExit(
+            f"no GOLDEN markers in {TEST_FILE} — expected a block between "
+            f"{BEGIN!r} and {END!r}")
+    return m.group(0)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--check", action="store_true",
+                      help="fail (exit 1) if regeneration would change any "
+                           "checked-in digest")
+    mode.add_argument("--write", action="store_true",
+                      help="rewrite the GOLDEN block in place")
+    args = ap.parse_args(argv)
+
+    goldens = compute_goldens()
+    fresh = render_block(goldens)
+    text = TEST_FILE.read_text()
+    checked_in = current_block(text)
+
+    if checked_in == fresh:
+        print(f"golden digests reproduce byte-for-byte "
+              f"({len(goldens)} entries, {TEST_FILE.name} unchanged)")
+        return 0
+
+    if args.write:
+        TEST_FILE.write_text(text.replace(checked_in, fresh))
+        print(f"rewrote GOLDEN block in {TEST_FILE} ({len(goldens)} entries)")
+        return 0
+
+    print("golden digest drift — regeneration would CHANGE the checked-in "
+          "block:\n")
+    print("--- checked in ---")
+    print(checked_in)
+    print("--- regenerated ---")
+    print(fresh)
+    if args.check:
+        print("\nFAIL: the cipher definitions no longer reproduce the "
+              "checked-in goldens.  If the change is deliberate, run "
+              "scripts/regen_goldens.py --write and say so in the commit.")
+        return 1
+    print("\n(run with --write to accept, --check to gate)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,6 +1,7 @@
 """Presto core: the paper's contribution — CKKS-targeting HHE stream ciphers
-(HERA, Rubato) as composable JAX modules, with the decoupled-RNG producer/
-consumer split and the RtF transciphering scaffold.
+(HERA, Rubato, and the PASTA family beyond the paper's pair) as composable
+JAX modules, with the decoupled-RNG producer/consumer split and the RtF
+transciphering scaffold.
 """
 
 from repro.core.params import (
@@ -9,6 +10,8 @@ from repro.core.params import (
     RUBATO_128S,
     RUBATO_128M,
     RUBATO_128L,
+    PASTA_128S,
+    PASTA_128L,
     get_params,
 )
 from repro.core.cipher import Cipher, CipherBatch, StreamSession, make_cipher
@@ -37,6 +40,7 @@ from repro.core.producer import (
 )
 from repro.core.tuner import StreamPlan, autotune, load_plan
 from repro.core.hera import hera_stream_key
+from repro.core.pasta import pasta_stream_key
 from repro.core.rubato import rubato_stream_key
 from repro.core.schedule import (
     Schedule,
@@ -51,6 +55,8 @@ __all__ = [
     "RUBATO_128S",
     "RUBATO_128M",
     "RUBATO_128L",
+    "PASTA_128S",
+    "PASTA_128L",
     "get_params",
     "Cipher",
     "CipherBatch",
@@ -80,6 +86,7 @@ __all__ = [
     "execute_schedule",
     "make_cipher",
     "hera_stream_key",
+    "pasta_stream_key",
     "rubato_stream_key",
     "transcipher",
     "evaluate_decryption_circuit",

@@ -34,7 +34,8 @@ a default ``ref`` engine per Cipher/CipherBatch.  docs/DESIGN.md §7
 documents the layer.
 
 All engines are bit-exact with ``ref`` by contract (tests/test_engine.py
-asserts the full engine × cipher-preset × noise matrix).
+asserts the full engine × cipher-preset × noise × variant matrix, across
+all three cipher kinds — hera / rubato / pasta).
 """
 
 from __future__ import annotations

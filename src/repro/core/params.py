@@ -1,9 +1,14 @@
-"""Cipher parameter sets for HERA and Rubato.
+"""Cipher parameter sets for HERA, Rubato, and PASTA.
 
 Paper-benchmarked sets: HERA Par-128a (n=16, r=5, ~28-bit q, 96 round
 constants) and Rubato Par-128L (n=64, r=2, ~25-bit q, 188 = 64+64+60 round
-constants, truncation to l=60, AGN noise).  Moduli are Solinas primes of the
-matching bit width (the paper does not list exact production moduli); the
+constants, truncation to l=60, AGN noise).  The PASTA family (Dobraunig et
+al., the canonical third CKKS-targeting HHE stream cipher) rides the same
+schedule IR: a two-branch state of 2t elements initialized from the key,
+per-branch affine layers with additive per-block constants, branch mixing,
+Feistel intermediate rounds and a cube final round, truncation to t — see
+docs/DESIGN.md §11 for the stand-ins.  Moduli are Solinas primes of the
+matching bit width (the papers do not list exact production moduli); the
 mixing matrix for v != 4 is our documented circulant stand-in (docs/DESIGN.md §8).
 """
 
@@ -14,14 +19,14 @@ import math
 
 import numpy as np
 
-from repro.crypto.modmath import Modulus, Q_HERA, Q_RUBATO
+from repro.crypto.modmath import Modulus, Q_HERA, Q_PASTA, Q_RUBATO
 
 
 @dataclasses.dataclass(frozen=True)
 class CipherParams:
     name: str
-    kind: str          # "hera" | "rubato"
-    n: int             # state size (must be a perfect square)
+    kind: str          # "hera" | "rubato" | "pasta"
+    n: int             # state size (branches * a perfect square)
     l: int             # keystream length after truncation (hera: l == n)
     rounds: int        # r
     mod: Modulus
@@ -29,22 +34,37 @@ class CipherParams:
     xof: str = "aes"   # "aes" | "threefry"
 
     def __post_init__(self):
-        v = math.isqrt(self.n)
-        if v * v != self.n:
-            raise ValueError(f"state size n={self.n} must be a perfect square")
+        if self.kind not in ("hera", "rubato", "pasta"):
+            raise ValueError(f"unknown cipher kind {self.kind!r}")
+        t = self.n // self.branches
+        v = math.isqrt(t)
+        if t * self.branches != self.n or v * v != t:
+            raise ValueError(
+                f"state size n={self.n} must be {self.branches} branch(es) "
+                "of a perfect square"
+            )
         if not (0 < self.l <= self.n):
             raise ValueError("invalid truncation length")
-        if self.kind not in ("hera", "rubato"):
-            raise ValueError(f"unknown cipher kind {self.kind!r}")
         if self.kind == "hera" and self.l != self.n:
             raise ValueError("HERA does not truncate")
+        if self.kind == "pasta":
+            if self.l != t:
+                raise ValueError("PASTA truncates to one branch (l == n/2)")
+            if self.sigma != 0.0:
+                raise ValueError("PASTA has no AGN stage")
         # matvec accumulation bound (docs/DESIGN.md §2): v partial sums of < q
         if self.v * 3 * self.mod.q >= 2**33:
             raise ValueError("v*q too large for shift-add accumulation")
 
     @property
+    def branches(self) -> int:
+        """State branches: PASTA's two-word state; 1 for HERA/Rubato."""
+        return 2 if self.kind == "pasta" else 1
+
+    @property
     def v(self) -> int:
-        return math.isqrt(self.n)
+        """Per-branch matrix dimension: each branch is a (v, v) state."""
+        return math.isqrt(self.n // self.branches)
 
     def schedule(self, variant: str = "normal"):
         """The declarative round program for this parameter set (cached).
@@ -59,8 +79,10 @@ class CipherParams:
 
     @property
     def n_arks(self) -> int:
-        """ARK executions per stream key: initial + (r-1) RFs + final —
-        counted off the schedule program, not a duplicated formula."""
+        """ARK executions per stream key (HERA/Rubato: initial + (r-1) RFs
+        + final; PASTA: none — its key is the initial state and constants
+        enter additively through the affine layers) — counted off the
+        schedule program, not a duplicated formula."""
         return self.schedule().n_arks
 
     @property
@@ -118,8 +140,21 @@ RUBATO_128L = CipherParams(
     sigma=1.6,
 )
 
+# PASTA family: two t-element branches (n = 2t, t = v^2 for the per-branch
+# matrix datapath), keystream = one branch.  The S/L split mirrors the
+# PASTA paper's Pasta-4 (smaller state, more rounds) / Pasta-3 (bigger
+# state, fewer rounds) trade; t is a perfect square here so each branch
+# rides the (v, v) shift-add matrix machinery (docs/DESIGN.md §11).
+PASTA_128S = CipherParams(
+    name="pasta-128s", kind="pasta", n=32, l=16, rounds=4, mod=Q_PASTA
+)
+PASTA_128L = CipherParams(
+    name="pasta-128l", kind="pasta", n=128, l=64, rounds=3, mod=Q_PASTA
+)
+
 REGISTRY = {
-    p.name: p for p in (HERA_128A, RUBATO_128S, RUBATO_128M, RUBATO_128L)
+    p.name: p for p in (HERA_128A, RUBATO_128S, RUBATO_128M, RUBATO_128L,
+                        PASTA_128S, PASTA_128L)
 }
 
 

@@ -1,12 +1,15 @@
-"""Shared round-function components for HERA and Rubato (pure JAX).
+"""Shared round-function components for HERA, Rubato, and PASTA (pure JAX).
 
 These are the *primitives*; the round structure that composes them lives
 as data in `core/schedule.py` (`build_schedule`), and the pure-JAX
-interpreter `execute_schedule` — which `core/hera.py` / `core/rubato.py`
-wrap — applies them in program order.
+interpreter `execute_schedule` — which `core/hera.py` / `core/rubato.py` /
+`core/pasta.py` wrap — applies them in program order.
 
 State convention: a keystream block's state is a (..., n) uint32 vector in
-Z_q, viewed row-major as a (..., v, v) matrix per Eq. (1) of the paper.
+Z_q, viewed row-major as ``branches`` (..., v, v) matrices per Eq. (1) of
+the paper (HERA/Rubato: one branch; PASTA: two t-element branches, each a
+(v, v) matrix with t = v²).  Matrix and Feistel primitives act per branch;
+`branch_mix` is PASTA's cross-branch coupling.
 
 The MRMC module fuses MixColumns followed by MixRows:
 
@@ -47,11 +50,15 @@ def ark(params: CipherParams, x, key, rc):
     return mod.add(x, mod.mul(key, rc))
 
 
+def _branch_view(params: CipherParams, x):
+    """(..., n) state -> (..., branches, v, v) row-major branch matrices."""
+    return x.reshape(x.shape[:-1] + (params.branches, params.v, params.v))
+
+
 def mix_columns(params: CipherParams, x):
-    """Y = M_v X  (matrix multiply on columns), state (..., n) row-major."""
+    """Y = M_v X per branch (matrix multiply on columns), state (..., n)."""
     mod = params.mod
-    v = params.v
-    X = x.reshape(x.shape[:-1] + (v, v))
+    X = _branch_view(params, x)
     # columns of X are X[..., :, c]; M @ X contracts the row index (axis -2)
     Y = mod.matvec_small(params.mix_matrix(), X, axis=-2)
     return Y.reshape(x.shape)
@@ -60,36 +67,34 @@ def mix_columns(params: CipherParams, x):
 def mix_rows(params: CipherParams, x):
     """Y^T[..] rows: each row of X multiplied by M_v  => Y = X M_v^T."""
     mod = params.mod
-    v = params.v
-    X = x.reshape(x.shape[:-1] + (v, v))
+    X = _branch_view(params, x)
     Y = mod.matvec_small(params.mix_matrix(), X, axis=-1)
     return Y.reshape(x.shape)
 
 
 def mrmc(params: CipherParams, x):
-    """Fused MixRows∘MixColumns = M_v X M_v^T, no transpose materialized."""
+    """Fused MixRows∘MixColumns = M_v X M_v^T per branch, no transpose
+    materialized."""
     mod = params.mod
-    v = params.v
     M = params.mix_matrix()
-    X = x.reshape(x.shape[:-1] + (v, v))
+    X = _branch_view(params, x)
     Y = mod.matvec_small(M, X, axis=-2)   # M X
     Z = mod.matvec_small(M, Y, axis=-1)   # (M X) M^T
     return Z.reshape(x.shape)
 
 
 def mrmc_transposed(params: CipherParams, x_t):
-    """MRMC applied to a transposed (column-major) state.
+    """MRMC applied to a transposed (column-major) state, per branch.
 
     By Eq. 2, MRMC(X^T) = (MRMC(X))^T, so this equals plain :func:`mrmc`
     on the stored array — the identity that licenses the alternating-
     orientation schedule variant's transposed-state rounds
     (core/schedule.py); tests/test_schedule.py asserts it directly.
     """
-    v = params.v
-    X = x_t.reshape(x_t.shape[:-1] + (v, v))
+    X = _branch_view(params, x_t)
     Xt = jnp.swapaxes(X, -1, -2)
     out = mrmc(params, Xt.reshape(x_t.shape))
-    O = out.reshape(x_t.shape[:-1] + (v, v))
+    O = _branch_view(params, out)
     return jnp.swapaxes(O, -1, -2).reshape(x_t.shape)
 
 
@@ -99,16 +104,35 @@ def cube(params: CipherParams, x):
 
 
 def feistel(params: CipherParams, x):
-    """Rubato nonlinearity (type-3 Feistel, parallel form):
+    """Rubato/PASTA nonlinearity (type-3 Feistel, parallel form):
 
         y_1 = x_1;  y_i = x_i + x_{i-1}^2   (original x values — not chained)
+
+    Applied independently per branch (PASTA's chain restarts at the branch
+    boundary; with one branch this is the plain Rubato layer).
     """
     mod = params.mod
-    sq = mod.square(x[..., :-1])
+    b = params.branches
+    X = x.reshape(x.shape[:-1] + (b, x.shape[-1] // b))
+    sq = mod.square(X[..., :-1])
     shifted = jnp.concatenate(
-        [jnp.zeros_like(x[..., :1]), sq], axis=-1
+        [jnp.zeros_like(X[..., :1]), sq], axis=-1
     )
-    return mod.add(x, shifted)
+    return mod.add(X, shifted).reshape(x.shape)
+
+
+def branch_mix(params: CipherParams, x):
+    """PASTA branch mixing: (y_L, y_R) <- (2·y_L + y_R, y_L + 2·y_R) mod q.
+
+    Linear and elementwise across the two branches, so it is orientation-
+    agnostic (the same flat-index lanes combine in either storage order).
+    Computed as s = y_L + y_R; (s + y_L, s + y_R) — two adds per output.
+    """
+    mod = params.mod
+    t = x.shape[-1] // 2
+    L, R_ = x[..., :t], x[..., t:]
+    s = mod.add(L, R_)
+    return jnp.concatenate([mod.add(s, L), mod.add(s, R_)], axis=-1)
 
 
 def agn(params: CipherParams, x, noise_signed):

@@ -18,17 +18,25 @@ relayout.  This module is that schedule as data:
     commutes with transposition (Eq. 2), an orientation flip costs nothing
     in the unrolled kernel (it is a static relabeling of which sublanes get
     combined), and downstream ARK/Feistel consume the state in whatever
-    orientation it was left in;
+    orientation it was left in.  PASTA (the third CKKS-targeting HHE
+    cipher) is a second program family off the same op set: the key IS the
+    initial state (``Schedule.init == "key"``), its per-block-random affine
+    layer is the `MRMC` op generalized with an **additive** per-branch
+    round-constant slice and a cross-branch mix, the state is two branches
+    (``Schedule.branches == 2``), intermediate rounds use the Feistel
+    nonlinearity and the final round the cube, then truncation to one
+    branch — proving the IR generalizes beyond the paper's cipher pair;
   * :func:`execute_schedule` — the pure-JAX interpreter.  `core/hera.py`,
-    `core/rubato.py`, and `kernels/keystream/ref.py` are thin wrappers over
-    it; `kernels/keystream/keystream.py` interprets the same program as a
-    fused Pallas kernel; `core/transcipher.py` interprets it with
-    FV-style multiplicative-depth tracking.
+    `core/rubato.py`, `core/pasta.py`, and `kernels/keystream/ref.py` are
+    thin wrappers over it; `kernels/keystream/keystream.py` interprets the
+    same program as a fused Pallas kernel; `core/transcipher.py` interprets
+    it with FV-style multiplicative-depth tracking.
 
 Round-constant accounting (``n_arks``, ``n_round_constants``) is derived
 from the program — `core/params.py` delegates to it — so the paper's
 FIFO-depth numbers (96 for HERA Par-128a, 188 = 64+64+60 for Rubato
-Par-128L) are a property of the schedule, not a duplicated formula.
+Par-128L, (r+1)·2t for PASTA's affine layers) are a property of the
+schedule, not a duplicated formula.
 """
 
 from __future__ import annotations
@@ -68,6 +76,19 @@ def transpose_perm(v: int) -> np.ndarray:
     return np.arange(v * v).reshape(v, v).T.reshape(-1)
 
 
+def state_transpose_perm(v: int, branches: int = 1) -> np.ndarray:
+    """Transposition permutation for the FULL flat state.
+
+    Each branch's (v, v) view transposes independently — branches never
+    interleave — so the permutation is :func:`transpose_perm` blocked per
+    branch.  With one branch this is plain ``transpose_perm(v)``.  Still an
+    involution.
+    """
+    tp = transpose_perm(v)
+    t = v * v
+    return np.concatenate([tp + b * t for b in range(branches)])
+
+
 # ==========================================================================
 # Ops
 # ==========================================================================
@@ -95,21 +116,36 @@ class ARK(Op):
 
 @dataclasses.dataclass(frozen=True)
 class MRMC(Op):
-    """Fused MixRows∘MixColumns M_v·X·M_vᵀ.
+    """Fused MixRows∘MixColumns M_v·X·M_vᵀ, applied per branch.
 
     ``out_orientation`` may differ from ``orientation``: by Eq. 2
     (MRMC(Xᵀ) = MRMC(X)ᵀ) the stored-state computation is *identical* in
     both orientations, and a flip is a free relabeling of the output
     stacking — this is what lets the alternating variant hand each round
     the state in the orientation the previous round left it.
+
+    The PASTA generalization: ``rc_slice`` (non-empty) turns the op into
+    the cipher's affine layer — the matrix output gets per-branch round
+    constants **added** (consumed in ``out_orientation``, unlike ARK's
+    key-multiplied constants consumed in ``orientation``), and
+    ``mix_branches`` then applies the (2·y_L + y_R, y_L + 2·y_R) branch
+    coupling.  HERA/Rubato programs leave both at their defaults.
     """
 
     out_orientation: str = NORMAL
+    rc_slice: Tuple[int, int] = (0, 0)
+    mix_branches: bool = False
+
+    @property
+    def has_rc(self) -> bool:
+        return self.rc_slice[1] > self.rc_slice[0]
 
 
 @dataclasses.dataclass(frozen=True)
 class NONLINEAR(Op):
-    """Elementwise cipher nonlinearity: HERA ``cube`` or Rubato ``feistel``.
+    """Elementwise cipher nonlinearity: ``cube`` (HERA, PASTA's final
+    round) or ``feistel`` (Rubato, PASTA's intermediate rounds) — applied
+    per branch (PASTA's Feistel chain restarts at the branch boundary).
 
     Cube is orientation-agnostic; Feistel couples flat-index neighbors, so
     in transposed orientation the neighbor pattern becomes a static
@@ -143,12 +179,14 @@ class Schedule:
     """One cipher program: ops plus the static facts executors need."""
 
     name: str          # e.g. "hera-128a/alternating"
-    kind: str          # "hera" | "rubato"
+    kind: str          # "hera" | "rubato" | "pasta"
     variant: str       # "normal" | "alternating"
     n: int
     l: int
     v: int
     ops: Tuple[Op, ...]
+    branches: int = 1  # PASTA: 2 independent (v, v) branch matrices
+    init: str = "ic"   # initial state: "ic" (public constant) | "key"
 
     # ---- derived accounting (the single source of truth) -----------------
     @property
@@ -157,7 +195,8 @@ class Schedule:
 
     @property
     def n_round_constants(self) -> int:
-        return max(op.rc_slice[1] for op in self.ops if isinstance(op, ARK))
+        return max(op.rc_slice[1] for op in self.ops
+                   if isinstance(op, (ARK, MRMC)) and op.rc_slice[1])
 
     @property
     def n_mrmc(self) -> int:
@@ -172,20 +211,28 @@ class Schedule:
         """Logical→storage constant reorder for lane-major kernels.
 
         Returns a permutation p with ``rc_storage = rc_logical[p]`` such
-        that every ARK reads a *contiguous* slice already matching its
-        orientation — the RNG FIFO delivers constants in exactly the order
-        the datapath consumes them, so a transposed-orientation ARK costs
-        no in-kernel gather.  None when the program is all-normal.
+        that every constant-consuming op reads a *contiguous* slice already
+        matching its orientation — the RNG FIFO delivers constants in
+        exactly the order the datapath consumes them, so a transposed-
+        orientation ARK (or PASTA affine layer) costs no in-kernel gather.
+        ARK constants are consumed in the op's input orientation; an
+        affine MRMC adds its constants AFTER the matrix, i.e. in
+        ``out_orientation``.  None when no reorder is needed.
         """
-        if not self.has_transposed_ops:
-            return None
         perm = np.arange(self.n_round_constants)
-        tp = transpose_perm(self.v)
+        tp = state_transpose_perm(self.v, self.branches)
+        changed = False
         for op in self.ops:
             if isinstance(op, ARK) and op.orientation == TRANSPOSED:
                 a, b = op.rc_slice
                 perm[a:b] = a + tp[: b - a]
-        return perm
+                changed = True
+            elif (isinstance(op, MRMC) and op.has_rc
+                  and op.out_orientation == TRANSPOSED):
+                a, b = op.rc_slice
+                perm[a:b] = a + tp[: b - a]
+                changed = True
+        return perm if changed else None
 
     # ---- validation ------------------------------------------------------
     def validate(self) -> "Schedule":
@@ -209,6 +256,20 @@ class Schedule:
                     )
                 next_rc = b
             elif isinstance(op, MRMC):
+                if op.has_rc:
+                    a, b = op.rc_slice
+                    if a != next_rc or b - a != width:
+                        raise ValueError(
+                            f"{self.name}: affine MRMC {i} rc_slice "
+                            f"{op.rc_slice} inconsistent (state width "
+                            f"{width}, next constant {next_rc})"
+                        )
+                    next_rc = b
+                if op.mix_branches and self.branches != 2:
+                    raise ValueError(
+                        f"{self.name}: MRMC {i} mixes branches but the "
+                        f"schedule has {self.branches}"
+                    )
                 cur = op.out_orientation
             elif isinstance(op, TRUNCATE):
                 if cur != NORMAL:
@@ -222,12 +283,17 @@ class Schedule:
             raise ValueError(f"{self.name}: program must end normal")
         if next_rc != self.n_round_constants:
             raise ValueError(f"{self.name}: round constants not contiguous")
+        if self.init not in ("ic", "key"):
+            raise ValueError(f"{self.name}: unknown init {self.init!r}")
         return self
 
     def describe(self) -> str:
-        """Human-readable program listing (docs/DESIGN.md §9 format)."""
-        rows = [f"schedule {self.name}  (n={self.n}, l={self.l}, "
-                f"{self.n_arks} ARKs, {self.n_round_constants} constants)"]
+        """Human-readable program listing (docs/DESIGN.md §9/§11 format)."""
+        head = (f"schedule {self.name}  (n={self.n}, l={self.l}, "
+                f"{self.n_arks} ARKs, {self.n_round_constants} constants")
+        if self.branches > 1:
+            head += f", {self.branches} branches, init={self.init}"
+        rows = [head + ")"]
         for i, op in enumerate(self.ops):
             o = "T" if op.orientation == TRANSPOSED else "N"
             if isinstance(op, ARK):
@@ -236,7 +302,12 @@ class Schedule:
                             f"key[:{op.key_len}]")
             elif isinstance(op, MRMC):
                 oo = "T" if op.out_orientation == TRANSPOSED else "N"
-                rows.append(f"  {i:2d}  MRMC[{o}->{oo}]")
+                extra = ""
+                if op.has_rc:
+                    extra += f"  +rc[{op.rc_slice[0]}:{op.rc_slice[1]}]"
+                if op.mix_branches:
+                    extra += "  mix"
+                rows.append(f"  {i:2d}  MRMC[{o}->{oo}]{extra}")
             elif isinstance(op, NONLINEAR):
                 rows.append(f"  {i:2d}  {op.kind.upper()}[{o}]")
             elif isinstance(op, TRUNCATE):
@@ -251,15 +322,26 @@ class Schedule:
 # ==========================================================================
 @functools.lru_cache(maxsize=None)
 def build_schedule(params: "CipherParams", variant: str = "normal") -> Schedule:
-    """Emit the cipher program for ``params`` — the ONE place the HERA and
-    Rubato round structures are written down.
+    """Emit the cipher program for ``params`` — the ONE place the HERA,
+    Rubato, and PASTA round structures are written down.
 
-    Both ciphers share the skeleton (paper §III):
+    HERA and Rubato share the skeleton (paper §III):
 
         ARK ∘ [MRMC ∘ NL ∘ ARK]^{r-1} ∘ MRMC ∘ NL ∘ MRMC ∘ [Tr] ∘ ARK ∘ [AGN]
 
     differing only in the nonlinearity (Cube vs Feistel), truncation
     (Rubato: l < n makes the final ARK's trailing constants dead) and AGN.
+
+    PASTA applies its two-branch permutation to the KEY (init="key") with
+    per-block randomness entering through additive affine constants:
+
+        Tr_t ∘ A_r ∘ Cube ∘ [A_i ∘ Feistel]... reading right-to-left:
+        [A_i ∘ S_i]^r ∘ A_r where A = per-branch MRMC + rc + branch mix,
+        S_i = Feistel for i < r-1 and Cube for the final round,
+
+    i.e. r+1 affine layers consuming (r+1)·n constants — the same MRMC
+    count as the shared skeleton, so the alternating variant's flip plan
+    carries over unchanged (docs/DESIGN.md §11 documents the stand-ins).
 
     ``variant="alternating"`` flips MRMC orientation per application; when
     the MRMC count is odd the last one stays put so TRUNCATE/output see
@@ -270,7 +352,6 @@ def build_schedule(params: "CipherParams", variant: str = "normal") -> Schedule:
         raise ValueError(f"unknown schedule variant {variant!r}; "
                          f"have {VARIANTS}")
     n, l, r, v = params.n, params.l, params.rounds, params.v
-    nl = "cube" if params.kind == "hera" else "feistel"
     n_mrmc = r + 1
     # flip at every MRMC; with an odd count the last one keeps orientation
     # so truncation and the output stage always see normal state
@@ -280,13 +361,29 @@ def build_schedule(params: "CipherParams", variant: str = "normal") -> Schedule:
     cur = NORMAL
     mrmc_seen = 0
 
-    def mrmc():
+    def mrmc(**kw):
         nonlocal cur, mrmc_seen
         out = _flip(cur) if mrmc_seen < flips else cur
-        ops.append(MRMC(orientation=cur, out_orientation=out))
+        ops.append(MRMC(orientation=cur, out_orientation=out, **kw))
         cur = out
         mrmc_seen += 1
 
+    if params.kind == "pasta":
+        # [A_i ∘ S_i]^r ∘ A_r on the key state; constants consumed by the
+        # affine layers in out-orientation, mix coupling the two branches
+        for j in range(r):
+            mrmc(rc_slice=(j * n, (j + 1) * n), mix_branches=True)
+            ops.append(NONLINEAR(
+                orientation=cur, kind="feistel" if j < r - 1 else "cube"))
+        mrmc(rc_slice=(r * n, (r + 1) * n), mix_branches=True)
+        ops.append(TRUNCATE(orientation=cur, keep=l))
+        return Schedule(
+            name=f"{params.name}/{variant}", kind=params.kind,
+            variant=variant, n=n, l=l, v=v, ops=tuple(ops),
+            branches=params.branches, init="key",
+        ).validate()
+
+    nl = "cube" if params.kind == "hera" else "feistel"
     ops.append(ARK(orientation=cur, rc_slice=(0, n), key_len=n))
     for j in range(1, r):                          # RF_1 .. RF_{r-1}
         mrmc()
@@ -313,23 +410,26 @@ def build_schedule(params: "CipherParams", variant: str = "normal") -> Schedule:
 # Pure-JAX interpreter (the reference executor)
 # ==========================================================================
 def _mrmc_flat(params: "CipherParams", x, flip_out: bool):
-    """M_v·X·M_vᵀ on flat (..., n) state; flip_out transposes the output
-    (free by Eq. 2 — the stored-state compute is orientation-independent,
-    which is also why the no-flip transposed case is plain R.mrmc)."""
+    """M_v·X·M_vᵀ per branch on flat (..., n) state; flip_out transposes
+    the output (free by Eq. 2 — the stored-state compute is orientation-
+    independent, which is also why the no-flip transposed case is plain
+    R.mrmc)."""
     out = R.mrmc(params, x)
     if flip_out:
-        v = params.v
-        O = out.reshape(out.shape[:-1] + (v, v))
+        v, b = params.v, params.branches
+        O = out.reshape(out.shape[:-1] + (b, v, v))
         out = jnp.swapaxes(O, -1, -2).reshape(out.shape)
     return out
 
 
 def _feistel_transposed(params: "CipherParams", x):
-    """Feistel on transposed-stored state, as static shifts of the (v, v)
-    view: stored (c, r) holds logical r·v + c, so the logical predecessor
-    sits one row up — wrapping to (v-1, r-1) at the row boundary."""
-    mod, v = params.mod, params.v
-    S = x.reshape(x.shape[:-1] + (v, v))          # axes (..., c, r)
+    """Feistel on transposed-stored state, as static shifts of each
+    branch's (v, v) view: stored (c, r) holds logical r·v + c, so the
+    logical predecessor sits one row up — wrapping to (v-1, r-1) at the
+    row boundary.  The branch axis rides in front untouched (PASTA's
+    chain restarts per branch)."""
+    mod, v, b = params.mod, params.v, params.branches
+    S = x.reshape(x.shape[:-1] + (b, v, v))       # axes (..., b, c, r)
     sq = mod.square(S)
     row0 = jnp.concatenate(
         [jnp.zeros_like(sq[..., :1, :1]), sq[..., v - 1:, : v - 1]], axis=-1
@@ -345,19 +445,25 @@ def execute_schedule(params: "CipherParams", schedule: Schedule, key, rc,
     key: (..., n) u32 in Z_q; rc: (..., n_round_constants) u32 in *logical*
     (producer) order; noise_signed: (..., l) i32 or None; returns (..., l)
     u32 keystream.  Orientation handling: transposed ARKs index key/rc
-    through the transpose permutation (a static gather on small vectors);
-    MRMC flips are output relabelings; the state itself is never transposed
-    except at explicit MRMC orientation changes.
+    through the transpose permutation (a static gather on small vectors),
+    and an affine MRMC landing transposed indexes its additive constants
+    the same way; MRMC flips are output relabelings; the state itself is
+    never transposed except at explicit MRMC orientation changes.
+    ``schedule.init`` selects the initial state: the public ic constant
+    (HERA/Rubato) or the key itself (PASTA's keyed permutation).
     """
     if rc.shape[-1] != schedule.n_round_constants:
         raise ValueError(
             f"rc last dim {rc.shape[-1]} != {schedule.n_round_constants} "
             f"(schedule {schedule.name})"
         )
-    if ic is None:
-        ic = jnp.asarray(ic_vector(params))
-    x = jnp.broadcast_to(ic, rc.shape[:-1] + (params.n,))
-    tp = transpose_perm(schedule.v)
+    if schedule.init == "key":
+        x = jnp.broadcast_to(key, rc.shape[:-1] + (params.n,))
+    else:
+        if ic is None:
+            ic = jnp.asarray(ic_vector(params))
+        x = jnp.broadcast_to(ic, rc.shape[:-1] + (params.n,))
+    tp = state_transpose_perm(schedule.v, schedule.branches)
 
     for op in schedule.ops:
         if isinstance(op, ARK):
@@ -369,6 +475,14 @@ def execute_schedule(params: "CipherParams", schedule: Schedule, key, rc,
             x = R.ark(params, x, k, rcs)
         elif isinstance(op, MRMC):
             x = _mrmc_flat(params, x, op.orientation != op.out_orientation)
+            if op.has_rc:
+                a, b = op.rc_slice
+                rcs = rc[..., a:b]
+                if op.out_orientation == TRANSPOSED:
+                    rcs = rcs[..., tp]
+                x = params.mod.add(x, rcs)
+            if op.mix_branches:
+                x = R.branch_mix(params, x)
         elif isinstance(op, NONLINEAR):
             if op.kind == "cube":
                 x = R.cube(params, x)            # orientation-agnostic

@@ -10,7 +10,8 @@ part that constrains cipher design and that the paper reasons about:
     with multiplicative-depth tracking (`DepthTracked`) — this verifies the
     paper's central claim that Rubato's Feistel (depth 1/round) is much
     shallower than HERA's Cube (depth 2/round), which is what makes the
-    server-side FV evaluation cheap;
+    server-side FV evaluation cheap; PASTA sits between them ((r−1)
+    Feistel rounds + one Cube = depth r+1: 4 for pasta-128l);
   * the transciphering consistency contract: server-side keystream == the
     client's, so (c − z) recovers the encoded message slots that HalfBoot
     would carry into CKKS.
@@ -73,6 +74,9 @@ def evaluate_decryption_circuit(cipher: Cipher, block_ctrs):
 
     Returns (keystream, mult_depth).  HERA Par-128a: depth 2 per Cube × 5
     nonlinear layers = 10.  Rubato Par-128L: depth 1 per Feistel × 2 = 2.
+    PASTA: the FV-encrypted key is the initial state, the affine layers
+    (matrix, +rc, branch mix) are depth-free, and (r−1) Feistels + one
+    Cube give depth r+1 (4 for pasta-128l) — between the other two.
     """
     p = cipher.params
     sched = S.build_schedule(p)
@@ -80,25 +84,31 @@ def evaluate_decryption_circuit(cipher: Cipher, block_ctrs):
     cm = CircuitMod(p)
     mod = p.mod
 
-    ic = jnp.broadcast_to(
-        jnp.asarray(R.ic_vector(p)), block_ctrs.shape + (p.n,)
-    )
     key = jnp.broadcast_to(cipher.key, block_ctrs.shape + (p.n,))
     # the key is the FV-encrypted input; everything derived from it carries depth
-    x = DepthTracked(ic, 0)
     k = DepthTracked(key, 0)
+    if sched.init == "key":
+        x = DepthTracked(key, 0)                 # PASTA: keyed permutation
+    else:
+        ic = jnp.broadcast_to(
+            jnp.asarray(R.ic_vector(p)), block_ctrs.shape + (p.n,)
+        )
+        x = DepthTracked(ic, 0)
 
     def cube(x):
         sq = cm.mul_ct(x, x)
         return cm.mul_ct(sq, x)
 
     def feistel(x):
-        head = DepthTracked(x.value[..., :-1], x.depth)
+        b = p.branches
+        val = x.value.reshape(x.value.shape[:-1] + (b, x.value.shape[-1] // b))
+        head = DepthTracked(val[..., :-1], x.depth)
         sq = cm.mul_ct(head, head)
         shifted = jnp.concatenate(
-            [jnp.zeros_like(x.value[..., :1]), sq.value], axis=-1
+            [jnp.zeros_like(val[..., :1]), sq.value], axis=-1
         )
-        return DepthTracked(mod.add(x.value, shifted), max(x.depth, sq.depth))
+        out = mod.add(val, shifted).reshape(x.value.shape)
+        return DepthTracked(out, max(x.depth, sq.depth))
 
     rc = consts["rc"]
     for op in sched.ops:
@@ -108,7 +118,13 @@ def evaluate_decryption_circuit(cipher: Cipher, block_ctrs):
             x = cm.add(x, DepthTracked(
                 mod.mul(kt.value, rc[..., a:b]), kt.depth))
         elif isinstance(op, S.MRMC):
-            x = DepthTracked(R.mrmc(p, x.value), x.depth)  # plaintext linear
+            val = R.mrmc(p, x.value)             # plaintext linear
+            if op.has_rc:
+                a, b = op.rc_slice
+                val = mod.add(val, rc[..., a:b])  # plaintext add: depth-free
+            if op.mix_branches:
+                val = R.branch_mix(p, val)       # ct+ct adds: depth-free
+            x = DepthTracked(val, x.depth)
         elif isinstance(op, S.NONLINEAR):
             x = cube(x) if op.kind == "cube" else feistel(x)
         elif isinstance(op, S.TRUNCATE):
@@ -130,10 +146,11 @@ def transcipher(cipher: Cipher, c, block_ctrs, delta: float = 1024.0):
     into a CKKS ciphertext.  Returns (slots, mult_depth).
 
     Output-shape contract: the circuit yields exactly ``l`` slots per block
-    for BOTH ciphers, but by different routes — HERA never truncates
-    (l == n by construction, enforced in CipherParams), while Rubato's
-    final ARK feeds Tr_{n,l}, so its circuit output is already cut to l.
-    The ciphertext ``c`` must therefore be (..., l) in either case.
+    for ALL ciphers, but by different routes — HERA never truncates
+    (l == n by construction, enforced in CipherParams), Rubato's final ARK
+    feeds Tr_{n,l}, and PASTA's final affine layer feeds Tr to one branch
+    (l = n/2).  The ciphertext ``c`` must therefore be (..., l) in every
+    case.
     """
     z, depth = evaluate_decryption_circuit(cipher, block_ctrs)
     l = cipher.params.l

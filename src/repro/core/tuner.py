@@ -57,6 +57,12 @@ from repro.core.params import CipherParams, get_params
 from repro.core.producer import compatible_producers, producer_caps
 
 CACHE_VERSION = 1
+#: Per-entry plan schema.  Bump whenever a backend changes SEMANTICS under
+#: an unchanged name (a plan measured against the old semantics must not
+#: steer the new code) — the ROADMAP's plan-invalidation follow-up.
+#: History: 1 = PR 4 entries (implicit, no schema field);
+#:          2 = branch-aware schedule executors (PASTA introduction).
+PLAN_SCHEMA = 2
 _ENV_CACHE = "REPRO_TUNER_CACHE"
 
 
@@ -173,16 +179,44 @@ def _plan_is_valid(plan: StreamPlan, params: CipherParams, *,
 
 def save_plan(params: Union[CipherParams, str], lanes: int, plan: StreamPlan,
               p50_ms: float, cache_path=None) -> pathlib.Path:
-    """Persist a measured plan (with its measurement, as metadata)."""
+    """Persist a measured plan (with its measurement, as metadata).
+
+    Entries are stamped with the current ``PLAN_SCHEMA`` so a later
+    semantics bump invalidates them on load instead of letting a
+    stale-semantics measurement steer the new code.
+    """
     params = _coerce_params(params)
     path = pathlib.Path(cache_path) if cache_path else default_cache_path()
     data = _read_cache(path)
     entry = plan.to_json()
-    entry.update({"p50_ms": float(p50_ms), "measured_at": time.time(),
+    entry.update({"schema": PLAN_SCHEMA, "p50_ms": float(p50_ms),
+                  "measured_at": time.time(),
                   "backend": jax.default_backend()})
     data["plans"][cache_key(params, lanes)] = entry
     _write_cache(path, data)
     return path
+
+
+def _entry_schema(entry: dict) -> int:
+    """Schema an entry was measured under (1 = legacy, pre-stamp)."""
+    try:
+        return int(entry.get("schema", 1))
+    except (TypeError, ValueError):
+        return 0
+
+
+def _entry_plan(entry: dict, params: CipherParams, *, mesh=None,
+                axis: str = "data") -> Optional[StreamPlan]:
+    """Parse + validate one cache entry; None when it must not be trusted
+    (stale schema, malformed, or naming gone/unavailable backends)."""
+    if _entry_schema(entry) != PLAN_SCHEMA:
+        return None
+    try:
+        plan = StreamPlan.from_json(entry)
+    except (KeyError, TypeError, ValueError):
+        return None
+    return plan if _plan_is_valid(plan, params, mesh=mesh, axis=axis) \
+        else None
 
 
 def load_plan(params: Union[CipherParams, str], lanes: Optional[int] = None,
@@ -194,17 +228,17 @@ def load_plan(params: Union[CipherParams, str], lanes: Optional[int] = None,
     With ``lanes=None`` — or when the exact lane count was never tuned —
     falls back to the nearest tuned lane count for the same (preset,
     noise, host), deterministically (closest; ties break toward the
-    smaller).  Plans naming backends that are gone or unavailable here
-    are ignored rather than trusted.
+    smaller).  Plans naming backends that are gone or unavailable here,
+    and entries persisted under a different ``PLAN_SCHEMA`` (measured
+    against since-changed backend semantics), are ignored rather than
+    trusted.
     """
     params = _coerce_params(params)
     path = pathlib.Path(cache_path) if cache_path else default_cache_path()
     plans = _read_cache(path)["plans"]
     exact = plans.get(cache_key(params, lanes))
     if exact is not None:
-        plan = StreamPlan.from_json(exact)
-        return plan if _plan_is_valid(plan, params, mesh=mesh,
-                                      axis=axis) else None
+        return _entry_plan(exact, params, mesh=mesh, axis=axis)
     # nearest-lanes fallback within the same (preset, noise, host) family
     prefix = f"{params.name}|lanes="
     suffix = f"|noise={params.n_noise}|host={host_fingerprint()}"
@@ -217,8 +251,8 @@ def load_plan(params: Union[CipherParams, str], lanes: Optional[int] = None,
             lane_n = int(lane_s)
         except ValueError:
             continue
-        plan = StreamPlan.from_json(entry)
-        if _plan_is_valid(plan, params, mesh=mesh, axis=axis):
+        plan = _entry_plan(entry, params, mesh=mesh, axis=axis)
+        if plan is not None:
             candidates.append((lane_n, plan))
     if not candidates:
         return None
@@ -384,9 +418,12 @@ def describe(cache_path=None) -> str:
         if f"|host={fp}" not in key:
             continue
         e = plans[key]
+        schema = _entry_schema(e)
+        stale = "" if schema == PLAN_SCHEMA else \
+            f"  [STALE schema {schema} != {PLAN_SCHEMA}: ignored]"
         rows.append((key.split("|host=")[0], e["producer"], e["engine"],
                      e["variant"], str(e["window"]), str(e["depth"]),
-                     f"{e.get('p50_ms', float('nan')):.3f}"))
+                     f"{e.get('p50_ms', float('nan')):.3f}" + stale))
     if len(rows) == 1:
         lines.append(f"  (none at {path}; run --autotune, or serve with "
                      "--autotune)")

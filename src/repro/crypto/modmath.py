@@ -214,3 +214,4 @@ class Modulus:
 # Shipped Solinas primes (verified prime in __post_init__).
 Q_HERA = Modulus(2**28 - 2**16 + 1)    # 268369921, 28-bit (HERA Par-128a scale)
 Q_RUBATO = Modulus(2**25 - 2**14 + 1)  # 33538049, 25-bit (Rubato Par-128L scale)
+Q_PASTA = Modulus(2**26 - 2**12 + 1)   # 67104769, 26-bit (PASTA plaintext scale)

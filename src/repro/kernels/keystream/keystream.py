@@ -1,4 +1,4 @@
-"""Pallas kernel: fully fused HERA/Rubato stream-key generation.
+"""Pallas kernel: fully fused HERA/Rubato/PASTA stream-key generation.
 
 This is the accelerator itself (paper §IV), re-architected for TPU — the
 T1–T4 technique mapping below is documented in docs/DESIGN.md §3:
@@ -21,9 +21,13 @@ T1–T4 technique mapping below is documented in docs/DESIGN.md §3:
 
 The kernel body is a *schedule interpreter*: it executes the declarative
 round program from `core/schedule.py` — the same `build_schedule(params)`
-ops the pure-JAX reference interprets — so there is ONE code path for both
-ciphers and any future scheme is a schedule, not a new kernel.  Orientation
-handling (the paper's alternating MixColumns/MixRows order, Eq. 2):
+ops the pure-JAX reference interprets — so there is ONE code path for all
+three ciphers (HERA, Rubato, PASTA) and any future scheme is a schedule,
+not a new kernel.  PASTA exercises the IR's generalizations: key-initial
+state (the key column broadcast across lanes replaces the iota ic), the
+affine MRMC (per-branch matrix + additive storage-order constants + the
+two-branch mix), and per-branch Feistel.  Orientation handling (the
+paper's alternating MixColumns/MixRows order, Eq. 2):
 
   * a transposed-orientation MRMC is the identical shift-add datapath with
     the output stacking relabeled (`mrmc_matrix_apply(transpose_out=...)`)
@@ -49,7 +53,7 @@ from jax.experimental import pallas as pl
 
 from repro.core import schedule as S
 from repro.core.params import CipherParams
-from repro.core.schedule import Schedule, build_schedule, transpose_perm
+from repro.core.schedule import Schedule, build_schedule, state_transpose_perm
 from repro.crypto.modmath import Modulus
 from repro.kernels.mrmc.mrmc import mrmc_matrix_apply
 
@@ -88,14 +92,20 @@ def _keystream_kernel(params: CipherParams, sched: Schedule,
     mod = p.mod
     mat = p.mix_matrix()
     n, v = p.n, p.v
+    nb = sched.branches
+    t = n // nb
 
     key2 = key_ref[...]         # (n, 2): col 0 normal, col 1 transposed
     rc = rc_ref[...]            # (n_round_constants, BLK), STORAGE order
-    # ic = (1, ..., n) built in-kernel (n < q, so no reduction needed);
-    # programs always start in normal orientation
-    x = jax.lax.broadcasted_iota(
-        jnp.uint32, (n, rc.shape[-1]), 0
-    ) + jnp.uint32(1)
+    if sched.init == "key":
+        # PASTA: the keyed permutation — the key column IS the state
+        x = jnp.broadcast_to(key2[:, :1], (n, rc.shape[-1]))
+    else:
+        # ic = (1, ..., n) built in-kernel (n < q, so no reduction needed);
+        # programs always start in normal orientation
+        x = jax.lax.broadcasted_iota(
+            jnp.uint32, (n, rc.shape[-1]), 0
+        ) + jnp.uint32(1)
 
     for op in sched.ops:
         if isinstance(op, S.ARK):
@@ -104,17 +114,35 @@ def _keystream_kernel(params: CipherParams, sched: Schedule,
             k = key2[:, col : col + 1][: op.key_len]
             x = mod.add(x, mod.mul(k, rc[a:b]))
         elif isinstance(op, S.MRMC):
-            x = mrmc_matrix_apply(
-                mod, mat, x.reshape(v, v, -1),
-                transpose_out=op.orientation != op.out_orientation,
+            flip = op.orientation != op.out_orientation
+            x = jnp.concatenate([
+                mrmc_matrix_apply(
+                    mod, mat, x[i * t : (i + 1) * t].reshape(v, v, -1),
+                    transpose_out=flip,
+                ).reshape(t, -1)
+                for i in range(nb)
+            ], axis=0) if nb > 1 else mrmc_matrix_apply(
+                mod, mat, x.reshape(v, v, -1), transpose_out=flip,
             ).reshape(n, -1)
+            if op.has_rc:
+                a, b = op.rc_slice
+                x = mod.add(x, rc[a:b])   # storage order: already oriented
+            if op.mix_branches:
+                L, R_ = x[:t], x[t:]
+                s = mod.add(L, R_)        # (2L + R, L + 2R) = (s + L, s + R)
+                x = jnp.concatenate([mod.add(s, L), mod.add(s, R_)], axis=0)
         elif isinstance(op, S.NONLINEAR):
             if op.kind == "cube":
                 x = mod.cube(x)
             elif op.orientation == S.TRANSPOSED:
-                x = _feistel_transposed(mod, v, x)
+                x = jnp.concatenate([
+                    _feistel_transposed(mod, v, x[i * t : (i + 1) * t])
+                    for i in range(nb)
+                ], axis=0)
             else:
-                x = _feistel(mod, x)
+                x = jnp.concatenate([
+                    _feistel(mod, x[i * t : (i + 1) * t]) for i in range(nb)
+                ], axis=0)
         elif isinstance(op, S.TRUNCATE):
             x = x[: op.keep]
         elif isinstance(op, S.AGN) and noise_ref is not None:
@@ -157,7 +185,9 @@ def keystream_pallas(params: CipherParams, key_n1, rc_cl, noise_ll=None, *,
     if rc_perm is not None:
         rc_cl = rc_cl[rc_perm]
     key_n2 = jnp.concatenate(
-        [key_n1, key_n1[np.asarray(transpose_perm(p.v))]], axis=1
+        [key_n1,
+         key_n1[np.asarray(state_transpose_perm(p.v, schedule.branches))]],
+        axis=1,
     )
 
     with_noise = noise_ll is not None

@@ -18,16 +18,24 @@ def _auto_interpret() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("params", "interpret"))
 def mrmc_kernel_apply(params: CipherParams, x, interpret: bool | None = None):
-    """x: (lanes, n) uint32 row-major states -> (lanes, n) MRMC output."""
+    """x: (lanes, n) uint32 row-major states -> (lanes, n) MRMC output.
+
+    Branch-aware: a multi-branch state (PASTA, n = branches·v²) applies the
+    same per-branch matrix, so branches fold into the kernel's lane axis —
+    (lanes, b, v, v) becomes a (v, v, lanes·b) lane-major block and the
+    kernel is oblivious to where lanes end and branches begin.
+    """
     if interpret is None:
         interpret = _auto_interpret()
     lanes, n = x.shape
-    v = params.v
+    v, b = params.v, params.branches
     assert n == params.n
     pad = (-lanes) % BLK
+    lp = lanes + pad
     xp = jnp.pad(x, ((0, pad), (0, 0)))
-    # (lanes_p, n) -> (v, v, lanes_p): row-major state onto sublanes
-    x_vvl = xp.reshape(lanes + pad, v, v).transpose(1, 2, 0)
+    # (lanes_p, n) -> (v, v, lanes_p·b): row-major branch states onto
+    # sublanes, (lane, branch) pairs on the vector lane axis
+    x_vvl = xp.reshape(lp, b, v, v).transpose(2, 3, 0, 1).reshape(v, v, -1)
     o = mrmc_pallas(params, x_vvl, interpret=interpret)
-    out = o.transpose(2, 0, 1).reshape(lanes + pad, n)
+    out = o.reshape(v, v, lp, b).transpose(2, 3, 0, 1).reshape(lp, n)
     return out[:lanes]

@@ -1,6 +1,7 @@
 """Serving driver: batched prefill + decode with the HHE-encrypted request
-path (client sends Rubato-encrypted prompts; pod decrypts via keystream
-subtraction, generates, and re-encrypts the response stream).
+path (client sends HHE-encrypted prompts under any registered cipher
+preset — HERA, Rubato, or PASTA; pod decrypts via keystream subtraction,
+generates, and re-encrypts the response stream).
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --smoke \
         --batch 4 --prompt-len 32 --gen 16 --encrypted
@@ -168,7 +169,11 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--encrypted", action="store_true")
-    ap.add_argument("--cipher", default="rubato-128l")
+    from repro.core.params import REGISTRY as _CIPHERS
+    ap.add_argument("--cipher", default="rubato-128l",
+                    choices=sorted(_CIPHERS),
+                    help="HHE cipher preset for --encrypted (any "
+                         "registered kind: hera / rubato / pasta)")
     ap.add_argument("--engine", default="auto",
                     help="keystream engine for --encrypted "
                          "(see repro.core.engine; 'auto' resolves per "

@@ -15,13 +15,14 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 from repro.core import (
-    HERA_128A, RUBATO_128L, make_cipher, transcipher,
+    HERA_128A, PASTA_128L, PASTA_128S, RUBATO_128L, make_cipher, transcipher,
 )
 from repro.core import rounds as R
 from repro.core.params import get_params
 from repro.core.transcipher import evaluate_decryption_circuit
 
-ALL = ["hera-128a", "rubato-128s", "rubato-128m", "rubato-128l"]
+ALL = ["hera-128a", "rubato-128s", "rubato-128m", "rubato-128l",
+       "pasta-128s", "pasta-128l"]
 
 
 def test_round_constant_accounting_matches_paper():
@@ -30,10 +31,15 @@ def test_round_constant_accounting_matches_paper():
     assert RUBATO_128L.n_round_constants == 188
     # Rubato split: 64 + 64 + 60 (truncated final ARK)
     assert RUBATO_128L.rounds * RUBATO_128L.n + RUBATO_128L.l == 188
+    # PASTA: (r+1) affine layers x n additive constants, no ARKs
+    assert PASTA_128L.n_round_constants == (3 + 1) * 128 == 512
+    assert PASTA_128S.n_round_constants == (4 + 1) * 32 == 160
+    assert PASTA_128L.n_arks == 0
 
 
 def test_multiplicative_depth_claims():
-    # HERA: 5 Cube layers x depth 2 = 10;  Rubato-128L: 2 Feistel x 1 = 2.
+    # HERA: 5 Cube layers x depth 2 = 10;  Rubato-128L: 2 Feistel x 1 = 2;
+    # PASTA sits between: (r-1) Feistels + one Cube = r+1 (4 for 128l).
     # This is THE property that makes Rubato cheap to transcipher (§III).
     hera = make_cipher("hera-128a", seed=1)
     _, depth = evaluate_decryption_circuit(hera, jnp.arange(2, dtype=jnp.uint32))
@@ -41,20 +47,23 @@ def test_multiplicative_depth_claims():
     rub = make_cipher("rubato-128l", seed=1)
     _, depth = evaluate_decryption_circuit(rub, jnp.arange(2, dtype=jnp.uint32))
     assert depth == 2
+    pasta = make_cipher("pasta-128l", seed=1)
+    _, depth = evaluate_decryption_circuit(pasta, jnp.arange(2, dtype=jnp.uint32))
+    assert depth == 4
 
 
 @pytest.mark.parametrize("name", ALL)
 def test_mrmc_transposition_invariance(name, rng):
     """Paper Eq. 2: MRMC(X^T) = (MRMC(X))^T — the property that licenses
-    row/column-major alternation."""
+    row/column-major alternation.  Per branch for PASTA's two-word state."""
     p = get_params(name)
-    v = p.v
+    v, b = p.v, p.branches
     x = rng.integers(0, p.mod.q, (7, p.n), dtype=np.uint32)
-    X = x.reshape(7, v, v)
-    xt = jnp.asarray(np.swapaxes(X, 1, 2).reshape(7, p.n))
-    lhs = np.array(R.mrmc(p, xt)).reshape(7, v, v)
+    X = x.reshape(7, b, v, v)
+    xt = jnp.asarray(np.swapaxes(X, 2, 3).reshape(7, p.n))
+    lhs = np.array(R.mrmc(p, xt)).reshape(7, b, v, v)
     rhs = np.swapaxes(
-        np.array(R.mrmc(p, jnp.asarray(x))).reshape(7, v, v), 1, 2)
+        np.array(R.mrmc(p, jnp.asarray(x))).reshape(7, b, v, v), 2, 3)
     np.testing.assert_array_equal(lhs, rhs)
 
 
@@ -104,6 +113,32 @@ def test_feistel_is_parallel_not_chained(rng):
     np.testing.assert_array_equal(got, want.astype(np.uint32))
 
 
+def test_pasta_feistel_restarts_at_branch_boundary(rng):
+    """PASTA's Feistel chain is per branch: element t (the first of branch
+    R) passes through unchanged, like element 0 — never coupled to element
+    t-1 of branch L."""
+    p = get_params("pasta-128s")
+    t = p.n // 2
+    x = rng.integers(0, p.mod.q, (3, p.n), dtype=np.uint32)
+    got = np.array(R.feistel(p, jnp.asarray(x)))
+    np.testing.assert_array_equal(got[:, 0], x[:, 0])
+    np.testing.assert_array_equal(got[:, t], x[:, t])   # restart, not chained
+    want_t1 = (x[:, t + 1].astype(object)
+               + x[:, t].astype(object) ** 2) % p.mod.q
+    np.testing.assert_array_equal(got[:, t + 1], want_t1.astype(np.uint32))
+
+
+def test_pasta_branch_mix_matches_definition(rng):
+    """(y_L, y_R) <- (2y_L + y_R, y_L + 2y_R) mod q, elementwise."""
+    p = get_params("pasta-128s")
+    t = p.n // 2
+    x = rng.integers(0, p.mod.q, (4, p.n), dtype=np.uint32)
+    got = np.array(R.branch_mix(p, jnp.asarray(x))).astype(object)
+    L, R_ = x[:, :t].astype(object), x[:, t:].astype(object)
+    np.testing.assert_array_equal(got[:, :t], (2 * L + R_) % p.mod.q)
+    np.testing.assert_array_equal(got[:, t:], (L + 2 * R_) % p.mod.q)
+
+
 def test_transcipher_recovers_slots():
     ci = make_cipher("rubato-128l", seed=7)
     ctrs = jnp.arange(3, dtype=jnp.uint32)
@@ -114,6 +149,19 @@ def test_transcipher_recovers_slots():
     # server-side recovery is exact up to the cipher's own AGN noise
     assert np.abs(np.array(slots) - m).max() < 10 * 1.6 / 1024 + 1 / 2048
     assert depth == 2
+
+
+def test_transcipher_recovers_slots_pasta():
+    """PASTA has no AGN stage, so server-side recovery is exact to the
+    fixed-point grid — and the circuit depth is r+1."""
+    ci = make_cipher("pasta-128l", seed=7)
+    ctrs = jnp.arange(3, dtype=jnp.uint32)
+    rng = np.random.default_rng(8)
+    m = rng.uniform(-4, 4, (3, ci.params.l)).astype(np.float32)
+    ct = ci.encrypt(m, ctrs)
+    slots, depth = transcipher(ci, ct, ctrs)
+    assert np.abs(np.array(slots) - m).max() < 1 / 2048
+    assert depth == ci.params.rounds + 1
 
 
 def _roundtrip_hera(seed, ctr):

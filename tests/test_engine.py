@@ -1,10 +1,11 @@
 """KeystreamEngine registry: capability reporting, single-place "auto"
 resolution, and the cross-backend bit-exactness matrix (ISSUE acceptance:
-every registered engine produces identical keystream for both HERA and
-Rubato across all CipherParams presets, with and without AGN noise).
+every registered engine produces identical keystream for HERA, Rubato,
+AND PASTA across all CipherParams presets, with and without AGN noise,
+under both schedule-orientation variants).
 
-scripts/ci.sh runs this file in its smoke stage so backend drift fails
-fast.
+scripts/ci.sh runs this file in its engine-matrix stage so backend drift
+fails fast.
 """
 
 import numpy as np
@@ -28,7 +29,8 @@ from repro.kernels.keystream.ref import keystream_ref
 # every preset in core/params.py REGISTRY; every engine that can run on any
 # backend (compiled "pallas" and "sharded" need TPU / a mesh — covered
 # separately below); both schedule-orientation variants (core/schedule.py)
-PRESETS = ["hera-128a", "rubato-128s", "rubato-128m", "rubato-128l"]
+PRESETS = ["hera-128a", "rubato-128s", "rubato-128m", "rubato-128l",
+           "pasta-128s", "pasta-128l"]
 PORTABLE_ENGINES = ["ref", "jax", "pallas-interpret"]
 VARIANTS = ["normal", "alternating"]
 LANES = 3

@@ -30,7 +30,7 @@ from repro.data.encrypted import (
 from repro.data.pipeline import SyntheticLM, iterate_batches, make_source
 from repro.serve.hhe_loop import HHERequest, HHEServer
 
-FARM_PARAMS = ["hera-128a", "rubato-128s", "rubato-128l"]
+FARM_PARAMS = ["hera-128a", "rubato-128s", "rubato-128l", "pasta-128s"]
 
 
 def _oracle(cb, sids, ctrs):

@@ -28,7 +28,8 @@ from repro.kernels.keystream.ref import keystream_ref
 from repro.kernels.mrmc.ops import mrmc_kernel_apply
 from repro.kernels.mrmc.ref import mrmc_ref
 
-PARAMS = ["hera-128a", "rubato-128s", "rubato-128m", "rubato-128l"]
+PARAMS = ["hera-128a", "rubato-128s", "rubato-128m", "rubato-128l",
+          "pasta-128s", "pasta-128l"]
 LANES = [1, 8, 128, 300]
 
 
@@ -66,7 +67,7 @@ def test_keystream_kernel_matches_ref_full_lanes(name, lanes):
     _check_keystream_parity(name, lanes)
 
 
-@pytest.mark.parametrize("name", ["hera-128a", "rubato-128s"])
+@pytest.mark.parametrize("name", ["hera-128a", "rubato-128s", "pasta-128s"])
 @pytest.mark.parametrize("lanes", [5, 130])
 def test_keystream_kernel_ragged_lanes(name, lanes):
     """Padding/transpose path parity: lanes % BLK != 0 (pad-to-BLK,

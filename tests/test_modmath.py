@@ -17,9 +17,9 @@ try:
 except ImportError:
     HAVE_HYPOTHESIS = False
 
-from repro.crypto.modmath import Modulus, Q_HERA, Q_RUBATO
+from repro.crypto.modmath import Modulus, Q_HERA, Q_PASTA, Q_RUBATO
 
-MODS = [Q_HERA, Q_RUBATO]
+MODS = [Q_HERA, Q_RUBATO, Q_PASTA]
 
 
 @pytest.mark.parametrize("mod", MODS, ids=lambda m: str(m.q))

@@ -105,7 +105,7 @@ def test_describe_table_lists_all():
 # ---------------------------------------------------------------------------
 # The matrix: keystream identical regardless of (producer, engine, variant)
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("name", ["hera-128a", "rubato-128s"])
+@pytest.mark.parametrize("name", ["hera-128a", "rubato-128s", "pasta-128s"])
 @pytest.mark.parametrize("engine", ["ref", "jax", "pallas-interpret"])
 @pytest.mark.parametrize("variant", ["normal", "alternating"])
 def test_plan_matrix_bit_exact(name, engine, variant):

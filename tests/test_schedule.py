@@ -30,14 +30,19 @@ from repro.core.params import get_params
 from repro.kernels.keystream.ops import keystream_kernel_apply
 from repro.kernels.keystream.ref import keystream_ref
 
-PRESETS = ["hera-128a", "rubato-128s", "rubato-128m", "rubato-128l"]
+PRESETS = ["hera-128a", "rubato-128s", "rubato-128m", "rubato-128l",
+           "pasta-128s", "pasta-128l"]
 SEED, LANES = 123, 4
 
 # SHA-256 of the little-endian uint32 keystream bytes for
-# make_cipher(name, seed=123) over block counters 0..3 — generated from the
-# pre-schedule-IR executors (PR 2 tree).  These digests pin the cipher
-# itself: regenerating them is only legitimate when the cipher definition
-# deliberately changes, never to "fix" a refactor.
+# make_cipher(name, seed=123) over block counters 0..3 — HERA/Rubato
+# entries generated from the pre-schedule-IR executors (PR 2 tree), PASTA
+# from the cross-checked IR executors at introduction (PR 5).  These
+# digests pin the cipher itself: regenerating them
+# (scripts/regen_goldens.py --write) is only legitimate when the cipher
+# definition deliberately changes, never to "fix" a refactor; the ci.sh
+# golden-regen stage fails if regeneration would change any digest.
+# --- GOLDEN-BEGIN (scripts/regen_goldens.py) ---
 GOLDEN = {
     ("hera-128a", "plain"): "894abb58f75f5306e40200bc670d9e4672dd5e345d1f0ad97545c22f1b1132b2",
     ("rubato-128s", "plain"): "9c46b0244571ba344f043498875dea5576c0a6775e39676294191a7e0adf315f",
@@ -46,7 +51,10 @@ GOLDEN = {
     ("rubato-128m", "noise"): "37acf76c4ab8438e866e6ee38f69c32170fb09462d6012991e3787953921b9ee",
     ("rubato-128l", "plain"): "286453548ffff0abc2231c2603cd895410bab849f334f58b6eff6276d74a5471",
     ("rubato-128l", "noise"): "f89adf017a718905d2e7c40eaac8aebb014111ecba24975b52b75ac7cfca2099",
+    ("pasta-128s", "plain"): "2b6424b72d45f3318692d63b4ba23067c5ccd42f6e7dc38a45cc471d16f7fe85",
+    ("pasta-128l", "plain"): "92c38b46a71f4a65724f5ee11ff8fa7dc5569e92e861df139b9fd4a99f5c0de9",
 }
+# --- GOLDEN-END ---
 
 
 def _constants(name):
@@ -98,7 +106,7 @@ def test_alternating_bit_exact_pure_jax(name):
     np.testing.assert_array_equal(np.array(a), np.array(b))
 
 
-@pytest.mark.parametrize("name", ["hera-128a", "rubato-128s"])
+@pytest.mark.parametrize("name", ["hera-128a", "rubato-128s", "pasta-128s"])
 def test_alternating_bit_exact_kernel(name):
     """Kernel-side orientation handling (storage-order constants, permuted
     key column, transposed Feistel shifts) vs the normal plan.  The full
@@ -118,7 +126,7 @@ def test_eq2_licenses_transposed_rounds(name, rng):
     """Eq. 2: MRMC(Xᵀ) = MRMC(X)ᵀ ⇒ mrmc_transposed ≡ mrmc on the stored
     array — exactly why the alternating variant's transposed-state MRMC
     runs the unmodified datapath, and why a flip is a pure output relabel
-    (_mrmc_flat's swapaxes)."""
+    (_mrmc_flat's swapaxes).  Per branch for PASTA's two-word state."""
     from repro.core import rounds as R
     from repro.core.schedule import _mrmc_flat
 
@@ -126,20 +134,25 @@ def test_eq2_licenses_transposed_rounds(name, rng):
     x = jnp.asarray(rng.integers(0, p.mod.q, (6, p.n), dtype=np.uint32))
     np.testing.assert_array_equal(
         np.array(R.mrmc_transposed(p, x)), np.array(R.mrmc(p, x)))
-    v = p.v
-    flipped = np.array(_mrmc_flat(p, x, flip_out=True)).reshape(6, v, v)
-    plain = np.array(_mrmc_flat(p, x, flip_out=False)).reshape(6, v, v)
-    np.testing.assert_array_equal(flipped, np.swapaxes(plain, 1, 2))
+    v, b = p.v, p.branches
+    flipped = np.array(_mrmc_flat(p, x, flip_out=True)).reshape(6, b, v, v)
+    plain = np.array(_mrmc_flat(p, x, flip_out=False)).reshape(6, b, v, v)
+    np.testing.assert_array_equal(flipped, np.swapaxes(plain, 2, 3))
 
 
 def test_alternating_uses_both_orientations():
     """The alternating plan must actually flip (else the property test is
-    vacuous): transposed ARKs and nonlinear layers appear for every preset,
-    and Eq. 2 (mrmc_transposed) is what licenses them."""
+    vacuous): transposed constant-consuming ops (ARKs for HERA/Rubato,
+    affine MRMCs for PASTA) and transposed nonlinear layers appear for
+    every preset, and Eq. 2 (mrmc_transposed) is what licenses them."""
     for name in PRESETS:
         sched = build_schedule(get_params(name), "alternating")
-        assert any(op.orientation == S.TRANSPOSED for op in sched.ops
-                   if isinstance(op, S.ARK)), name
+        if sched.n_arks:
+            assert any(op.orientation == S.TRANSPOSED for op in sched.ops
+                       if isinstance(op, S.ARK)), name
+        else:
+            assert any(op.out_orientation == S.TRANSPOSED for op in sched.ops
+                       if isinstance(op, S.MRMC) and op.has_rc), name
         assert any(op.orientation == S.TRANSPOSED for op in sched.ops
                    if isinstance(op, S.NONLINEAR)), name
         assert not build_schedule(get_params(name)).has_transposed_ops
@@ -149,14 +162,18 @@ def test_alternating_uses_both_orientations():
 # Program structure and derived accounting
 # ---------------------------------------------------------------------------
 def test_accounting_derives_from_program():
-    # Presto §IV-C FIFO depths: HERA 96, Rubato Par-128L 188 = 64+64+60
+    # Presto §IV-C FIFO depths: HERA 96, Rubato Par-128L 188 = 64+64+60;
+    # PASTA draws (r+1)·n affine constants (no ARKs at all)
     hera = build_schedule(get_params("hera-128a"))
     rub = build_schedule(get_params("rubato-128l"))
+    pasta = build_schedule(get_params("pasta-128l"))
     assert hera.n_arks == 6 and hera.n_round_constants == 96
     assert rub.n_arks == 3 and rub.n_round_constants == 188
+    assert pasta.n_arks == 0 and pasta.n_round_constants == 512
     # params delegates to the program (no duplicated formulas)
     assert get_params("hera-128a").n_round_constants == 96
     assert get_params("rubato-128l").n_arks == 3
+    assert get_params("pasta-128s").n_round_constants == 160
 
 
 def test_program_shapes():
@@ -166,13 +183,30 @@ def test_program_shapes():
     assert not any(isinstance(op, (S.TRUNCATE, S.AGN)) for op in hera.ops)
     assert any(isinstance(op, S.TRUNCATE) for op in rub.ops)
     assert isinstance(rub.ops[-1], S.AGN)
-    # both ciphers share the skeleton: r+1 MRMCs, r nonlinear layers
+    # all three ciphers share the count structure: r+1 MRMCs, r nonlinear
     for name in PRESETS:
         p = get_params(name)
         sched = build_schedule(p)
         assert sched.n_mrmc == p.rounds + 1
         assert sum(isinstance(op, S.NONLINEAR)
                    for op in sched.ops) == p.rounds
+
+
+def test_pasta_program_shape():
+    """PASTA's structural signature: keyed two-branch permutation, affine
+    MRMCs carrying additive constants + branch mix, Feistel intermediate
+    rounds with a cube final round, truncation to one branch."""
+    p = get_params("pasta-128l")
+    sched = build_schedule(p)
+    assert sched.init == "key" and sched.branches == 2
+    assert sched.n_arks == 0 and not any(
+        isinstance(op, S.AGN) for op in sched.ops)
+    affine = [op for op in sched.ops if isinstance(op, S.MRMC)]
+    assert all(op.has_rc and op.mix_branches for op in affine)
+    nl = [op.kind for op in sched.ops if isinstance(op, S.NONLINEAR)]
+    assert nl == ["feistel"] * (p.rounds - 1) + ["cube"]
+    assert isinstance(sched.ops[-1], S.TRUNCATE)
+    assert sched.ops[-1].keep == p.l == p.n // 2
 
 
 def test_validate_rejects_broken_orientation_chain():
@@ -189,18 +223,39 @@ def test_unknown_variant_raises():
         build_schedule(get_params("hera-128a"), "diagonal")
 
 
-def test_rc_storage_perm_is_slicewise_involution():
-    """The FIFO reorder permutes only within transposed ARK slices, so the
+@pytest.mark.parametrize("name", ["rubato-128l", "pasta-128s", "pasta-128l"])
+def test_rc_storage_perm_is_slicewise_involution(name):
+    """The FIFO reorder permutes only within transposed constant slices
+    (ARK for HERA/Rubato, affine MRMC for PASTA — per branch), so the
     producer's constant *count* accounting is untouched."""
-    sched = build_schedule(get_params("rubato-128l"), "alternating")
+    sched = build_schedule(get_params(name), "alternating")
     perm = sched.rc_storage_perm()
     assert perm is not None
     assert sorted(perm) == list(range(sched.n_round_constants))
     np.testing.assert_array_equal(perm[perm], np.arange(len(perm)))
-    assert build_schedule(get_params("rubato-128l")).rc_storage_perm() is None
+    assert build_schedule(get_params(name)).rc_storage_perm() is None
+
+
+def test_pasta_storage_perm_never_crosses_branches():
+    """A transposed affine slice permutes within each branch's half —
+    PASTA's branches are independent (v, v) matrices, so the RNG FIFO
+    reorder must never move a constant across the branch boundary."""
+    sched = build_schedule(get_params("pasta-128s"), "alternating")
+    perm = sched.rc_storage_perm()
+    n, t = sched.n, sched.n // 2
+    for op in sched.ops:
+        if isinstance(op, S.MRMC) and op.has_rc:
+            a, _ = op.rc_slice
+            first = perm[a : a + t] - a
+            second = perm[a + t : a + n] - a
+            assert (first < t).all(), "branch L slice leaked into branch R"
+            assert (second >= t).all(), "branch R slice leaked into branch L"
 
 
 def test_describe_listing():
     text = build_schedule(get_params("hera-128a"), "alternating").describe()
     assert "MRMC[N->T]" in text and "CUBE[T]" in text
     assert "rc[80:96]" in text  # final ARK slice — the 96-constant FIFO
+    ptext = build_schedule(get_params("pasta-128l"), "alternating").describe()
+    assert "2 branches" in ptext and "init=key" in ptext
+    assert "+rc[384:512]" in ptext and "mix" in ptext

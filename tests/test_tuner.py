@@ -14,6 +14,7 @@ from repro.core.engine import resolve_engine
 from repro.core.params import get_params
 from repro.core.producer import resolve_producer
 from repro.core.tuner import (
+    PLAN_SCHEMA,
     autotune,
     cache_key,
     candidate_plans,
@@ -98,6 +99,69 @@ def test_load_plan_rejects_invalid_cached_backends(tmp_path):
     save_plan("hera-128a", 8,
               StreamPlan("aes", "jax", "diagonal", 8, 2), 1.0, cache)
     assert load_plan("hera-128a", 8, cache) is None     # unknown variant
+
+
+# ---------------------------------------------------------------------------
+# Cache-schema versioning: stale-schema entries are invalidated, not trusted
+# ---------------------------------------------------------------------------
+def _rewrite_entry_schema(cache, schema):
+    """Patch every persisted entry's schema field in place (None = drop
+    the field entirely — the PR 4 legacy layout)."""
+    data = json.loads(cache.read_text())
+    for entry in data["plans"].values():
+        if schema is None:
+            entry.pop("schema", None)
+        else:
+            entry["schema"] = schema
+    cache.write_text(json.dumps(data))
+
+
+def test_save_plan_stamps_current_schema(tmp_path):
+    cache = tmp_path / "plans.json"
+    save_plan("rubato-128s", 8, StreamPlan("aes", "jax", "normal", 8, 2),
+              1.0, cache)
+    entry = json.loads(cache.read_text())["plans"][
+        cache_key(get_params("rubato-128s"), 8)]
+    assert entry["schema"] == PLAN_SCHEMA
+
+
+@pytest.mark.parametrize("stale", [None, PLAN_SCHEMA - 1, PLAN_SCHEMA + 1,
+                                   "garbage"])
+def test_load_plan_ignores_stale_schema_entries(tmp_path, stale):
+    """A plan measured under different backend semantics (schema bump)
+    must be ignored on load — including pre-stamp legacy entries (no
+    schema field = schema 1) and malformed values."""
+    cache = tmp_path / "plans.json"
+    plan = StreamPlan("aes", "jax", "normal", 8, 2)
+    save_plan("rubato-128s", 8, plan, 1.0, cache)
+    assert load_plan("rubato-128s", 8, cache) == plan      # fresh: trusted
+    _rewrite_entry_schema(cache, stale)
+    assert load_plan("rubato-128s", 8, cache) is None      # stale: ignored
+
+
+def test_nearest_lanes_fallback_skips_stale_schema(tmp_path):
+    cache = tmp_path / "plans.json"
+    p8 = StreamPlan("aes", "jax", "normal", 8, 2)
+    save_plan("rubato-128s", 8, p8, 1.0, cache)
+    _rewrite_entry_schema(cache, PLAN_SCHEMA - 1)
+    p64 = StreamPlan("cached", "jax", "normal", 64, 3)
+    save_plan("rubato-128s", 64, p64, 1.0, cache)
+    # lanes=16 is nearest to the stale 8-lane entry, but only the
+    # current-schema 64-lane plan may be served
+    assert load_plan("rubato-128s", 16, cache) == p64
+
+
+def test_autotune_remeasures_over_stale_schema(tmp_path):
+    """A cache hit on a stale-schema entry is NOT a hit: autotune must
+    re-measure and overwrite the entry under the current schema."""
+    cache = tmp_path / "plans.json"
+    plan = _tiny_autotune(cache)
+    _rewrite_entry_schema(cache, PLAN_SCHEMA - 1)
+    again = _tiny_autotune(cache)                 # re-measures, re-persists
+    assert again == plan
+    entry = json.loads(cache.read_text())["plans"][
+        cache_key(get_params("rubato-128s"), 8)]
+    assert entry["schema"] == PLAN_SCHEMA
 
 
 def test_cache_key_is_host_scoped():
