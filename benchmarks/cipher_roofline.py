@@ -25,8 +25,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.analysis.cost import MUL_WEIGHT, analyze_cost
 from repro.core.cipher import Cipher, make_cipher
-from repro.core.params import get_params
+from repro.core.params import REGISTRY, get_params
 from repro.launch.dryrun import collective_bytes
 from repro.launch.mesh import make_production_mesh
 
@@ -73,15 +74,33 @@ def farm_cell(name: str, xof: str, mesh, lanes: int):
     return c_full, c_prod
 
 
+def analytic_ceiling(name: str):
+    """Static roofline from the schedule walk (repro.analysis.cost),
+    scaled to this file's pod constants — no compile, no XLA cost model.
+    Returns (lanes/s ceiling across the mesh, CostReport)."""
+    cost = analyze_cost(get_params(name))
+    # u32 elementwise ops ride the vector unit at ~1 lane op per flop-slot
+    compute = PEAK_FLOPS / (cost.modmul * MUL_WEIGHT + cost.modadd
+                            + cost.reduce_steps + cost.shift_add)
+    memory = HBM_BW / cost.bytes_per_lane
+    return CHIPS * min(compute, memory), cost
+
+
 def main():
     mesh = make_production_mesh()
     tokens = 256 * 4096
-    for name in ("rubato-128l", "hera-128a"):
+    for name in sorted(REGISTRY):
         l = get_params(name).l
         lanes = math.ceil(tokens / l)
         lanes = ((lanes + CHIPS - 1) // CHIPS) * CHIPS
         print(f"\n=== {name}: {lanes} keystream blocks "
               f"(train_4k data plane, 256 chips) ===")
+        ceiling, cost = analytic_ceiling(name)
+        print(f"  analytic: {cost.modmul} modmul/lane, "
+              f"{cost.bytes_per_lane} B/lane "
+              f"(intensity {cost.modmul_intensity:.4f} modmul/B) -> "
+              f"ceiling {ceiling:.3e} lanes/s, "
+              f"batch floor {lanes / ceiling * 1e6:.2f}us")
         for xof in ("aes", "threefry"):
             c_full, c_prod = farm_cell(name, xof, mesh, lanes)
             tc, tm, tx, dom = terms(c_full)

@@ -27,7 +27,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.cipher import make_cipher
 from repro.kernels.keystream.ops import keystream_kernel_apply

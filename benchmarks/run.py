@@ -9,7 +9,6 @@ Prints ``name,us_per_call,derived`` CSV (plus a table column).
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Fallback import-hygiene linter for hosts without ruff.
+
+The `lint` CI stage (scripts/ci.sh) prefers ruff with the checked-in
+ruff.toml; this script is the degraded-but-hermetic path for the
+accelerator image, which ships no linter and must not pip-install one.
+It enforces the highest-value subset with matching semantics:
+
+  * files must parse (syntax errors fail the stage);
+  * every imported name must be used (ruff F401), where "used" means it
+    appears as a load name anywhere in the module, in ``__all__``, or the
+    import line carries ``# noqa`` (bare or listing F401);
+  * ``__init__.py`` files are exempt (re-exports are the API surface);
+  * duplicate imports of the same binding in the same scope (ruff F811's
+    import case).
+
+Usage: python scripts/astlint.py DIR [DIR ...]
+Exits 1 if any finding, printing ruff-style ``path:line: code message``.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+NOQA = re.compile(r"#\s*noqa(?::\s*(?P<codes>[A-Z0-9, ]+))?", re.I)
+
+
+def _noqa_lines(source: str, code: str) -> set:
+    """Physical lines (1-based) suppressed for ``code`` (or blanket noqa)."""
+    out = set()
+    for i, line in enumerate(source.splitlines(), 1):
+        m = NOQA.search(line)
+        if not m:
+            continue
+        codes = m.group("codes")
+        if codes is None or code in codes.upper().replace(" ", "").split(","):
+            out.add(i)
+    return out
+
+
+def _names_in_string_annotation(value: str) -> set:
+    try:
+        expr = ast.parse(value, mode="eval")
+    except SyntaxError:
+        return set()
+    return {n.id for n in ast.walk(expr) if isinstance(n, ast.Name)}
+
+
+def _used_names(tree: ast.AST) -> set:
+    used = set()
+    annotations = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.AnnAssign):
+            annotations.append(node.annotation)
+        elif isinstance(node, ast.arg) and node.annotation is not None:
+            annotations.append(node.annotation)
+        elif (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and node.returns is not None):
+            annotations.append(node.returns)
+        elif (isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "__all__"
+                for t in node.targets)):
+            for elt in ast.walk(node.value):
+                if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                    used.add(elt.value)
+    # quoted annotations ("CipherParams", Optional["Schedule"]) are uses
+    for ann in annotations:
+        for sub in ast.walk(ann):
+            if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                used |= _names_in_string_annotation(sub.value)
+    return used
+
+
+def _imports_with_scope(tree: ast.AST):
+    """Yield (scope_path, import_node) — scope-aware so a function-local
+    import never collides with another function's (ruff F811 semantics)."""
+    def walk(node, scope):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.Import, ast.ImportFrom)):
+                yield scope, child
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                    ast.ClassDef)):
+                yield from walk(child, scope + (child.name,))
+            else:
+                yield from walk(child, scope)
+    yield from walk(tree, ())
+
+
+def lint_file(path: pathlib.Path) -> list:
+    source = path.read_text()
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        return [(e.lineno or 0, "E999", f"syntax error: {e.msg}")]
+    findings = []
+    if path.name == "__init__.py":
+        return findings
+    suppressed = _noqa_lines(source, "F401")
+    dup_suppressed = _noqa_lines(source, "F811")
+    used = _used_names(tree)
+    seen: dict = {}
+    for scope, node in sorted(_imports_with_scope(tree),
+                              key=lambda sn: sn[1].lineno):
+        if isinstance(node, ast.ImportFrom) and node.module == "__future__":
+            continue
+        for alias in node.names:
+            if alias.name == "*":
+                continue
+            binding = alias.asname or alias.name.split(".")[0]
+            prev = seen.get((scope, binding))
+            if (prev is not None and prev != node.lineno
+                    and node.lineno not in dup_suppressed):
+                findings.append(
+                    (node.lineno, "F811",
+                     f"redefinition of unused import {binding!r} "
+                     f"(first at line {prev})"))
+            seen.setdefault((scope, binding), node.lineno)
+            if binding not in used and node.lineno not in suppressed:
+                shown = alias.name + (f" as {alias.asname}"
+                                      if alias.asname else "")
+                findings.append(
+                    (node.lineno, "F401", f"{shown!r} imported but unused"))
+    return findings
+
+
+def main(argv) -> int:
+    roots = [pathlib.Path(a) for a in (argv or ["src"])]
+    files = sorted(f for root in roots for f in root.rglob("*.py"))
+    n = 0
+    for f in files:
+        for line, code, msg in lint_file(f):
+            print(f"{f}:{line}: {code} {msg}")
+            n += 1
+    print(f"astlint: {len(files)} files, {n} finding(s)")
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -29,6 +29,8 @@ STAGES=(
   "producer-availability|registered producers + stream-preserving sets per preset"
   "tuner-smoke|StreamPlan measure -> persist -> deterministic reload -> auto consult"
   "workflow-lint|.github/workflows/ci.yml parses (the workflow that runs this script)"
+  "lint|ruff (or scripts/astlint.py fallback) over src scripts benchmarks tests"
+  "analyze|schedule-IR static analysis matrix + snapshot drift (repro.analysis)"
   "bench-smoke|keystream farm bench canary: both variants + producer/depth sweep"
   "fast-lap|pytest -m 'not slow' (everything else; engine/schedule suites above)"
   "slow-lap|pytest -m slow: full-lane interpret-mode Pallas sweeps"
@@ -164,6 +166,26 @@ except ImportError:   # offline image without pyyaml: structural fallback
         assert needle in text, f"workflow missing {needle!r}"
     print("workflow ok (structural check; pyyaml unavailable)")
 PYEOF
+}
+
+stage_lint() {
+  # ruff when the host has it (GitHub CI installs it; ruff.toml is the
+  # config); the hermetic accelerator image has no linter and must not
+  # pip-install one, so fall back to the AST-based F401/F811/E999 subset
+  if command -v ruff >/dev/null 2>&1; then
+    ruff check src scripts benchmarks tests
+  else
+    echo "ruff not on PATH; running scripts/astlint.py fallback"
+    python scripts/astlint.py src scripts benchmarks tests
+  fi
+}
+
+stage_analyze() {
+  # full preset x variant matrix: lint errors, unproven overflow bounds,
+  # and static/paper/measured depth mismatches all fail; the checked-in
+  # snapshot gates analytic drift (measured-timing drift only warns, so a
+  # clean checkout with an empty plan cache still passes)
+  python -m repro.analysis --all --check
 }
 
 stage_bench_smoke() {

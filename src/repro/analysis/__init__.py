@@ -1,0 +1,51 @@
+"""Static analysis of `Schedule` programs (docs/DESIGN.md §13).
+
+PRs 3-5 made the cipher *data*: HERA, Rubato, and PASTA are declarative
+`core/schedule.py` programs that five engines interpret.  Correctness and
+performance properties are therefore statically derivable by walking the
+program — no runtime, no goldens, no kernel launch:
+
+  * :mod:`repro.analysis.lint` — well-formedness and safety rules beyond
+    ``Schedule.validate()``: rc-slice coverage/disjointness, orientation
+    parity, PASTA branch-shape laws, TRUNCATE/AGN placement.  Each rule is
+    a registered checker with an error code, severity, and noqa-style
+    suppression; findings carry op index + provenance.
+  * :mod:`repro.analysis.bounds` — abstract interpretation: worst-case
+    value intervals through the limb-scheme datapath, enumerated from the
+    same `crypto.modmath` constants the kernels use, PROVING uint32
+    accumulator safety for every preset x variant; plus static
+    multiplicative-depth derivation cross-checked against the
+    depth-tracked FV circuit's measured depths.
+  * :mod:`repro.analysis.cost` — analytic cost model: op counts, bytes
+    moved, and modmul intensity per program -> per-engine roofline
+    ceilings, validated against the tuner's measured `StreamPlan` timings
+    (predicted ordering must match measured ordering, tolerance-gated).
+
+One CLI drives all three::
+
+    PYTHONPATH=src python -m repro.analysis <preset> [--variant ...]
+    PYTHONPATH=src python -m repro.analysis --all --format json
+    PYTHONPATH=src python -m repro.analysis --check     # snapshot drift
+
+`scripts/ci.sh`'s ``analyze`` stage runs the full preset x variant matrix
+and fails on any lint error, unproven overflow bound, or depth mismatch.
+"""
+
+from repro.analysis.bounds import (          # noqa: F401  (public API)
+    DepthReport,
+    OverflowProof,
+    depth_report,
+    prove_overflow_safety,
+    static_depth,
+)
+from repro.analysis.cost import (            # noqa: F401
+    CostReport,
+    analyze_cost,
+    predict_engine_times,
+    validate_measured_ordering,
+)
+from repro.analysis.lint import (            # noqa: F401
+    Finding,
+    lint,
+    registered_rules,
+)

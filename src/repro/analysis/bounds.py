@@ -1,0 +1,221 @@
+"""Abstract interpretation of schedule programs: overflow proofs + depth.
+
+The limb-scheme datapath (crypto/modmath.py) never forms a value that a
+uint32 cannot hold — that is the invariant the Pallas kernel trusts
+implicitly on every preset.  This module PROVES it statically, per
+(preset, variant), by walking the schedule program and enumerating every
+worst-case intermediate bound the datapath can reach:
+
+  * the Modulus-level obligations (limb products, the shift-reduce
+    constant, add/sub operands) come from
+    :meth:`Modulus.mul_bound_sites` — enumerated from the same static
+    constants ``mul``/``add`` trace with;
+  * the per-op obligations (MRMC shift-add row accumulation with the
+    preset's actual mix-matrix rows, Feistel/cube chains, affine constant
+    adds, branch mixing, AGN signed folds) come from walking
+    ``Schedule.op_table()`` and :meth:`Modulus.accumulate_sites`, which
+    mirrors the EXACT interleaved-reduce policy `matvec_small` and the
+    mrmc kernels' ``_combine`` execute;
+  * every reduce site additionally proves the conditional-subtract chain
+    fully reduces (worst-case residual <= q,
+    :meth:`Modulus.reduce_residual_bound`) — a bound that fits uint32 but
+    doesn't reduce is still a wrong answer.
+
+Multiplicative depth is derived from the same walk (2 per Cube, 1 per
+Feistel layer; linear ops free) and cross-checked against the
+depth-tracked FV circuit's MEASURED depth (`core/transcipher.py`), so the
+paper's HERA 10 / Rubato 2 / PASTA r+1 claims are pinned from two
+independent directions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core import schedule as S
+from repro.core.params import CipherParams
+from repro.core.schedule import Schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteCheck:
+    """One discharged (or violated) proof obligation at a datapath site."""
+
+    provenance: str   # op_table provenance or "modulus q=..."
+    site: str         # BoundSite.site
+    bound: int        # worst-case value reached
+    limit: int        # envelope (2^32 for u32 fit; q for residuals)
+    ok: bool
+    margin_bits: float
+
+    def render(self) -> str:
+        mark = "ok " if self.ok else "FAIL"
+        return (f"  [{mark}] {self.provenance} :: {self.site}: "
+                f"bound {self.bound} <= {self.limit} "
+                f"(margin {self.margin_bits:+.2f} bits)")
+
+
+@dataclasses.dataclass(frozen=True)
+class OverflowProof:
+    """The full obligation list for one (preset, variant) program."""
+
+    schedule: str
+    q: int
+    checks: Tuple[SiteCheck, ...]
+
+    @property
+    def proved(self) -> bool:
+        return all(c.ok for c in self.checks)
+
+    @property
+    def min_margin_bits(self) -> float:
+        return min(c.margin_bits for c in self.checks)
+
+    @property
+    def tightest(self) -> SiteCheck:
+        return min(self.checks, key=lambda c: c.margin_bits)
+
+    def failures(self) -> Tuple[SiteCheck, ...]:
+        return tuple(c for c in self.checks if not c.ok)
+
+
+def _wrap(provenance: str, sites) -> list:
+    return [SiteCheck(provenance=provenance, site=s.site, bound=s.bound,
+                      limit=s.limit, ok=s.ok, margin_bits=s.margin_bits)
+            for s in sites]
+
+
+def _site(mod, provenance: str, name: str, bound: int) -> list:
+    """A u32-fit obligation plus its reduce-completeness obligation."""
+    from repro.crypto.modmath import BoundSite
+
+    return _wrap(provenance, (
+        BoundSite(site=name, bound=bound, limit=2**32),
+        BoundSite(site=name + " (residual)",
+                  bound=mod.reduce_residual_bound(bound), limit=mod.q),
+    ))
+
+
+def prove_overflow_safety(params: CipherParams,
+                          schedule: Optional[Schedule] = None,
+                          variant: str = "normal") -> OverflowProof:
+    """Prove every intermediate of ``schedule`` fits uint32 and reduces.
+
+    The walk visits each op once; MRMC obligations use the preset's actual
+    mix matrix rows (deduplicated — the circulant family repeats rows), so
+    the proof covers exactly the accumulation schedule
+    ``mrmc_matrix_apply`` unrolls.  Orientation never changes bounds (a
+    flip is a relabeling), so one proof covers what both orientations of
+    an op compute — but the variant is still walked op-for-op so
+    provenance matches the program that ships.
+    """
+    if schedule is None:
+        schedule = params.schedule(variant)
+    mod = params.mod
+    q = mod.q
+    checks: list = []
+
+    # Modulus-level obligations: limb products, shift-reduce, add/sub.
+    checks += _wrap(f"modulus q={q} (L={mod.L}, R={mod.R})",
+                    mod.mul_bound_sites())
+
+    mat = params.mix_matrix()
+    rows = {tuple(int(c) for c in row) for row in mat}
+
+    for info in schedule.op_table():
+        op = info.op
+        prov = info.provenance
+        if isinstance(op, S.ARK):
+            # x + (k (.) rc): both mul output and x are < q
+            checks += _site(mod, prov, "ark: x + k*rc operands", 2 * q)
+        elif isinstance(op, S.MRMC):
+            # two shift-add matvec passes (MixColumns then MixRows) per
+            # branch run the same row set; bounds are per-row
+            for row in sorted(rows):
+                checks += _wrap(prov, mod.accumulate_sites(
+                    row, site=f"mrmc row {list(row)}"))
+            if op.has_rc:
+                checks += _site(mod, prov, "affine: matrix_out + rc", 2 * q)
+            if op.mix_branches:
+                checks += _site(mod, prov, "branch mix: s = L + R", 2 * q)
+                checks += _site(mod, prov, "branch mix: s + L (and s + R)",
+                                2 * q)
+        elif isinstance(op, S.NONLINEAR):
+            if op.kind == "cube":
+                # x^3 = mul(mul(x, x), x): both muls take [0, q) operands,
+                # so the modulus-level mul obligations cover them; record
+                # the chaining fact explicitly.
+                checks += _site(mod, prov,
+                                "cube: mul(mul(x,x),x) final sum", 3 * q)
+            else:
+                checks += _site(mod, prov, "feistel: x + shift(x^2)", 2 * q)
+        elif isinstance(op, S.AGN):
+            # signed noise e with |e| < q folded to [0, 2q) then reduced,
+            # then added to the state
+            checks += _site(mod, prov, "agn: signed fold e + q", 2 * q)
+            checks += _site(mod, prov, "agn: x + e_folded", 2 * q)
+    return OverflowProof(schedule=schedule.name, q=q, checks=tuple(checks))
+
+
+# ==========================================================================
+# Multiplicative depth
+# ==========================================================================
+#: paper depth laws per cipher kind, as a function of rounds r
+PAPER_DEPTH = {
+    "hera": lambda r: 2 * r,        # Cube = depth 2 per round (10 @ r=5)
+    "rubato": lambda r: r,          # Feistel = depth 1 per round (2 @ r=2)
+    "pasta": lambda r: r + 1,       # (r-1) Feistel + final Cube
+}
+
+
+def static_depth(schedule: Schedule) -> int:
+    """Multiplicative depth derived by walking the program: ct x ct
+    multiplies happen only in the nonlinear layers (ARK's k*rc is
+    plaintext-by-ciphertext in the FV accounting; the linear layers are
+    depth-free), and the state flows through every layer sequentially —
+    so depth is simply the sum of per-layer depths."""
+    depth = 0
+    for op in schedule.ops:
+        if isinstance(op, S.NONLINEAR):
+            depth += 2 if op.kind == "cube" else 1
+    return depth
+
+
+@dataclasses.dataclass(frozen=True)
+class DepthReport:
+    """Static vs paper-law vs measured multiplicative depth."""
+
+    schedule: str
+    static: int
+    paper: int
+    measured: Optional[int]    # None = measurement skipped
+
+    @property
+    def ok(self) -> bool:
+        if self.static != self.paper:
+            return False
+        return self.measured is None or self.measured == self.static
+
+    def render(self) -> str:
+        m = "-" if self.measured is None else str(self.measured)
+        mark = "ok" if self.ok else "MISMATCH"
+        return (f"depth {self.schedule}: static={self.static} "
+                f"paper={self.paper} measured={m} [{mark}]")
+
+
+def depth_report(params: CipherParams, variant: str = "normal",
+                 measure: bool = True) -> DepthReport:
+    """Derive the static depth and cross-check it both against the paper
+    law for the cipher kind and (unless ``measure=False``) against the
+    depth the FV circuit actually accumulates on one block."""
+    sched = params.schedule(variant)
+    static = static_depth(sched)
+    paper = PAPER_DEPTH[params.kind](params.rounds)
+    measured = None
+    if measure:
+        from repro.core.transcipher import measured_depth
+
+        measured = measured_depth(params)
+    return DepthReport(schedule=sched.name, static=static, paper=paper,
+                       measured=measured)

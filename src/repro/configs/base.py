@@ -10,8 +10,7 @@ groups with stacked parameters, keeping HLO size O(1) in depth.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 

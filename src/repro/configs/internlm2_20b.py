@@ -1,7 +1,7 @@
 """internlm2-20b [dense]: 48L d6144 48H (GQA kv=8) ff16384 v92544.
 [arXiv:2403.17297; hf]"""
 
-from repro.configs.base import LayerSpec, ModelConfig, register
+from repro.configs.base import ModelConfig, register
 
 FULL = ModelConfig(
     name="internlm2-20b",

@@ -42,7 +42,6 @@ import dataclasses
 from collections import deque
 from typing import Any, Iterable, Iterator, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -171,6 +171,35 @@ class AGN(Op):
     """
 
 
+@dataclasses.dataclass(frozen=True)
+class OpInfo:
+    """Static per-op facts from one walk of the program.
+
+    The shared substrate for the `repro.analysis` passes: each entry
+    records the state the *chain* is actually in when the op fires
+    (``chain_orientation`` — propagated through MRMC flips, which is what
+    the op's own ``orientation`` annotation must match) plus the state
+    width flowing in and out (TRUNCATE shrinks it).  ``provenance`` is the
+    human-readable site string analyzers attach to findings.
+    """
+
+    index: int
+    op: Op
+    in_width: int
+    out_width: int
+    chain_orientation: str   # orientation the chain delivers to this op
+    out_orientation: str     # orientation the chain is in after this op
+    provenance: str          # "hera-128a/alternating ops[3] NONLINEAR(cube)"
+
+
+def _op_label(op: Op) -> str:
+    if isinstance(op, NONLINEAR):
+        return f"NONLINEAR({op.kind})"
+    if isinstance(op, MRMC) and op.has_rc:
+        return "MRMC(affine)"
+    return type(op).__name__
+
+
 # ==========================================================================
 # Schedule
 # ==========================================================================
@@ -187,6 +216,9 @@ class Schedule:
     ops: Tuple[Op, ...]
     branches: int = 1  # PASTA: 2 independent (v, v) branch matrices
     init: str = "ic"   # initial state: "ic" (public constant) | "key"
+    #: `repro.analysis.lint` rule codes suppressed for this program (the
+    #: `# noqa`-style escape hatch; docs/DESIGN.md §13 on when it is OK)
+    suppress: Tuple[str, ...] = ()
 
     # ---- derived accounting (the single source of truth) -----------------
     @property
@@ -233,6 +265,35 @@ class Schedule:
                 perm[a:b] = a + tp[: b - a]
                 changed = True
         return perm if changed else None
+
+    # ---- analysis substrate ---------------------------------------------
+    def op_table(self) -> Tuple[OpInfo, ...]:
+        """One walk of the program -> per-op static facts (:class:`OpInfo`).
+
+        Never raises on malformed programs — the linter
+        (`repro.analysis.lint`) diagnoses those, and it needs the walk to
+        keep going past the first inconsistency: the chain orientation is
+        propagated through MRMC ``out_orientation`` regardless of whether
+        the op's own annotation matched, and TRUNCATE narrows the width
+        even when ``keep`` is nonsensical (clamped at >= 0).
+        """
+        rows = []
+        cur = NORMAL
+        width = self.n
+        for i, op in enumerate(self.ops):
+            out_w = width
+            out_o = cur
+            if isinstance(op, MRMC):
+                out_o = op.out_orientation
+            elif isinstance(op, TRUNCATE):
+                out_w = max(0, min(width, op.keep))
+            rows.append(OpInfo(
+                index=i, op=op, in_width=width, out_width=out_w,
+                chain_orientation=cur, out_orientation=out_o,
+                provenance=f"{self.name} ops[{i}] {_op_label(op)}",
+            ))
+            cur, width = out_o, out_w
+        return tuple(rows)
 
     # ---- validation ------------------------------------------------------
     def validate(self) -> "Schedule":

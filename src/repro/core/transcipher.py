@@ -138,6 +138,23 @@ def evaluate_decryption_circuit(cipher: Cipher, block_ctrs):
     return x.value, x.depth
 
 
+def measured_depth(params: CipherParams, seed: int = 0) -> int:
+    """Multiplicative depth the depth-tracked circuit ACTUALLY accumulates,
+    measured by running :func:`evaluate_decryption_circuit` on one block.
+
+    The executable half of the depth cross-check: `repro.analysis.bounds`
+    derives the same number statically from the schedule program (2 per
+    Cube, 1 per Feistel layer) and CI fails if the two ever disagree —
+    a drifted executor or a drifted analyzer, either way a real bug.
+    """
+    from repro.core.cipher import make_cipher
+
+    ci = make_cipher(params.name, seed=seed)
+    _, depth = evaluate_decryption_circuit(
+        ci, jnp.arange(1, dtype=jnp.uint32))
+    return int(depth)
+
+
 def transcipher(cipher: Cipher, c, block_ctrs, delta: float = 1024.0):
     """Server-side transciphering: symmetric ciphertext -> "CKKS slots".
 

@@ -51,7 +51,7 @@ import jax
 import numpy as np
 
 from repro.core.cipher import CipherBatch
-from repro.core.engine import engine_caps, resolve_engine
+from repro.core.engine import engine_caps
 from repro.core.farm import KeystreamFarm, pack_windows
 from repro.core.params import CipherParams, get_params
 from repro.core.producer import compatible_producers, producer_caps
@@ -178,12 +178,18 @@ def _plan_is_valid(plan: StreamPlan, params: CipherParams, *,
 
 
 def save_plan(params: Union[CipherParams, str], lanes: int, plan: StreamPlan,
-              p50_ms: float, cache_path=None) -> pathlib.Path:
+              p50_ms: float, cache_path=None,
+              measurements: Optional[List[dict]] = None) -> pathlib.Path:
     """Persist a measured plan (with its measurement, as metadata).
 
     Entries are stamped with the current ``PLAN_SCHEMA`` so a later
     semantics bump invalidates them on load instead of letting a
-    stale-semantics measurement steer the new code.
+    stale-semantics measurement steer the new code.  ``measurements``
+    (optional) is the full per-candidate timing table from the autotune
+    lap — plan fields + ``p50_ms`` per candidate — stored as entry
+    metadata so the analytic cost model (`repro.analysis.cost`) can
+    validate its predicted ordering against what was actually measured,
+    not just against the single winner.
     """
     params = _coerce_params(params)
     path = pathlib.Path(cache_path) if cache_path else default_cache_path()
@@ -192,6 +198,10 @@ def save_plan(params: Union[CipherParams, str], lanes: int, plan: StreamPlan,
     entry.update({"schema": PLAN_SCHEMA, "p50_ms": float(p50_ms),
                   "measured_at": time.time(),
                   "backend": jax.default_backend()})
+    if measurements:
+        entry["measurements"] = [
+            {**m, "p50_ms": float(m["p50_ms"])} for m in measurements
+        ]
     data["plans"][cache_key(params, lanes)] = entry
     _write_cache(path, data)
     return path
@@ -258,6 +268,53 @@ def load_plan(params: Union[CipherParams, str], lanes: Optional[int] = None,
         return None
     target = lanes if lanes is not None else max(n for n, _ in candidates)
     candidates.sort(key=lambda np_: (abs(np_[0] - target), np_[0]))
+    return candidates[0][1]
+
+
+def load_measurements(params: Union[CipherParams, str],
+                      lanes: Optional[int] = None,
+                      cache_path=None) -> List[dict]:
+    """The per-candidate timing table persisted by the last autotune lap
+    for (preset, lanes) on this host — ``[]`` when nothing was measured.
+
+    Each row is a plan's JSON fields plus its measured ``p50_ms``.  Unlike
+    :func:`load_plan` this returns raw measurements (it does not validate
+    backend availability — a measurement stays a fact about the lap that
+    produced it), but stale-``PLAN_SCHEMA`` entries are still ignored:
+    timings taken under changed backend semantics must not validate the
+    current cost model.  With ``lanes=None`` the nearest tuned lane count
+    is used, matching :func:`load_plan`'s fallback.
+    """
+    params = _coerce_params(params)
+    path = pathlib.Path(cache_path) if cache_path else default_cache_path()
+    plans = _read_cache(path)["plans"]
+
+    def _rows(entry) -> List[dict]:
+        if entry is None or _entry_schema(entry) != PLAN_SCHEMA:
+            return []
+        rows = entry.get("measurements", [])
+        return [r for r in rows if isinstance(r, dict) and "p50_ms" in r]
+
+    exact = _rows(plans.get(cache_key(params, lanes)))
+    if exact:
+        return exact
+    prefix = f"{params.name}|lanes="
+    suffix = f"|noise={params.n_noise}|host={host_fingerprint()}"
+    candidates: List[Tuple[int, List[dict]]] = []
+    for key, entry in plans.items():
+        if not (key.startswith(prefix) and key.endswith(suffix)):
+            continue
+        try:
+            lane_n = int(key[len(prefix): len(key) - len(suffix)])
+        except ValueError:
+            continue
+        rows = _rows(entry)
+        if rows:
+            candidates.append((lane_n, rows))
+    if not candidates:
+        return []
+    target = lanes if lanes is not None else max(n for n, _ in candidates)
+    candidates.sort(key=lambda nr: (abs(nr[0] - target), nr[0]))
     return candidates[0][1]
 
 
@@ -383,15 +440,18 @@ def autotune(params: Union[CipherParams, str], lanes: int, *,
         raise RuntimeError("no candidate StreamPlans (empty grid?)")
     best: Optional[StreamPlan] = None
     best_p50 = float("inf")
+    measurements: List[dict] = []
     for plan in plans:
         p50 = measure_plan(params, plan, lanes, sessions=sessions,
                            n_windows=n_windows, reps=reps, mesh=mesh,
                            axis=axis)
+        measurements.append({**plan.to_json(), "p50_ms": p50 * 1e3})
         if verbose:
             print(f"[tuner] {plan.describe():60s} p50={p50 * 1e3:8.3f} ms")
         if p50 < best_p50:
             best, best_p50 = plan, p50
-    path = save_plan(params, lanes, best, best_p50 * 1e3, cache_path)
+    path = save_plan(params, lanes, best, best_p50 * 1e3, cache_path,
+                     measurements=measurements)
     if verbose:
         print(f"[tuner] winner: {best.describe()} "
               f"(p50={best_p50 * 1e3:.3f} ms) -> {path}")

@@ -30,6 +30,30 @@ import numpy as np
 U32 = jnp.uint32
 
 
+@dataclasses.dataclass(frozen=True)
+class BoundSite:
+    """One static proof obligation: a worst-case value ``bound`` at a named
+    datapath site that must stay within ``limit`` (2^32 for uint32 fit;
+    q for post-reduce residuals).  Enumerated by
+    :meth:`Modulus.mul_bound_sites` / :meth:`Modulus.accumulate_sites` and
+    consumed by `repro.analysis.bounds`."""
+
+    site: str
+    bound: int
+    limit: int
+
+    @property
+    def ok(self) -> bool:
+        return self.bound <= self.limit
+
+    @property
+    def margin_bits(self) -> float:
+        """Headroom in bits (negative = violated)."""
+        if self.bound <= 0:
+            return float("inf")
+        return math.log2(self.limit) - math.log2(self.bound)
+
+
 def _is_prime(n: int) -> bool:
     if n < 2:
         return False
@@ -92,23 +116,54 @@ class Modulus:
         return (1 << (2 * self.L)) % self.q
 
     # ---- reduction helpers ---------------------------------------------
-    def reduce(self, x, bound: int):
-        """Reduce x (values < bound) into [0, q) with conditional subtracts.
+    def reduce_steps(self, bound: int) -> tuple:
+        """The static multiples m of q the conditional-subtract chain in
+        :meth:`reduce` fires for operands < ``bound``, largest first.
 
-        ``bound`` is a static Python int.  Uses ceil(log2(bound/q)) steps,
-        each subtracting the largest power-of-two multiple of q that can
-        still be present.
+        This IS the chain `reduce` executes (it consults this helper), so
+        the static-analysis proof over these steps
+        (`repro.analysis.bounds`) describes the shipped datapath, not a
+        model of it.
         """
         q = self.q
         k = (bound + q - 1) // q  # x < k*q
         m = 1
         while m * 2 < k:
             m *= 2
+        steps = []
         # subtract m*q, m/2*q, ..., q
         while m >= 1:
-            mq = jnp.uint32(m * q)
-            x = jnp.where(x >= mq, x - mq, x)
+            steps.append(m)
             m //= 2
+        return tuple(steps)
+
+    def reduce_residual_bound(self, bound: int) -> int:
+        """Exact worst-case value bound after :meth:`reduce` on operands
+        < ``bound`` — an interval walk of the conditional-subtract chain.
+
+        Full reduction means the result is <= q, i.e. values land in
+        [0, q); `repro.analysis.bounds` asserts that (and that ``bound``
+        itself fits uint32) for every static reduce site in the cipher
+        datapath.
+        """
+        b = bound
+        for m in self.reduce_steps(bound):
+            mq = m * self.q
+            if b > mq:
+                # values >= mq drop to < b - mq; values < mq are untouched
+                b = max(mq, b - mq)
+        return b
+
+    def reduce(self, x, bound: int):
+        """Reduce x (values < bound) into [0, q) with conditional subtracts.
+
+        ``bound`` is a static Python int.  Uses ceil(log2(bound/q)) steps,
+        each subtracting the largest power-of-two multiple of q that can
+        still be present (the step schedule is :meth:`reduce_steps`).
+        """
+        for m in self.reduce_steps(bound):
+            mq = jnp.uint32(m * self.q)
+            x = jnp.where(x >= mq, x - mq, x)
         return x
 
     # ---- arithmetic ------------------------------------------------------
@@ -198,6 +253,72 @@ class Modulus:
             outs.append(self.reduce(acc, bound))
         y = jnp.stack(outs, axis=-1)
         return jnp.moveaxis(y, -1, axis)
+
+    # ---- static bound enumeration (repro.analysis substrate) -----------
+    def mul_bound_sites(self) -> tuple:
+        """Every static intermediate bound `mul` (and thus square/cube)
+        reaches, as :class:`BoundSite` records — the uint32-overflow proof
+        obligations of the limb scheme, enumerated from the same constants
+        the datapath uses.
+
+        For each reduce call two obligations are emitted: the operand
+        bound must fit uint32, and the conditional-subtract chain must
+        fully reduce it (worst-case residual <= q,
+        :meth:`reduce_residual_bound`).
+        """
+        two_l = 1 << (2 * self.L)
+        shift_t = (1 << self.L) * self.R + two_l
+        sites = []
+        for name, bound in (
+            ("mul:p0 = xl*yl", two_l),
+            ("mul:p1 = xl*yh + xh*yl", 2 * two_l),
+            ("mul:p2 = xh*yh", two_l),
+            ("mul:shiftL t = a*R + (b<<L)", shift_t),
+            ("mul:p0 + p1*2^L + p2*2^2L", 3 * self.q),
+            ("add:x + y", 2 * self.q),
+            ("sub:x + q - y", 2 * self.q),
+        ):
+            sites.append(BoundSite(site=name, bound=bound, limit=2**32))
+            sites.append(BoundSite(site=name + " (residual)",
+                                   bound=self.reduce_residual_bound(bound),
+                                   limit=self.q))
+        return tuple(sites)
+
+    def accumulate_sites(self, coeffs, site: str = "matvec") -> tuple:
+        """Worst-case accumulator bound walk for one shift-add row sum.
+
+        ``coeffs`` is one row of a small-constant mix matrix.  Mirrors the
+        EXACT interleaved-reduce policy shared by :meth:`matvec_small` and
+        the mrmc kernels' ``_combine``: each term is ``mul_small``-scaled
+        (an add chain bounded by c*q, then reduced), and the running sum
+        reduces to < q whenever the next add could reach 2^32.  Returns
+        one :class:`BoundSite` per scaled term, one for the accumulator
+        peak, and one for the final residual.
+        """
+        sites = []
+        bound = 0
+        peak = 0
+        for j, c in enumerate(coeffs):
+            c = int(c)
+            if c == 0:
+                continue
+            if c > 1:
+                sites.append(BoundSite(site=f"{site}:term[{j}] {c}*x add "
+                                            f"chain", bound=c * self.q,
+                                       limit=2**32))
+            if bound == 0:
+                bound = self.q
+            else:
+                if bound + self.q >= 2**32:
+                    bound = self.q    # interleaved reduce fires
+                bound += self.q
+            peak = max(peak, bound)
+        sites.append(BoundSite(site=f"{site}:accumulator peak",
+                               bound=peak, limit=2**32))
+        sites.append(BoundSite(site=f"{site}:row residual",
+                               bound=self.reduce_residual_bound(peak),
+                               limit=self.q))
+        return tuple(sites)
 
     def from_signed(self, e):
         """Map signed int32 values (|e| < q) into [0, q)."""

@@ -34,7 +34,6 @@ as primitive accessors for direct XOF tests.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

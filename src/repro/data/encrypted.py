@@ -27,14 +27,11 @@ consumes whichever streaming interface a source provides.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.core.cipher import Cipher, CipherBatch, StreamSession
 from repro.core.farm import KeystreamFarm, WindowPlan
 

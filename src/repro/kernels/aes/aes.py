@@ -14,7 +14,6 @@ Layout: lane-major (16 state bytes on sublanes, CTR lanes on vector lanes).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

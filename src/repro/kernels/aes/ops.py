@@ -6,7 +6,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.aes.aes import BLK, aes_ctr_pallas
 

@@ -25,9 +25,8 @@ import traceback
 from collections import Counter
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs.base import get_config, list_archs
+from repro.configs.base import get_config
 from repro.launch import cells as C
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
@@ -115,7 +114,6 @@ def lower_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False):
         if not cfg.causal:
             # encoder-only: "prefill" is a full forward (no cache)
             from repro.train.train_loop import batch_specs, _shard
-            from jax.sharding import NamedSharding, PartitionSpec as P
             pspecs = M.param_specs(cfg, policy)
             bspecs = batch_specs(cfg, policy, train=False)
             fn = jax.jit(

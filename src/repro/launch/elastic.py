@@ -16,8 +16,7 @@ promotion), which this module's `ElasticPlan` encodes.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import numpy as np

@@ -39,12 +39,11 @@ import json
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import get_config
 from repro.launch import cells as C
-from repro.launch.dryrun import collective_bytes, lower_cell
+from repro.launch.dryrun import collective_bytes
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
 from repro.models.sharding import make_policy

@@ -16,7 +16,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import get_config
 from repro.data.encrypted import EncryptedSource, make_decryptor

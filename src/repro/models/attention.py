@@ -10,9 +10,7 @@ blocks in f32.
 
 from __future__ import annotations
 
-import functools
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

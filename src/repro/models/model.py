@@ -19,7 +19,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.models import attention as A

@@ -8,11 +8,8 @@ and heads over tp_a."""
 
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig

@@ -17,8 +17,6 @@ collective graph.
 
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

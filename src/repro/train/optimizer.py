@@ -9,8 +9,6 @@ for v (v >= 0 so we store sqrt(v) scaled, which also improves precision).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

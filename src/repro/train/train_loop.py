@@ -7,9 +7,7 @@ fused into the input pipeline)."""
 
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +16,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.sharding import ShardingPolicy
-from repro.train.optimizer import OptConfig, adamw_update, init_opt_state, opt_state_specs
+from repro.train.optimizer import OptConfig, adamw_update, opt_state_specs
 
 
 def batch_specs(cfg: ModelConfig, policy: ShardingPolicy, *, train: bool = True):

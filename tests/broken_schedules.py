@@ -1,0 +1,115 @@
+"""Malformed-schedule fixtures shared by test_schedule and test_analysis.
+
+Each builder perturbs a real preset program into one specific illegal
+shape.  The contract under test is two-sided: ``Schedule.validate()``
+must REFUSE the program (ValueError matching ``validate_match``) and the
+static linter must DIAGNOSE it (a finding with ``lint_code``) — the
+executor gate and the reviewer gate agree on what a well-formed program
+is.
+"""
+
+import dataclasses
+
+from repro.core import build_schedule
+from repro.core import schedule as S
+from repro.core.params import get_params
+
+
+def _replace_op(sched, index, **fields):
+    ops = list(sched.ops)
+    ops[index] = dataclasses.replace(ops[index], **fields)
+    return dataclasses.replace(sched, ops=tuple(ops))
+
+
+def rc_slice_gap():
+    """First ARK's constants start at 16, leaving rc[0:16] unconsumed."""
+    sched = build_schedule(get_params("hera-128a"))
+    i = next(i for i, op in enumerate(sched.ops) if isinstance(op, S.ARK))
+    a, b = sched.ops[i].rc_slice
+    broken = _replace_op(sched, i, rc_slice=(a + 16, b + 16))
+    return broken, "SA101", "inconsistent"
+
+
+def rc_slice_overlap():
+    """Final ARK re-reads the previous ARK's constants."""
+    sched = build_schedule(get_params("hera-128a"))
+    i = max(i for i, op in enumerate(sched.ops) if isinstance(op, S.ARK))
+    a, b = sched.ops[i].rc_slice
+    broken = _replace_op(sched, i, rc_slice=(a - 16, b - 16))
+    return broken, "SA101", "inconsistent"
+
+
+def rc_slice_wrong_width():
+    """ARK slice narrower than its key_len / the state width."""
+    sched = build_schedule(get_params("hera-128a"))
+    i = next(i for i, op in enumerate(sched.ops) if isinstance(op, S.ARK))
+    a, b = sched.ops[i].rc_slice
+    broken = _replace_op(sched, i, rc_slice=(a, b - 4))
+    return broken, "SA102", "inconsistent"
+
+
+def affine_rc_wrong_width():
+    """PASTA affine layer consuming half a state's worth of constants."""
+    sched = build_schedule(get_params("pasta-128s"))
+    i = next(i for i, op in enumerate(sched.ops)
+             if isinstance(op, S.MRMC) and op.has_rc)
+    a, b = sched.ops[i].rc_slice
+    broken = _replace_op(sched, i, rc_slice=(a, a + (b - a) // 2))
+    return broken, "SA102", "affine MRMC .* inconsistent"
+
+
+def orientation_chain_break():
+    """Final ARK claims transposed state without an MRMC flip before it."""
+    sched = build_schedule(get_params("hera-128a"), "alternating")
+    broken = _replace_op(sched, len(sched.ops) - 1,
+                         orientation=S.TRANSPOSED)
+    return broken, "SA103", "expects transposed"
+
+
+def ends_transposed():
+    """A trailing flip that nothing undoes: the program ends transposed."""
+    sched = build_schedule(get_params("hera-128a"))
+    ops = sched.ops + (S.MRMC(out_orientation=S.TRANSPOSED),)
+    broken = dataclasses.replace(sched, ops=ops)
+    return broken, "SA104", "must end normal"
+
+
+def truncate_transposed():
+    """TRUNCATE applied to a transposed state (row-major slice would cut
+    across logical columns)."""
+    sched = build_schedule(get_params("hera-128a"))
+    ops = sched.ops + (
+        S.MRMC(out_orientation=S.TRANSPOSED),
+        S.TRUNCATE(orientation=S.TRANSPOSED, keep=sched.l),
+    )
+    broken = dataclasses.replace(sched, ops=ops)
+    return broken, "SA105", "TRUNCATE needs normal"
+
+
+def branch_mix_without_branches():
+    """mix_branches on a single-branch (HERA) program."""
+    sched = build_schedule(get_params("hera-128a"))
+    i = next(i for i, op in enumerate(sched.ops) if isinstance(op, S.MRMC))
+    broken = _replace_op(sched, i, mix_branches=True)
+    return broken, "SA107", "mixes branches"
+
+
+def unknown_init():
+    """init must be 'ic' (public constant) or 'key' (PASTA)."""
+    sched = build_schedule(get_params("pasta-128s"))
+    broken = dataclasses.replace(sched, init="nonce")
+    return broken, "SA107", "unknown init"
+
+
+#: (builder, name) in one place so both suites parametrize identically
+ALL = [
+    (rc_slice_gap, "rc-slice-gap"),
+    (rc_slice_overlap, "rc-slice-overlap"),
+    (rc_slice_wrong_width, "rc-slice-wrong-width"),
+    (affine_rc_wrong_width, "affine-rc-wrong-width"),
+    (orientation_chain_break, "orientation-chain-break"),
+    (ends_transposed, "ends-transposed"),
+    (truncate_transposed, "truncate-transposed"),
+    (branch_mix_without_branches, "branch-mix-without-branches"),
+    (unknown_init, "unknown-init"),
+]

@@ -1,0 +1,267 @@
+"""Static-analysis suite (src/repro/analysis/, docs/DESIGN.md §13).
+
+Four claims under test:
+
+  * the LINTER diagnoses every malformed-program fixture that
+    ``Schedule.validate()`` refuses (tests/broken_schedules.py is the
+    shared catalog) — with rule codes, provenance, and working
+    suppression — and every registered preset x variant lints clean;
+  * the OVERFLOW PROOF discharges every uint32-fit and
+    reduce-completeness obligation on every preset x variant, and
+    actually fails on a genuinely unsafe accumulation;
+  * the DEPTH derivation matches the paper laws (HERA 2r, Rubato r,
+    PASTA r+1) statically everywhere and the measured FV-circuit depth
+    where we spend the compile;
+  * the COST model is orientation-invariant, and its predicted
+    per-engine ordering matches measured StreamPlan tables
+    (tolerance-gated; synthetic tables here, the real cached lap in the
+    `analyze` CI stage).
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from broken_schedules import ALL as BROKEN
+from repro.analysis.lint import ERROR as LINT_ERROR
+from repro.analysis.lint import lint as run_lint
+from repro.analysis.lint import registered_rules
+from repro.analysis.bounds import (
+    PAPER_DEPTH,
+    depth_report,
+    prove_overflow_safety,
+    static_depth,
+)
+from repro.analysis.cost import (
+    MachineModel,
+    analyze_cost,
+    predict_engine_times,
+    validate_measured_ordering,
+)
+from repro.core.params import REGISTRY, get_params
+from repro.core.schedule import VARIANTS
+
+MATRIX = [(n, v) for n in sorted(REGISTRY) for v in VARIANTS]
+
+
+def _errors(findings):
+    return [f for f in findings if f.severity == LINT_ERROR]
+
+
+# ==========================================================================
+# Linter
+# ==========================================================================
+@pytest.mark.parametrize("name,variant", MATRIX)
+def test_registry_programs_lint_clean(name, variant):
+    sched = get_params(name).schedule(variant)
+    findings = run_lint(sched)
+    assert not _errors(findings), [f.render() for f in findings]
+
+
+@pytest.mark.parametrize(
+    "build", [b for b, _ in BROKEN], ids=[n for _, n in BROKEN])
+def test_linter_diagnoses_what_validate_refuses(build):
+    broken, code, _ = build()
+    findings = _errors(run_lint(broken))
+    codes = {f.code for f in findings}
+    assert code in codes, (
+        f"expected {code} in {sorted(codes)}: "
+        + "; ".join(f.render() for f in findings))
+    # findings point at the program, not just at a boolean
+    assert all(f.provenance or f.op_index is None for f in findings)
+
+
+@pytest.mark.parametrize(
+    "build", [b for b, _ in BROKEN], ids=[n for _, n in BROKEN])
+def test_suppression_hides_exactly_the_listed_rule(build):
+    import dataclasses
+
+    broken, code, _ = build()
+    remaining = {f.code for f in _errors(run_lint(broken, suppress=[code]))}
+    assert code not in remaining
+    # the schedule's own noqa field works the same way
+    marked = dataclasses.replace(broken, suppress=(code,))
+    assert code not in {f.code for f in _errors(run_lint(marked))}
+
+
+def test_unknown_suppression_code_rejected():
+    sched = get_params("hera-128a").schedule()
+    with pytest.raises(ValueError, match="unknown lint rule code"):
+        run_lint(sched, suppress=["SA999"])
+
+
+def test_rule_catalog_registered():
+    codes = {r.code for r in registered_rules()}
+    assert {"SA101", "SA102", "SA103", "SA104", "SA105", "SA106",
+            "SA107", "SA108", "SA109", "SA201"} <= codes
+
+
+# ==========================================================================
+# Overflow proofs
+# ==========================================================================
+@pytest.mark.parametrize("name,variant", MATRIX)
+def test_overflow_proved_everywhere(name, variant):
+    params = get_params(name)
+    proof = prove_overflow_safety(params, variant=variant)
+    assert proof.proved, "\n".join(c.render() for c in proof.failures())
+    assert proof.min_margin_bits >= 0
+    # the proof is not vacuous: it discharged real per-op obligations
+    assert len(proof.checks) > 50
+    provs = {c.provenance for c in proof.checks}
+    assert any("MRMC" in p for p in provs)
+    assert any("NONLINEAR" in p for p in provs)
+
+
+def test_unsafe_accumulation_actually_fails():
+    """A mix coefficient big enough that c*q overflows uint32 must be
+    caught — the proof machinery can say no."""
+    mod = get_params("hera-128a").mod
+    sites = mod.accumulate_sites((2**7, 1), site="synthetic row")
+    assert not all(s.ok for s in sites)
+
+
+def test_reduce_residual_bound_matches_runtime_semantics():
+    """The residual walk is exact for the bounds the datapath uses: a
+    value bounded by k*q conditional-subtracts down to a canonical
+    residue for every k the programs produce."""
+    mod = get_params("rubato-128l").mod
+    for k in (2, 3, 4, 8):
+        assert mod.reduce_residual_bound(k * mod.q) <= mod.q
+
+
+# ==========================================================================
+# Depth
+# ==========================================================================
+@pytest.mark.parametrize("name,variant", MATRIX)
+def test_static_depth_matches_paper_law(name, variant):
+    params = get_params(name)
+    sched = params.schedule(variant)
+    assert static_depth(sched) == PAPER_DEPTH[params.kind](params.rounds)
+
+
+def test_depth_report_cross_checks_measured_circuit():
+    rep = depth_report(get_params("hera-128a"), measure=True)
+    assert rep.ok and rep.measured == rep.static == rep.paper == 10
+
+
+# ==========================================================================
+# Cost model
+# ==========================================================================
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_cost_is_orientation_invariant(name):
+    """Eq. 2 makes flips free relabelings, so both variants of a preset
+    must cost identically — the analytic model encodes that claim."""
+    params = get_params(name)
+    normal = analyze_cost(params, variant="normal")
+    alt = analyze_cost(params, variant="alternating")
+    assert normal.to_json() == {**alt.to_json(),
+                                "schedule": normal.schedule}
+    assert normal.modmul > 0 and normal.bytes_per_lane > 0
+    assert normal.call_sites > 0
+
+
+def test_cost_tracks_program_scale():
+    """More rounds / bigger state -> strictly more work."""
+    small = analyze_cost(get_params("pasta-128s"))
+    large = analyze_cost(get_params("pasta-128l"))
+    assert large.modadd > small.modadd
+    assert large.bytes_per_lane > small.bytes_per_lane
+
+
+def test_predicted_ordering_is_stable_on_cpu():
+    """jax (fused jit) beats ref (eager per-site dispatch) beats
+    pallas-interpret (interpreter) under the cpu machine model — the
+    ordering the `analyze` CI stage validates against real measurements."""
+    machine = MachineModel.for_backend("cpu")
+    preds = predict_engine_times(get_params("rubato-128s"), lanes=8,
+                                 engines=["ref", "jax", "pallas-interpret"],
+                                 machine=machine)
+    assert preds["jax"].seconds < preds["ref"].seconds
+    assert preds["ref"].seconds < preds["pallas-interpret"].seconds
+    assert preds["ref"].bound_by == "dispatch"
+
+
+def _rows(jax_ms, ref_ms, window=8):
+    return [
+        {"producer": "aes", "engine": "jax", "variant": "normal",
+         "window": window, "depth": 2, "p50_ms": jax_ms},
+        {"producer": "aes", "engine": "ref", "variant": "normal",
+         "window": window, "depth": 2, "p50_ms": ref_ms},
+    ]
+
+
+def test_measured_ordering_agreement_and_mismatch():
+    params = get_params("rubato-128s")
+    machine = MachineModel.for_backend("cpu")
+    ok = validate_measured_ordering(params, _rows(0.5, 200.0),
+                                    machine=machine)
+    assert ok.ok and not ok.skipped
+    assert ok.pairs[0].fast == "jax" and ok.pairs[0].agrees
+    # the same gap the other way around must FAIL the model
+    bad = validate_measured_ordering(params, _rows(200.0, 0.5),
+                                     machine=machine)
+    assert not bad.ok
+    # a gap inside the tolerance is unranked, never a failure
+    close = validate_measured_ordering(params, _rows(1.00, 1.05),
+                                       machine=machine)
+    assert close.ok and close.pairs[0].within_tolerance
+
+
+def test_measured_ordering_skips_thin_tables():
+    params = get_params("rubato-128s")
+    rep = validate_measured_ordering(params, _rows(0.5, 200.0)[:1])
+    assert rep.skipped and rep.ok is True or rep.pairs == ()
+
+
+def test_tuner_persists_measurement_tables(tmp_path, monkeypatch):
+    """save_plan(measurements=...) -> load_measurements round trip, with
+    the nearest-lanes fallback load_plan also uses."""
+    monkeypatch.setenv("REPRO_TUNER_CACHE",
+                       str(tmp_path / "streamplans.json"))
+    from repro.core.tuner import StreamPlan, load_measurements, save_plan
+
+    params = get_params("rubato-128s")
+    plan = StreamPlan(producer="aes", engine="jax", variant="normal",
+                      window=8, depth=2)
+    rows = [{**plan.to_json(), "p50_ms": 0.5},
+            {**plan.to_json(), "engine": "ref", "p50_ms": 200.0}]
+    save_plan(params, 8, plan, p50_ms=0.5, measurements=rows)
+    got = load_measurements(params, lanes=8)
+    assert [r["engine"] for r in got] == ["jax", "ref"]
+    assert load_measurements(params, lanes=16)  # nearest-lanes fallback
+    rep = validate_measured_ordering(
+        params, got, machine=MachineModel.for_backend("cpu"))
+    assert rep.ok
+
+
+# ==========================================================================
+# CLI + snapshot
+# ==========================================================================
+def test_cli_single_preset_json(capsys):
+    from repro.analysis.__main__ import main
+
+    rc = main(["pasta-128l", "--variant", "normal", "--format", "json",
+               "--no-measure"])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["ok"] and out["results"][0]["overflow"]["proved"]
+    assert out["results"][0]["depth"]["static"] == 4  # r+1 @ r=3
+
+
+def test_checked_in_snapshot_is_current():
+    """The committed BENCH snapshot's analytic fields must match a fresh
+    analysis exactly (the `analyze` CI stage gates on this too)."""
+    from repro.analysis.__main__ import (
+        DEFAULT_SNAPSHOT,
+        build_snapshot,
+        check_snapshot,
+    )
+
+    path = pathlib.Path(DEFAULT_SNAPSHOT)
+    assert path.exists(), "run: python -m repro.analysis --all --write-snapshot"
+    snap = json.loads(path.read_text())
+    current = build_snapshot(measure=False, lanes=8)
+    problems = check_snapshot(snap, current, strict=False)
+    errors = [m for lvl, m in problems if lvl == "error"]
+    assert not errors, errors

@@ -2,7 +2,6 @@
 SSD vs naive recurrence."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -3,7 +3,6 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.train.compression import (
     compressed_pod_reduce, init_error_buffers, _q8,

@@ -22,7 +22,7 @@ from repro.core import (
     registered_engines,
     resolve_engine,
 )
-from repro.core.engine import KeystreamEngine, PallasInterpretEngine
+from repro.core.engine import PallasInterpretEngine
 from repro.core.params import get_params
 from repro.kernels.keystream.ref import keystream_ref
 

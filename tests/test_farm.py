@@ -9,7 +9,6 @@ per-session Cipher.keystream for every (nonce, counter) pair.
 import dataclasses
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
@@ -22,7 +21,6 @@ from repro.core import (
 )
 from repro.core.params import get_params
 from repro.data.encrypted import (
-    EncryptedSource,
     FarmEncryptedSource,
     encrypt_tokens,
     make_decryptor,

@@ -14,14 +14,13 @@ from repro.core import (
     CipherBatch,
     compatible_producers,
     make_cipher,
-    make_engine,
     make_producer,
     producer_caps,
     registered_producers,
     resolve_producer,
 )
 from repro.core.params import get_params
-from repro.core.producer import CachedProducer, ConstantsProducer
+from repro.core.producer import CachedProducer
 
 LANES = 3
 

@@ -2,9 +2,8 @@
 
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
-from repro.crypto.modmath import Q_HERA, Q_RUBATO
+from repro.crypto.modmath import Q_RUBATO
 from repro.crypto.sampler import (
     DGaussTable, OVERDRAW, STREAM_PAD, discrete_gaussian, uniform_mod_q,
     uniform_mod_q_stream,

@@ -218,6 +218,18 @@ def test_validate_rejects_broken_orientation_chain():
         dataclasses.replace(sched, ops=tuple(ops)).validate()
 
 
+def test_validate_error_paths():
+    """Every malformed-program fixture is REFUSED with an actionable
+    message (the same fixtures must be diagnosed, with rule codes, by the
+    static linter — tests/test_analysis.py runs the other side)."""
+    from broken_schedules import ALL
+
+    for build, name in ALL:
+        broken, _, match = build()
+        with pytest.raises(ValueError, match=match):
+            broken.validate()
+
+
 def test_unknown_variant_raises():
     with pytest.raises(ValueError, match="unknown schedule variant"):
         build_schedule(get_params("hera-128a"), "diagonal")

@@ -1,7 +1,6 @@
 """Sharding-policy invariants: every assigned arch must produce divisible
 shardings on the production mesh axes (GSPMD rejects non-divisible)."""
 
-import numpy as np
 import pytest
 
 from repro.configs.base import get_config, list_archs

@@ -8,8 +8,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs.base import get_config
-from repro.data.encrypted import EncryptedSource, encrypt_tokens, make_decryptor
-from repro.data.pipeline import SyntheticLM, make_source
+from repro.data.encrypted import EncryptedSource, make_decryptor
+from repro.data.pipeline import SyntheticLM
 from repro.core.cipher import make_cipher
 from repro.launch.elastic import StragglerWatchdog, plan_mesh
 from repro.train import checkpoint as ckpt
