@@ -39,6 +39,18 @@ primary engine (both are bit-exact — the delta is pure scheduling cost).
 --smoke runs a tiny sweep with no PASS/FAIL gating — the CI drift canary
 (scripts/ci.sh) that keeps every engine dispatching end-to-end on the
 selected schedule variant, overlap report included.
+
+--snapshot writes benchmarks/BENCH_farm_trajectory.json: per
+preset x engine x producer x (depth, matrix_depth) the per-window p50/p99
+and the producer/consumer overlap ratio, plus — for matrix-streaming
+presets (PASTA) — the overlap-ratio improvement of matrix_depth=2
+(matrix planes prefetched one extra window ahead through the farm's
+plane-split FIFO) over matrix_depth=1.  --check compares a fresh lap
+against the checked-in snapshot and flags >REGRESSION_TOL p50/p99
+regressions (warnings, errors under --strict — same contract as the
+BENCH_schedule_analysis.json measured-drift gate: timings are
+host-dependent, structure is not).  The ci.sh ``bench-gate`` stage runs
+--check.
 """
 
 import sys, pathlib
@@ -63,6 +75,14 @@ from repro.core.params import REGISTRY
 # default bench presets: the paper's benchmarked pair plus the large PASTA
 # set — one preset per cipher kind, every kind in the params registry
 DEFAULT_PRESETS = ("hera-128a", "rubato-128l", "pasta-128l")
+
+SNAPSHOT_SCHEMA = 1
+DEFAULT_SNAPSHOT = pathlib.Path(__file__).parent / "BENCH_farm_trajectory.json"
+#: relative per-window p50/p99 regression --check flags
+REGRESSION_TOL = 0.20
+#: small fixed workload so the snapshot lap stays CI-sized; both PASTA
+#: presets ride along so the matrix-plane prefetch is covered at both t
+SNAPSHOT_PRESETS = ("hera-128a", "rubato-128l", "pasta-128s", "pasta-128l")
 
 
 def _percentiles(ts):
@@ -262,6 +282,114 @@ def orientation_delta(name: str, engine: str, lanes: int, sessions: int,
           f"p99 {n99:.2f} -> {a99:.2f} ms ({d99:+.1f}%)")
 
 
+# ==========================================================================
+# Trajectory snapshot (benchmarks/BENCH_farm_trajectory.json)
+# ==========================================================================
+def _entry_key(preset, engine, producer, depth, mdepth):
+    return f"{preset}|{engine}|{producer}|d{depth}|m{mdepth}"
+
+
+def build_farm_snapshot(presets=SNAPSHOT_PRESETS, sessions=2, lanes=16,
+                        n_windows=4, reps=2, engines=None, depth=2):
+    """One timed lap per preset x engine x producer x matrix_depth.
+
+    matrix_depth sweeps (1, 2) on matrix-streaming presets (the plane-split
+    FIFO engages at 2) and stays (1,) elsewhere; per entry the best-of-reps
+    per-window p50/p99 and the overlap ratio vs a depth-1 serialized farm
+    are recorded, plus the matrix-prefetch overlap improvement per
+    (preset, engine) — the farm-level payoff of producing the heavy
+    matrix planes ahead of the vector constants.
+    """
+    import json  # noqa: F401  (callers re-serialize)
+
+    entries = {}
+    improvements = {}
+    for name in presets:
+        batch = CipherBatch(name, seed=0)
+        batch.add_sessions(sessions)
+        mdepths = (1, 2) if batch.params.n_matrix_constants else (1,)
+        for e in engines or default_engines():
+            eng = batch.make_engine(e)
+            serial = KeystreamFarm(batch, engine=eng, depth=1)
+            overlaps = {}
+            for md in mdepths:
+                farm = KeystreamFarm(batch, engine=eng, depth=depth,
+                                     matrix_depth=md)
+                best = (float("inf"), float("inf"))
+                for _ in range(reps):
+                    _, lat = bench_farm(farm, lanes, n_windows)
+                    p50, p99 = _percentiles(lat)
+                    if p50 < best[0]:
+                        best = (p50, p99)
+                ov = overlap_ratio(farm, serial, lanes, n_windows)
+                overlaps[md] = ov
+                key = _entry_key(name, e, batch.producer.name, depth, md)
+                entries[key] = {
+                    "preset": name, "engine": e,
+                    "producer": batch.producer.name,
+                    "depth": depth, "matrix_depth": md,
+                    "p50_ms": round(best[0], 4), "p99_ms": round(best[1], 4),
+                    "overlap": round(ov, 4),
+                }
+            if len(mdepths) > 1:
+                improvements[f"{name}|{e}"] = round(
+                    overlaps[2] - overlaps[1], 4)
+    return {
+        "schema": SNAPSHOT_SCHEMA,
+        "backend": jax.default_backend(),
+        "sessions": sessions, "lanes": lanes, "windows": n_windows,
+        "entries": entries,
+        "matrix_overlap_improvement": improvements,
+    }
+
+
+def check_farm_snapshot(snapshot: dict, current: dict, strict: bool) -> list:
+    """Compare a stored trajectory snapshot against a fresh lap.
+
+    Structure (schema, entry set) must match exactly — errors.  Per-window
+    p50/p99 regressions beyond REGRESSION_TOL are warnings, errors under
+    --strict (timings are host-dependent; a clean CI host must still
+    pass) — the same contract as the analysis snapshot's measured-drift
+    gate.  Returns (level, message) pairs, level in {"error", "warning"}.
+    """
+    if snapshot.get("schema") != SNAPSHOT_SCHEMA:
+        return [("error", f"snapshot schema {snapshot.get('schema')} != "
+                 f"{SNAPSHOT_SCHEMA}; regenerate with --snapshot")]
+    problems = []
+    for key, snap in sorted(snapshot.get("entries", {}).items()):
+        cur = current["entries"].get(key)
+        if cur is None:
+            problems.append(("error", f"{key}: entry vanished from the "
+                             "current sweep (preset/engine/producer or "
+                             "depth wiring drifted)"))
+            continue
+        for field in ("p50_ms", "p99_ms"):
+            was, now = snap[field], cur[field]
+            if was <= 0:
+                continue
+            reg = (now - was) / was
+            if reg > REGRESSION_TOL:
+                level = "error" if strict else "warning"
+                problems.append(
+                    (level, f"{key}: {field} regressed {reg * 100:.0f}% "
+                     f"(snapshot {was:.3f} ms, now {now:.3f} ms)"))
+    for key in sorted(current.get("entries", {})):
+        if key not in snapshot.get("entries", {}):
+            problems.append(("error", f"{key}: new entry missing from the "
+                             "snapshot; regenerate with --snapshot"))
+    for key, was in sorted(
+            snapshot.get("matrix_overlap_improvement", {}).items()):
+        now = current.get("matrix_overlap_improvement", {}).get(key)
+        if now is None:
+            problems.append(("error", f"{key}: matrix overlap improvement "
+                             "no longer measured"))
+        elif was > 0 and now <= 0:
+            problems.append(("warning", f"{key}: matrix_depth=2 overlap "
+                             f"improvement went non-positive "
+                             f"({was:+.3f} -> {now:+.3f})"))
+    return problems
+
+
 def default_engines():
     """The primary (auto) engine plus 'jax' — the engines worth timing on
     this backend.  --engines all adds every *available* registered engine
@@ -301,7 +429,44 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI canary: 2 sessions, 16 lanes, no "
                          "PASS/FAIL gate")
+    ap.add_argument("--snapshot", action="store_true",
+                    help="write the trajectory snapshot "
+                         "(benchmarks/BENCH_farm_trajectory.json)")
+    ap.add_argument("--check", action="store_true",
+                    help="compare a fresh lap against the checked-in "
+                         "trajectory snapshot; exit 1 on structural drift")
+    ap.add_argument("--strict", action="store_true",
+                    help="with --check: >20%% p50/p99 regression is an "
+                         "error, not a warning")
+    ap.add_argument("--snapshot-path", type=pathlib.Path,
+                    default=DEFAULT_SNAPSHOT, metavar="PATH")
     args = ap.parse_args()
+
+    if args.snapshot or args.check:
+        import json
+
+        current = build_farm_snapshot(engines=args.engines or None)
+        if args.snapshot:
+            args.snapshot_path.write_text(
+                json.dumps(current, indent=1, sort_keys=True) + "\n")
+            print(f"wrote {args.snapshot_path}")
+            for key, imp in sorted(
+                    current["matrix_overlap_improvement"].items()):
+                print(f"  matrix-prefetch overlap improvement {key}: "
+                      f"{imp:+.3f}")
+            return 0
+        if not args.snapshot_path.exists():
+            print(f"snapshot {args.snapshot_path} missing; run --snapshot",
+                  file=sys.stderr)
+            return 1
+        snapshot = json.loads(args.snapshot_path.read_text())
+        problems = check_farm_snapshot(snapshot, current, strict=args.strict)
+        for level, msg in problems:
+            print(f"[{level}] {msg}")
+        errors = [m for level, m in problems if level == "error"]
+        print(f"farm trajectory check: {len(errors)} error(s), "
+              f"{len(problems) - len(errors)} warning(s)")
+        return 0 if not errors else 1
     if args.smoke:
         args.sessions, args.windows, args.reps = 2, 4, 1
         args.lanes = args.lanes or [16]

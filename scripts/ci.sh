@@ -32,6 +32,7 @@ STAGES=(
   "lint|ruff (or scripts/astlint.py fallback) over src scripts benchmarks tests"
   "analyze|schedule-IR static analysis matrix + snapshot drift (repro.analysis)"
   "bench-smoke|keystream farm bench canary: both variants + producer/depth sweep"
+  "bench-gate|farm trajectory snapshot: p50/p99 regression + matrix-prefetch overlap"
   "fast-lap|pytest -m 'not slow' (everything else; engine/schedule suites above)"
   "slow-lap|pytest -m slow: full-lane interpret-mode Pallas sweeps"
 )
@@ -59,6 +60,38 @@ stage_schedule_drift() {
 
 stage_golden_regen() {
   python scripts/regen_goldens.py --check
+  # stream-identity pin: the matrix-plane payload rides AFTER the rc+noise
+  # words in the per-(nonce, ctr) XOF stream, so re-pinning PASTA (real
+  # streamed matrices) must never have moved a HERA/Rubato digest — these
+  # are the pre-matrix-plane values, byte-identical by construction
+  python - <<'PYEOF'
+import sys
+sys.path.insert(0, "scripts")
+from regen_goldens import compute_goldens
+PINNED = {
+    ("hera-128a", "plain"):
+        "894abb58f75f5306e40200bc670d9e4672dd5e345d1f0ad97545c22f1b1132b2",
+    ("rubato-128s", "plain"):
+        "9c46b0244571ba344f043498875dea5576c0a6775e39676294191a7e0adf315f",
+    ("rubato-128s", "noise"):
+        "e5d632a451be7b27918ac669ef8bf177fd814b779658d28550e396eedc97ee75",
+    ("rubato-128m", "plain"):
+        "28a0da4bdad86ca4d35079d7997441efc183508227ff3be81cd271c950b86d8b",
+    ("rubato-128m", "noise"):
+        "37acf76c4ab8438e866e6ee38f69c32170fb09462d6012991e3787953921b9ee",
+    ("rubato-128l", "plain"):
+        "286453548ffff0abc2231c2603cd895410bab849f334f58b6eff6276d74a5471",
+    ("rubato-128l", "noise"):
+        "f89adf017a718905d2e7c40eaac8aebb014111ecba24975b52b75ac7cfca2099",
+}
+got = compute_goldens()
+drifted = {k: got[k] for k in PINNED if got.get(k) != PINNED[k]}
+assert not drifted, (
+    f"HERA/Rubato digests moved — the matrix-plane stream is no longer "
+    f"drawn after the vector constants: {sorted(drifted)}")
+print(f"HERA/Rubato goldens byte-identical across the matrix-plane "
+      f"change ({len(PINNED)} digests)")
+PYEOF
 }
 
 stage_engine_availability() {
@@ -196,6 +229,14 @@ stage_bench_smoke() {
   python benchmarks/keystream_farm_bench.py --smoke --producer aes cached --depth 2 3
 }
 
+stage_bench_gate() {
+  # fresh trajectory lap vs benchmarks/BENCH_farm_trajectory.json: entry
+  # set (preset x engine x producer x matrix_depth) must match exactly;
+  # >20% p50/p99 regressions are flagged (warnings here — timings are
+  # host-dependent; run with --strict locally to make them errors)
+  python benchmarks/keystream_farm_bench.py --check
+}
+
 stage_fast_lap() {
   # engine/schedule suites have their own stages; everything else not slow
   python -m pytest -x -q -m "not slow" --ignore=tests/test_engine.py \
@@ -240,9 +281,15 @@ if [[ ${#SELECTED[@]} -eq 0 ]]; then
     SELECTED+=("$name")
   done < <(stage_names)
 fi
-# validate names before running anything
+# validate names before running anything (pure bash: `stage_names | grep -q`
+# under pipefail is a SIGPIPE race — grep exits on match while the writer is
+# still echoing, and a loaded host turns that into a spurious failure)
 for name in "${SELECTED[@]}"; do
-  stage_names | grep -qx "$name" || {
+  known=0
+  for s in "${STAGES[@]}"; do
+    [[ "${s%%|*}" == "$name" ]] && { known=1; break; }
+  done
+  [[ $known -eq 1 ]] || {
     echo "unknown stage: $name" >&2; list_stages >&2; exit 2; }
 done
 

@@ -56,7 +56,8 @@ def compute_goldens() -> dict:
         if p.n_noise:
             modes.append(("noise", consts["noise"]))
         for mode, noise in modes:
-            z = keystream_ref(p, ci.key, consts["rc"], noise)
+            z = keystream_ref(p, ci.key, consts["rc"], noise,
+                              mats=consts.get("mats"))
             out[(name, mode)] = hashlib.sha256(
                 np.array(z).astype("<u4").tobytes()).hexdigest()
     return out

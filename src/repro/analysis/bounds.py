@@ -130,11 +130,19 @@ def prove_overflow_safety(params: CipherParams,
             # x + (k (.) rc): both mul output and x are < q
             checks += _site(mod, prov, "ark: x + k*rc operands", 2 * q)
         elif isinstance(op, S.MRMC):
-            # two shift-add matvec passes (MixColumns then MixRows) per
-            # branch run the same row set; bounds are per-row
-            for row in sorted(rows):
-                checks += _wrap(prov, mod.accumulate_sites(
-                    row, site=f"mrmc row {list(row)}"))
+            if op.streams_matrix:
+                # stream-sourced dense affine layer: one t-term dense
+                # matvec row per output element, accumulated under the
+                # chunked policy matvec_dense / mrmc_dense_apply execute
+                t = info.in_width // schedule.branches
+                checks += _wrap(prov, mod.dense_accumulate_sites(
+                    t, site=f"dense matvec t={t}"))
+            else:
+                # two shift-add matvec passes (MixColumns then MixRows)
+                # per branch run the same row set; bounds are per-row
+                for row in sorted(rows):
+                    checks += _wrap(prov, mod.accumulate_sites(
+                        row, site=f"mrmc row {list(row)}"))
             if op.has_rc:
                 checks += _site(mod, prov, "affine: matrix_out + rc", 2 * q)
             if op.mix_branches:

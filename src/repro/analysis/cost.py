@@ -133,6 +133,32 @@ def analyze_cost(params: CipherParams,
             adds += m
             steps += m * add_steps
             sites += 2
+        elif isinstance(op, S.MRMC) and op.streams_matrix:
+            # stream-sourced dense affine layer: one t x t matvec per
+            # branch under the chunked-accumulate policy of
+            # Modulus.matvec_dense (products < q sum raw in uint32 per
+            # chunk, one reduce per chunk, cross-chunk adds bounded 2q)
+            t = w // nb
+            chunk = mod.dense_chunk()
+            nchunks = -(-t // chunk)
+            chunk_steps = sum(
+                len(mod.reduce_steps(min(chunk, t - a) * mod.q))
+                for a in range(0, t, chunk))
+            muls += nb * t * t
+            adds += nb * t * (t - nchunks)        # raw in-chunk sums
+            adds += nb * t * (nchunks - 1)        # cross-chunk accumulate
+            steps += nb * t * chunk_steps
+            steps += nb * t * (nchunks - 1) * add_steps
+            sites += 1 + 2 * nchunks + 2 * (nchunks - 1)
+            if op.has_rc:
+                adds += w
+                steps += w * add_steps
+                sites += 1
+            if op.mix_branches:
+                t2 = w // 2
+                adds += 3 * t2
+                steps += 3 * t2 * add_steps
+                sites += 3
         elif isinstance(op, S.MRMC):
             # two matvec passes (MixColumns, MixRows) per branch; each
             # pass applies every matrix row across v row-vectors of width v
@@ -167,13 +193,15 @@ def analyze_cost(params: CipherParams,
             steps += w * (add_steps + len(mod.reduce_steps(2 * mod.q)))
             sites += 3
     noise_bytes = 4 * params.l if params.n_noise else 0
+    mat_bytes = 4 * schedule.n_matrix_constants   # streamed matrix planes
     return CostReport(
         schedule=schedule.name,
         n_ops=len(schedule.ops),
         modmul=muls, modadd=adds, reduce_steps=steps, shift_add=shift,
         call_sites=sites,
         rc_per_lane=schedule.n_round_constants,
-        bytes_in_per_lane=4 * schedule.n_round_constants + noise_bytes,
+        bytes_in_per_lane=4 * schedule.n_round_constants + noise_bytes
+        + mat_bytes,
         bytes_out_per_lane=4 * params.l,
     )
 

@@ -20,6 +20,7 @@ Rule catalog (docs/DESIGN.md §13 — keep in sync):
   SA107  branch-shape      PASTA laws: branches/mix/init/ARK consistency
   SA108  rc-storage-perm   FIFO reorder is a slice-local, branch-local perm
   SA109  op-fields         enum fields (orientation, nonlinearity) in range
+  SA110  mat-plane-shape   stream ops carry a well-formed matrix-plane slice
   SA201  vacuous-variant   (warning) alternating plan that never flips
 
 Suppression: a rule code listed in ``Schedule.suppress`` (the program's
@@ -351,6 +352,40 @@ def _check_op_fields(sched, table):
                 f"unknown out_orientation {op.out_orientation!r}"
         if isinstance(op, S.NONLINEAR) and op.kind not in ("cube", "feistel"):
             yield info.index, f"unknown nonlinearity {op.kind!r}"
+
+
+@rule("SA110", "mat-plane-shape")
+def _check_mat_plane_shape(sched, table):
+    """Stream-sourced matrix ops must carry a well-formed plane slice:
+    matrix_source in range, slice width == branches*t^2 (one dense t x t
+    block per branch), slices consumed contiguously in matrix-FIFO order,
+    and static-matrix ops carrying no slice at all — a malformed slice
+    would feed an op the wrong (or another op's) streamed matrix."""
+    cursor = 0
+    for info in table:
+        op = info.op
+        if not isinstance(op, S.MRMC):
+            continue
+        if op.matrix_source not in ("static", "stream"):
+            yield info.index, \
+                f"unknown matrix_source {op.matrix_source!r}"
+            continue
+        if not op.streams_matrix:
+            if op.mat_slice != (0, 0):
+                yield info.index, (f"static-matrix op carries mat_slice "
+                                   f"{op.mat_slice} (must be (0, 0))")
+            continue
+        a, b = op.mat_slice
+        want = info.in_width * (info.in_width // sched.branches)
+        if a < 0 or b - a != want:
+            yield info.index, (
+                f"mat_slice [{a}, {b}) is {b - a} words, need "
+                f"branches*t^2 = {want} (one dense t x t per branch)")
+        if a != cursor:
+            yield info.index, (
+                f"mat_slice starts at {a} but the matrix FIFO cursor is "
+                f"at {cursor} — planes must be consumed in stream order")
+        cursor = max(cursor, b)
 
 
 @rule("SA201", "vacuous-variant", severity=WARNING)

@@ -97,14 +97,16 @@ class Cipher:
         return self._producer.constants_for_nonce(self.nonce, block_ctrs)
 
     # ---------------- consumer (round pipeline) --------------------------
-    def keystream_from_constants(self, rc, noise=None):
-        return self._engine.keystream_from_constants(rc, noise)
+    def keystream_from_constants(self, rc, noise=None, mats=None):
+        return self._engine.keystream_from_constants(rc, noise, mats)
 
     def keystream(self, block_ctrs, constants=None):
         """(lanes,) block counters -> (lanes, l) keystream."""
         if constants is None:
             constants = self.round_constant_stream(block_ctrs)
-        return self.keystream_from_constants(constants["rc"], constants["noise"])
+        return self.keystream_from_constants(
+            constants["rc"], constants["noise"], constants.get("mats")
+        )
 
     def keystream_coupled(self, block_ctrs):
         """D1-style baseline: RNG serialized with rounds inside one call."""
@@ -114,7 +116,8 @@ class Cipher:
         c = jax.lax.optimization_barrier(
             {k: v for k, v in c.items() if v is not None}
         )
-        return self.keystream_from_constants(c["rc"], c.get("noise"))
+        return self.keystream_from_constants(c["rc"], c.get("noise"),
+                                             c.get("mats"))
 
     # ---------------- encryption ----------------------------------------
     def encode(self, m_real, delta: float):
@@ -341,15 +344,15 @@ class CipherBatch:
         )
 
     # ---------------- consumer (shared key, round pipeline) ---------------
-    def keystream_from_constants(self, rc, noise=None):
-        return self._engine.keystream_from_constants(rc, noise)
+    def keystream_from_constants(self, rc, noise=None, mats=None):
+        return self._engine.keystream_from_constants(rc, noise, mats)
 
     def keystream(self, session_ids, block_ctrs, constants=None):
         """(lanes,) (session, ctr) pairs -> (lanes, l) keystream."""
         if constants is None:
             constants = self.round_constant_stream(session_ids, block_ctrs)
         return self.keystream_from_constants(
-            constants["rc"], constants["noise"]
+            constants["rc"], constants["noise"], constants.get("mats")
         )
 
     # ---------------- streaming encrypt / decrypt -------------------------

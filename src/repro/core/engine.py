@@ -121,12 +121,14 @@ class KeystreamEngine:
         raise NotImplementedError
 
     # -- the consumer ------------------------------------------------------
-    def _run(self, rc, noise):
+    def _run(self, rc, noise, mats):
         raise NotImplementedError
 
-    def keystream_from_constants(self, rc, noise=None):
-        """rc: (lanes, n_round_constants) u32; noise: (lanes, l) i32 | None.
-        Returns (lanes, l) u32 keystream — bit-exact across engines."""
+    def keystream_from_constants(self, rc, noise=None, mats=None):
+        """rc: (lanes, n_round_constants) u32; noise: (lanes, l) i32 | None;
+        mats: (lanes, n_matrix_constants) u32 | None — dense matrix planes
+        for stream-sourced MRMC schedules (PASTA).  Returns (lanes, l) u32
+        keystream — bit-exact across engines."""
         if noise is not None and not self.caps.supports_noise:
             raise ValueError(f"engine {self.name!r} does not support noise")
         if self.caps.max_lanes is not None and rc.shape[0] > self.caps.max_lanes:
@@ -135,12 +137,17 @@ class KeystreamEngine:
                 f"per call (got {rc.shape[0]}); window the request or pick "
                 "an uncapped engine"
             )
-        return self._run(rc, noise)
+        if self.schedule.n_matrix_constants and mats is None:
+            raise ValueError(
+                f"schedule {self.schedule.name} streams its affine matrices "
+                "— pass the producer's mats plane"
+            )
+        return self._run(rc, noise, mats)
 
     def __call__(self, constants: dict):
-        """Consume a producer's dict(rc=..., noise=...) directly."""
+        """Consume a producer's dict(rc=..., noise=..., mats=...) directly."""
         return self.keystream_from_constants(
-            constants["rc"], constants.get("noise")
+            constants["rc"], constants.get("noise"), constants.get("mats")
         )
 
     def __repr__(self):
@@ -313,9 +320,9 @@ class RefEngine(KeystreamEngine):
             jitted=False,
         )
 
-    def _run(self, rc, noise):
+    def _run(self, rc, noise, mats):
         return keystream_ref(self.params, self.key, rc, noise,
-                             variant=self.variant)
+                             variant=self.variant, mats=mats)
 
 
 @register_engine
@@ -342,19 +349,19 @@ class JaxEngine(KeystreamEngine):
             available=True,
         )
 
-    def _run(self, rc, noise):
-        return self._fn(self.key, rc, noise)
+    def _run(self, rc, noise, mats):
+        return self._fn(self.key, rc, noise, mats=mats)
 
 
 class _PallasBase(KeystreamEngine):
     _interpret: Optional[bool] = None   # None = kernel-side auto
 
-    def _run(self, rc, noise):
+    def _run(self, rc, noise, mats):
         if noise is not None and not self.params.n_noise:
             noise = None    # kernel's 2-input variant
         return keystream_kernel_apply(
             self.params, self.key, rc, noise, interpret=self._interpret,
-            variant=self.variant,
+            variant=self.variant, mats=mats,
         )
 
 
@@ -446,12 +453,13 @@ class ShardedEngine(KeystreamEngine):
             preferred_variant="alternating",
         )
 
-    def _run(self, rc, noise):
+    def _run(self, rc, noise, mats):
         if noise is not None and not self.params.n_noise:
             noise = None
         return keystream_kernel_sharded(
             self.params, self.key, rc, noise, mesh=self.mesh,
-            axis=self.axis, interpret=self.interpret, variant=self.variant
+            axis=self.axis, interpret=self.interpret, variant=self.variant,
+            mats=mats,
         )
 
 

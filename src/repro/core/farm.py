@@ -152,16 +152,28 @@ class KeystreamFarm:
     double buffering, the default; 1 = serialized).  The producer itself
     is the pool's pluggable `repro.core.producer` backend.
 
+    ``matrix_depth`` is the matrix-plane prefetch depth for stream-
+    sourced-MRMC presets (PASTA, whose dense affine matrices are a ~t×
+    heavier RNG load than the rc plane): with ``matrix_depth >= 2``,
+    matrix-plane-only production for up to ``matrix_depth`` windows ahead
+    is dispatched through a second FIFO, *independent* of the
+    vector-plane/consumer pipeline, so the heavy plane's XOF + rejection
+    sampling hides behind more round computation than ``depth`` alone
+    buys.  matrix_depth=1 (the default) keeps the single fused produce;
+    presets without matrix planes ignore the knob entirely.  Bit-exact at
+    every depth (tests/test_farm.py).
+
     ``plan`` applies a measured :class:`repro.core.tuner.StreamPlan` in
-    one shot — producer (rebound on the pool), engine, variant, and depth
-    — with any explicitly-passed argument taking precedence.
+    one shot — producer (rebound on the pool), engine, variant, depth,
+    and matrix_depth — with any explicitly-passed argument taking
+    precedence.
     """
 
     def __init__(self, batch: CipherBatch, engine: Optional[EngineSpec] = None,
                  *, consumer: Optional[str] = None, mesh=None,
                  axis: str = "data", interpret: Optional[bool] = None,
                  variant: Optional[str] = None, depth: Optional[int] = None,
-                 plan=None):
+                 matrix_depth: Optional[int] = None, plan=None):
         if engine is not None and consumer is not None:
             raise ValueError("pass engine= or the legacy consumer=, not both")
         self.plan = plan
@@ -173,6 +185,8 @@ class KeystreamFarm:
                 variant = plan.variant
             if depth is None:
                 depth = plan.depth
+            if matrix_depth is None:
+                matrix_depth = getattr(plan, "matrix_depth", 1)
             self.window = plan.window
             batch.set_producer(plan.producer)
         spec = consumer if engine is None else engine
@@ -182,6 +196,11 @@ class KeystreamFarm:
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1 (got {depth})")
         self.depth = depth
+        matrix_depth = 1 if matrix_depth is None else int(matrix_depth)
+        if matrix_depth < 1:
+            raise ValueError(
+                f"matrix prefetch depth must be >= 1 (got {matrix_depth})")
+        self.matrix_depth = matrix_depth
         self.batch = batch
         self.engine = batch.make_engine(spec, mesh=mesh, axis=axis,
                                         interpret=interpret, variant=variant)
@@ -189,13 +208,29 @@ class KeystreamFarm:
         self.mesh = mesh
         self.axis = axis
 
+    @property
+    def _splits_planes(self) -> bool:
+        """Whether run() splits vector/matrix plane production: only for
+        stream-sourced-MRMC presets with prefetch actually requested."""
+        return (self.matrix_depth > 1
+                and self.batch.params.n_matrix_constants > 0)
+
     # ------------------------------------------------------------------
-    def produce(self, plan: WindowPlan):
+    def produce(self, plan: WindowPlan, plane: str = "all"):
         """Dispatch the (async) producer for one window — the pool's
         pluggable `ConstantsProducer` (memoizing backends short-circuit
-        repeated windows here)."""
+        repeated windows here).  ``plane`` narrows the payload ("vector"
+        when the matrix FIFO produces matrices separately)."""
         return self.batch.producer.produce(
-            self.batch.xof_tables(), plan.session_ids, plan.block_ctrs
+            self.batch.xof_tables(), plan.session_ids, plan.block_ctrs, plane
+        )
+
+    def produce_matrix(self, plan: WindowPlan):
+        """Dispatch matrix-plane-only production for one window (the
+        prefetch-ahead FIFO's producer half)."""
+        return self.batch.producer.produce(
+            self.batch.xof_tables(), plan.session_ids, plan.block_ctrs,
+            "matrix"
         )
 
     def consume(self, constants):
@@ -213,7 +248,17 @@ class KeystreamFarm:
         round computation (the paper's T3 FIFO, its depth now a knob,
         lifted to window granularity).  depth=1 degenerates to the
         serialized D1 shape.
+
+        For stream-sourced-MRMC presets with ``matrix_depth >= 2`` the
+        matrix plane runs through its own prefetch FIFO (see
+        :meth:`_run_split`): matrix-plane production is dispatched up to
+        ``matrix_depth`` windows ahead, decoupled from the vector-plane/
+        consumer pipeline, and the two planes are merged at consume time.
+        Lane order and keystream bits are identical either way.
         """
+        if self._splits_planes:
+            yield from self._run_split(plans)
+            return
         fifo: deque = deque()                 # (plan, in-flight constants)
         for plan in plans:
             fifo.append((plan, self.produce(plan)))
@@ -223,6 +268,41 @@ class KeystreamFarm:
         while fifo:
             p, c = fifo.popleft()
             yield p, self.consume(c)
+
+    def _run_split(self, plans: Iterable[WindowPlan]
+                   ) -> Iterator[Tuple[WindowPlan, jnp.ndarray]]:
+        """Plane-split pipeline: a matrix-plane FIFO (`matrix_depth` deep)
+        feeding the vector-plane/consumer FIFO (``depth`` deep).
+
+        The matrix FIFO always runs ahead: window i's (heavy) matrix plane
+        is dispatched while window i - matrix_depth is still consuming, so
+        by the time the vector FIFO reaches window i its matrices are
+        already in flight — the paper's FIFO decoupling applied to the ~t×
+        heavier plane.
+        """
+        plan_iter = iter(plans)
+        exhausted = False
+        mfifo: deque = deque()    # (plan, in-flight matrix plane)
+        vfifo: deque = deque()    # (plan, in-flight vector consts, mats)
+        while True:
+            while not exhausted and len(mfifo) < self.matrix_depth:
+                try:
+                    plan = next(plan_iter)
+                except StopIteration:
+                    exhausted = True
+                    break
+                mfifo.append((plan, self.produce_matrix(plan)))
+            if not mfifo and not vfifo:
+                break
+            if mfifo:
+                plan, mats = mfifo.popleft()
+                vfifo.append((plan, self.produce(plan, "vector"), mats))
+            while vfifo and (len(vfifo) >= self.depth
+                             or (exhausted and not mfifo)):
+                plan, consts, mats = vfifo.popleft()
+                merged = dict(consts)
+                merged["mats"] = mats["mats"]
+                yield plan, self.consume(merged)
 
     def keystream(self, session_ids, block_ctrs, window: Optional[int] = None):
         """Convenience: full keystream for per-lane pairs, windowed.

@@ -97,6 +97,13 @@ class CipherParams:
         return self.schedule().n_round_constants
 
     @property
+    def n_matrix_constants(self) -> int:
+        """Matrix-plane words per stream key, derived from the schedule's
+        mat-slice annotations (0 for HERA/Rubato; PASTA's stream-sourced
+        affine layers draw (r+1)·n·t dense-matrix words)."""
+        return self.schedule().n_matrix_constants
+
+    @property
     def n_noise(self) -> int:
         return self.l if (self.kind == "rubato" and self.sigma > 0) else 0
 
@@ -119,7 +126,13 @@ class CipherParams:
         """
         from repro.crypto.sampler import words_needed_uniform_stream
 
-        return words_needed_uniform_stream(self.n_round_constants) + 2 * self.n_noise
+        words = words_needed_uniform_stream(self.n_round_constants) + 2 * self.n_noise
+        if self.n_matrix_constants:
+            # Matrix planes draw AFTER rc+noise from the same per-block
+            # stream, so the rc/noise word positions (and hence HERA/Rubato
+            # streams) are unchanged by their presence.
+            words += words_needed_uniform_stream(self.n_matrix_constants)
+        return words
 
 
 HERA_128A = CipherParams(

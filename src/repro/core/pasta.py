@@ -5,15 +5,16 @@
     S_i = Feistel for i < r-1, Cube for the final round
 
 The key IS the initial state (two t-element branches, n = 2t) and all
-per-block randomness enters through the additive affine constants — the
-decoupled-RNG input, (r+1)·n constants per block.  The round structure is
+per-block randomness enters through the affine layers — the decoupled-RNG
+input: (r+1)·n additive constants plus (r+1)·n·t dense matrix words per
+block, both squeezed from the same XOF stream.  The round structure is
 *data*: `core/schedule.py` emits it once (`build_schedule`, with
-``init="key"``, ``branches=2``, and the rc-annotated `MRMC` affine op) and
-this module is a thin wrapper over the pure-JAX interpreter
-`execute_schedule` — the same program the fused Pallas kernel runs.
-Stand-ins vs the published cipher (fixed circulant matrix in place of the
-per-block random dense matrix; t restricted to perfect squares) are
-documented in docs/DESIGN.md §11.
+``init="key"``, ``branches=2``, and the rc- and mat-annotated
+stream-matrix `MRMC` affine op) and this module is a thin wrapper over
+the pure-JAX interpreter `execute_schedule` — the same program the fused
+Pallas kernel runs.  Deviations vs the published cipher (uniform dense
+matrices without the invertibility construction; t restricted to perfect
+squares) are documented in docs/DESIGN.md §8.7.
 """
 
 from __future__ import annotations
@@ -22,12 +23,15 @@ from repro.core.params import CipherParams
 from repro.core.schedule import build_schedule, execute_schedule
 
 
-def pasta_stream_key(params: CipherParams, key, rc, variant: str = "normal"):
+def pasta_stream_key(params: CipherParams, key, rc, mats=None,
+                     variant: str = "normal"):
     """Generate keystream blocks.
 
     key: (..., n) uint32 in Z_q — the two-branch state the permutation is
          applied to (n = 2t).
     rc:  (..., (r+1)·n) flat uint32 affine constants (decoupled-RNG input).
+    mats: (..., (r+1)·n·t) flat uint32 dense matrix planes — the per-block
+          random affine matrices the schedule streams (docs/DESIGN.md §8.7).
     Returns (..., l) uint32 keystream block (l = t, the first branch).
     """
     if rc.shape[-1] != params.n_round_constants:
@@ -35,4 +39,4 @@ def pasta_stream_key(params: CipherParams, key, rc, variant: str = "normal"):
             f"rc last dim {rc.shape[-1]} != {params.n_round_constants}"
         )
     sched = build_schedule(params, variant)
-    return execute_schedule(params, sched, key, rc)
+    return execute_schedule(params, sched, key, rc, mats=mats)

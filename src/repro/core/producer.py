@@ -67,25 +67,50 @@ from repro.crypto.xof import (
 )
 
 
-def constants_from_words(params: CipherParams, words,
-                         gauss: Optional[DGaussTable]):
-    """Shared producer tail: XOF words -> dict(rc=..., noise=...).
+#: Constants-plane kinds a producer can materialize independently.  The
+#: "vector" plane is the classic rc+noise payload; the "matrix" plane is
+#: the dense affine matrices a stream-sourced MRMC schedule consumes
+#: (PASTA).  "all" materializes both in one XOF pass.
+PLANES = ("all", "vector", "matrix")
 
-    words: (..., total) uint32 where total = words_needed_uniform_stream(
-    n_round_constants) + 2*n_noise.  Every producer backend funnels through
-    this one function, so producers emitting the same word stream are
-    bit-exact by construction.
+
+def constants_from_words(params: CipherParams, words,
+                         gauss: Optional[DGaussTable], plane: str = "all"):
+    """Shared producer tail: XOF words -> dict(rc=..., noise=..., mats=...).
+
+    words: (..., total) uint32 where total covers at least the planes
+    requested (see `ConstantsProducer.plane_words`).  The word layout is
+    fixed: rc words first, then noise hi/lo, then matrix-plane words —
+    matrix planes draw strictly AFTER the vector plane from the same
+    stream, so presets without matrix constants are byte-identical to the
+    pre-matrix layout.  Every producer backend funnels through this one
+    function, so producers emitting the same word stream are bit-exact by
+    construction.
     """
+    if plane not in PLANES:
+        raise ValueError(f"unknown constants plane {plane!r}; have {PLANES}")
     p = params
     n_u = p.n_round_constants
     w_u = words_needed_uniform_stream(n_u)
-    rc = uniform_mod_q_stream(words[..., :w_u], n_u, p.mod)
-    noise = None
-    if p.n_noise:
-        hi = words[..., w_u : w_u + p.n_noise]
-        lo = words[..., w_u + p.n_noise : w_u + 2 * p.n_noise]
-        noise = discrete_gaussian(hi, lo, gauss)
-    return {"rc": rc, "noise": noise}
+    out: Dict[str, Any] = {}
+    if plane in ("all", "vector"):
+        out["rc"] = uniform_mod_q_stream(words[..., :w_u], n_u, p.mod)
+        noise = None
+        if p.n_noise:
+            hi = words[..., w_u : w_u + p.n_noise]
+            lo = words[..., w_u + p.n_noise : w_u + 2 * p.n_noise]
+            noise = discrete_gaussian(hi, lo, gauss)
+        out["noise"] = noise
+    if plane in ("all", "matrix"):
+        mats = None
+        if p.n_matrix_constants:
+            base = w_u + 2 * p.n_noise
+            n_m = p.n_matrix_constants
+            w_m = words_needed_uniform_stream(n_m)
+            mats = uniform_mod_q_stream(words[..., base : base + w_m],
+                                        n_m, p.mod)
+        out["mats"] = mats
+    return out
 
 
 class SessionMaterial(NamedTuple):
@@ -151,13 +176,15 @@ class ConstantsProducer:
         self._gauss = (
             DGaussTable.build(params.sigma) if params.n_noise else None
         )
-        #: uint32 XOF words one lane consumes (constants + noise)
-        self.total_words = (
+        #: uint32 XOF words the vector plane (constants + noise) consumes
+        self.vector_words = (
             words_needed_uniform_stream(params.n_round_constants)
             + 2 * params.n_noise
         )
+        #: uint32 XOF words one lane consumes in total (+ matrix planes)
+        self.total_words = params.xof_words_per_block()
         self.caps = type(self).query_caps()
-        self._jit = None
+        self._jit: Dict[str, Any] = {}
 
     # -- capability reporting (class-level: no instance needed) ------------
     @classmethod
@@ -180,30 +207,47 @@ class ConstantsProducer:
             tuple(m.nonce for m in materials),
         )
 
-    def producer_fn(self):
+    def producer_fn(self, plane: str = "all"):
         """Pure ``fn(device_tables, session_ids, block_ctrs) -> constants``.
 
         Tables are runtime args (not baked constants) so one jit stays
         valid — and retraces only on shape change — as a session pool
-        grows.  The closure depends only on (params, gauss), both fixed.
+        grows.  The closure depends only on (params, gauss, plane), all
+        fixed.  ``plane`` selects which constants plane to materialize
+        ("all" / "vector" / "matrix") — the farm's matrix prefetch uses
+        "matrix"-only dispatch so the heavy plane runs ahead of the
+        consumer pipeline.
         """
         raise NotImplementedError
 
-    # -- the producer ------------------------------------------------------
-    def jitted(self):
-        """The jit'd producer fn (built once per instance)."""
-        if self._jit is None:
-            self._jit = jax.jit(self.producer_fn())
-        return self._jit
+    def plane_words(self, plane: str = "all") -> int:
+        """XOF words one lane draws to materialize ``plane``.
 
-    def produce(self, tables: ProducerTables, session_ids, block_ctrs):
+        The matrix plane sits after the vector plane in the stream, so a
+        matrix-only pass still draws (and discards) the vector-plane
+        prefix — a few percent of its own budget, the price of keeping one
+        stream identity per (nonce, ctr)."""
+        if plane == "vector" or not self.params.n_matrix_constants:
+            return self.vector_words
+        return self.total_words
+
+    # -- the producer ------------------------------------------------------
+    def jitted(self, plane: str = "all"):
+        """The jit'd producer fn for one plane (built once per instance)."""
+        if plane not in self._jit:
+            self._jit[plane] = jax.jit(self.producer_fn(plane))
+        return self._jit[plane]
+
+    def produce(self, tables: ProducerTables, session_ids, block_ctrs,
+                plane: str = "all"):
         """Materialize constants for per-lane (session, counter) pairs.
 
         tables: a `stack_tables` result; session_ids: (lanes,) int;
         block_ctrs: (lanes,) uint32.  Returns dict(rc=(lanes,
-        n_round_constants) u32, noise=(lanes, l) i32|None).
+        n_round_constants) u32, noise=(lanes, l) i32|None, mats=(lanes,
+        n_matrix_constants) u32|None), filtered to the requested plane.
         """
-        return self.jitted()(tables.device, session_ids, block_ctrs)
+        return self.jitted(plane)(tables.device, session_ids, block_ctrs)
 
     def constants_for_nonce(self, nonce, block_ctrs):
         """Single-stream path: one nonce, a vector of counters (Cipher)."""
@@ -356,15 +400,16 @@ class AesProducer(ConstantsProducer):
         n12 = jnp.asarray(np.stack([m.payload[1] for m in materials]))
         return (rk, n12)                                   # (S,11,16),(S,12)
 
-    def producer_fn(self):
-        p, gauss, total = self.params, self._gauss, self.total_words
+    def producer_fn(self, plane: str = "all"):
+        p, gauss = self.params, self._gauss
+        total = self.plane_words(plane)
 
         def producer(tables, session_ids, block_ctrs):
             rk, n12 = tables
             sid = jnp.asarray(session_ids, jnp.int32)
             ctrs = jnp.asarray(block_ctrs, jnp.uint32)
             words = aes_xof_words_batched(rk[sid], n12[sid], ctrs, total)
-            return constants_from_words(p, words, gauss)
+            return constants_from_words(p, words, gauss, plane)
 
         return producer
 
@@ -391,15 +436,16 @@ class ThreefryProducer(ConstantsProducer):
     def _stack_payloads(self, materials):
         return (jnp.stack([m.payload for m in materials]),)   # (S,) keys
 
-    def producer_fn(self):
-        p, gauss, total = self.params, self._gauss, self.total_words
+    def producer_fn(self, plane: str = "all"):
+        p, gauss = self.params, self._gauss
+        total = self.plane_words(plane)
 
         def producer(tables, session_ids, block_ctrs):
             (roots,) = tables
             sid = jnp.asarray(session_ids, jnp.int32)
             ctrs = jnp.asarray(block_ctrs, jnp.uint32)
             words = threefry_xof_words_batched(roots[sid], ctrs, total)
-            return constants_from_words(p, words, gauss)
+            return constants_from_words(p, words, gauss, plane)
 
         return producer
 
@@ -414,8 +460,10 @@ class CachedProducer(ConstantsProducer):
     constants plane instead of re-running the XOF.  Keys are the raw
     per-lane nonce bytes (read from the `ProducerTables` each `produce`
     call actually uses, never from instance state) plus the counter
-    vector, so a session *rotation* (fresh nonce) can never serve a stale
-    plane; entries are LRU-evicted at ``max_entries`` windows.  Bit-exact
+    vector plus the plane kind (vector vs matrix), so a session
+    *rotation* (fresh nonce) can never serve a stale plane and a shared
+    cache can never hand a vector plane to a matrix-plane request;
+    entries are LRU-evicted at ``max_entries`` windows.  Bit-exact
     with the inner producer by construction (a hit returns what the inner
     producer materialized).  Under a jax trace (e.g. inside
     `keystream_coupled`) the cache is bypassed — tracers have no host
@@ -456,29 +504,33 @@ class CachedProducer(ConstantsProducer):
     def _stack_payloads(self, materials):
         return self.inner._stack_payloads(materials)
 
-    def producer_fn(self):
-        return self.inner.producer_fn()
+    def producer_fn(self, plane: str = "all"):
+        return self.inner.producer_fn(plane)
 
     @staticmethod
-    def _key(tables: ProducerTables, session_ids, block_ctrs):
+    def _key(tables: ProducerTables, session_ids, block_ctrs,
+             plane: str = "all"):
+        # Plane kind is part of the identity: a shared cache must never
+        # serve a vector plane where a matrix plane is expected (or vice
+        # versa) for the same (nonces, ctrs) window.
         sid = np.asarray(session_ids).reshape(-1)
         ctr = np.asarray(block_ctrs, np.uint64).reshape(-1)
         try:
             nonces = b"".join(tables.nonces[int(s)] for s in sid)
         except IndexError:   # lanes beyond the stacked tables: don't cache
             return None
-        return (nonces, ctr.tobytes())
+        return (plane, nonces, ctr.tobytes())
 
-    def produce(self, tables, session_ids, block_ctrs):
+    def produce(self, tables, session_ids, block_ctrs, plane: str = "all"):
         if isinstance(session_ids, jax.core.Tracer) or isinstance(
                 block_ctrs, jax.core.Tracer):
-            return self.inner.produce(tables, session_ids, block_ctrs)
-        key = self._key(tables, session_ids, block_ctrs)
+            return self.inner.produce(tables, session_ids, block_ctrs, plane)
+        key = self._key(tables, session_ids, block_ctrs, plane)
         if key is not None and key in self._cache:
             self.hits += 1
             self._cache.move_to_end(key)
             return self._cache[key]
-        out = self.inner.produce(tables, session_ids, block_ctrs)
+        out = self.inner.produce(tables, session_ids, block_ctrs, plane)
         if key is not None:
             self.misses += 1
             self._cache[key] = out

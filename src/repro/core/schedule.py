@@ -89,6 +89,26 @@ def state_transpose_perm(v: int, branches: int = 1) -> np.ndarray:
     return np.concatenate([tp + b * t for b in range(branches)])
 
 
+def dense_mat_perm(v: int, in_orientation: str,
+                   out_orientation: str) -> np.ndarray:
+    """Storage-order re-index of one branch's flattened t×t stream matrix.
+
+    A stream-sourced affine layer applies a *logical* dense matrix
+    y[i] = Σ_j M[i, j]·x[j] per branch.  When the chain stores the input
+    state permuted by p_in and must deliver the output permuted by p_out
+    (the transpose permutation per orientation), the stored-state compute
+    is y_s[i] = Σ_j M[p_out[i], p_in[j]]·x_s[j] — i.e. the matrix itself
+    is re-indexed, rows by p_out and columns by p_in, and the datapath
+    never gathers.  Returns p with ``mat_storage = mat_logical[p]`` over
+    the branch's flat row-major t² words (identity when both normal).
+    """
+    t = v * v
+    ident = np.arange(t)
+    p_in = transpose_perm(v) if in_orientation == TRANSPOSED else ident
+    p_out = transpose_perm(v) if out_orientation == TRANSPOSED else ident
+    return (p_out[:, None] * t + p_in[None, :]).reshape(-1)
+
+
 # ==========================================================================
 # Ops
 # ==========================================================================
@@ -130,15 +150,30 @@ class MRMC(Op):
     key-multiplied constants consumed in ``orientation``), and
     ``mix_branches`` then applies the (2·y_L + y_R, y_L + 2·y_R) branch
     coupling.  HERA/Rubato programs leave both at their defaults.
+
+    ``matrix_source`` selects where the matrix comes from: ``"static"``
+    (the fixed circulant M_v — HERA/Rubato, and the pre-stream PASTA
+    stand-in) or ``"stream"`` — the published PASTA affine layer, a fresh
+    per-(nonce, counter) dense t×t matrix per branch drawn from the same
+    decoupled XOF stream as the constants.  ``mat_slice`` is then the
+    [start, stop) window of the flat logical matrix-plane word stream this
+    op consumes (branches·t² words: branch 0's t×t row-major, then branch
+    1's), the matrix-plane analogue of the rc FIFO accounting.
     """
 
     out_orientation: str = NORMAL
     rc_slice: Tuple[int, int] = (0, 0)
     mix_branches: bool = False
+    matrix_source: str = "static"
+    mat_slice: Tuple[int, int] = (0, 0)
 
     @property
     def has_rc(self) -> bool:
         return self.rc_slice[1] > self.rc_slice[0]
+
+    @property
+    def streams_matrix(self) -> bool:
+        return self.matrix_source == "stream"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -231,6 +266,17 @@ class Schedule:
                    if isinstance(op, (ARK, MRMC)) and op.rc_slice[1])
 
     @property
+    def n_matrix_constants(self) -> int:
+        """Total matrix-plane words per stream key — the matrix FIFO depth.
+
+        0 for static-matrix programs (HERA/Rubato); PASTA's stream-sourced
+        affine layers draw (r+1)·branches·t² words ((r+1)·n·t).
+        """
+        return max((op.mat_slice[1] for op in self.ops
+                    if isinstance(op, MRMC) and op.streams_matrix),
+                   default=0)
+
+    @property
     def n_mrmc(self) -> int:
         return sum(isinstance(op, MRMC) for op in self.ops)
 
@@ -264,6 +310,39 @@ class Schedule:
                 a, b = op.rc_slice
                 perm[a:b] = a + tp[: b - a]
                 changed = True
+        return perm if changed else None
+
+    def mat_storage_perm(self) -> Optional[np.ndarray]:
+        """Logical→storage matrix-plane reorder — `rc_storage_perm`'s
+        matrix analogue, extending the storage-order constant FIFO to the
+        dense planes.
+
+        Each stream-sourced op's branch-local t² block is re-indexed by
+        :func:`dense_mat_perm` (rows by the op's output orientation,
+        columns by its input orientation) so the lane-major kernel's
+        dense matvec consumes matrix words in exactly the stored-state
+        order — no in-kernel gather, and never across a branch boundary.
+        None when no reorder is needed (normal-variant programs, and any
+        program with no stream matrices).
+        """
+        n_mat = self.n_matrix_constants
+        if not n_mat:
+            return None
+        perm = np.arange(n_mat)
+        t = self.v * self.v
+        changed = False
+        for op in self.ops:
+            if not (isinstance(op, MRMC) and op.streams_matrix):
+                continue
+            if op.orientation == NORMAL and op.out_orientation == NORMAL:
+                continue
+            block = dense_mat_perm(self.v, op.orientation,
+                                   op.out_orientation)
+            a, _ = op.mat_slice
+            for br in range(self.branches):
+                base = a + br * t * t
+                perm[base:base + t * t] = base + block
+            changed = True
         return perm if changed else None
 
     # ---- analysis substrate ---------------------------------------------
@@ -300,6 +379,7 @@ class Schedule:
         """Check orientation continuity and round-constant coverage."""
         cur = NORMAL
         next_rc = 0
+        next_mat = 0
         width = self.n
         for i, op in enumerate(self.ops):
             if op.orientation != cur:
@@ -331,6 +411,26 @@ class Schedule:
                         f"{self.name}: MRMC {i} mixes branches but the "
                         f"schedule has {self.branches}"
                     )
+                if op.matrix_source not in ("static", "stream"):
+                    raise ValueError(
+                        f"{self.name}: MRMC {i} unknown matrix_source "
+                        f"{op.matrix_source!r}"
+                    )
+                if op.streams_matrix:
+                    a, b = op.mat_slice
+                    want = width * (width // self.branches)  # branches·t²
+                    if a != next_mat or b - a != want:
+                        raise ValueError(
+                            f"{self.name}: stream MRMC {i} mat_slice "
+                            f"{op.mat_slice} inconsistent (need {want} "
+                            f"words, next matrix word {next_mat})"
+                        )
+                    next_mat = b
+                elif op.mat_slice != (0, 0):
+                    raise ValueError(
+                        f"{self.name}: static MRMC {i} carries mat_slice "
+                        f"{op.mat_slice}"
+                    )
                 cur = op.out_orientation
             elif isinstance(op, TRUNCATE):
                 if cur != NORMAL:
@@ -344,6 +444,8 @@ class Schedule:
             raise ValueError(f"{self.name}: program must end normal")
         if next_rc != self.n_round_constants:
             raise ValueError(f"{self.name}: round constants not contiguous")
+        if next_mat != self.n_matrix_constants:
+            raise ValueError(f"{self.name}: matrix planes not contiguous")
         if self.init not in ("ic", "key"):
             raise ValueError(f"{self.name}: unknown init {self.init!r}")
         return self
@@ -352,6 +454,8 @@ class Schedule:
         """Human-readable program listing (docs/DESIGN.md §9/§11 format)."""
         head = (f"schedule {self.name}  (n={self.n}, l={self.l}, "
                 f"{self.n_arks} ARKs, {self.n_round_constants} constants")
+        if self.n_matrix_constants:
+            head += f", {self.n_matrix_constants} matrix words"
         if self.branches > 1:
             head += f", {self.branches} branches, init={self.init}"
         rows = [head + ")"]
@@ -364,6 +468,8 @@ class Schedule:
             elif isinstance(op, MRMC):
                 oo = "T" if op.out_orientation == TRANSPOSED else "N"
                 extra = ""
+                if op.streams_matrix:
+                    extra += f"  mat[{op.mat_slice[0]}:{op.mat_slice[1]}]"
                 if op.has_rc:
                     extra += f"  +rc[{op.rc_slice[0]}:{op.rc_slice[1]}]"
                 if op.mix_branches:
@@ -431,12 +537,19 @@ def build_schedule(params: "CipherParams", variant: str = "normal") -> Schedule:
 
     if params.kind == "pasta":
         # [A_i ∘ S_i]^r ∘ A_r on the key state; constants consumed by the
-        # affine layers in out-orientation, mix coupling the two branches
+        # affine layers in out-orientation, mix coupling the two branches.
+        # Each affine layer applies a fresh per-block dense t×t matrix per
+        # branch, streamed from the producer (n·t matrix words per layer).
+        t = n // params.branches
         for j in range(r):
-            mrmc(rc_slice=(j * n, (j + 1) * n), mix_branches=True)
+            mrmc(rc_slice=(j * n, (j + 1) * n), mix_branches=True,
+                 matrix_source="stream",
+                 mat_slice=(j * n * t, (j + 1) * n * t))
             ops.append(NONLINEAR(
                 orientation=cur, kind="feistel" if j < r - 1 else "cube"))
-        mrmc(rc_slice=(r * n, (r + 1) * n), mix_branches=True)
+        mrmc(rc_slice=(r * n, (r + 1) * n), mix_branches=True,
+             matrix_source="stream",
+             mat_slice=(r * n * t, (r + 1) * n * t))
         ops.append(TRUNCATE(orientation=cur, keep=l))
         return Schedule(
             name=f"{params.name}/{variant}", kind=params.kind,
@@ -500,16 +613,20 @@ def _feistel_transposed(params: "CipherParams", x):
 
 
 def execute_schedule(params: "CipherParams", schedule: Schedule, key, rc,
-                     noise_signed=None, ic=None):
+                     noise_signed=None, ic=None, mats=None):
     """Interpret ``schedule`` in pure JAX — the oracle all backends match.
 
     key: (..., n) u32 in Z_q; rc: (..., n_round_constants) u32 in *logical*
-    (producer) order; noise_signed: (..., l) i32 or None; returns (..., l)
-    u32 keystream.  Orientation handling: transposed ARKs index key/rc
+    (producer) order; noise_signed: (..., l) i32 or None; mats:
+    (..., n_matrix_constants) u32 matrix-plane words in logical order
+    (required iff the program streams matrices); returns (..., l) u32
+    keystream.  Orientation handling: transposed ARKs index key/rc
     through the transpose permutation (a static gather on small vectors),
     and an affine MRMC landing transposed indexes its additive constants
     the same way; MRMC flips are output relabelings; the state itself is
-    never transposed except at explicit MRMC orientation changes.
+    never transposed except at explicit MRMC orientation changes.  A
+    stream-sourced MRMC re-indexes its dense matrix per orientation pair
+    (:func:`dense_mat_perm`) so the stored-state matvec is direct.
     ``schedule.init`` selects the initial state: the public ic constant
     (HERA/Rubato) or the key itself (PASTA's keyed permutation).
     """
@@ -517,6 +634,13 @@ def execute_schedule(params: "CipherParams", schedule: Schedule, key, rc,
         raise ValueError(
             f"rc last dim {rc.shape[-1]} != {schedule.n_round_constants} "
             f"(schedule {schedule.name})"
+        )
+    n_mat = schedule.n_matrix_constants
+    if n_mat and (mats is None or mats.shape[-1] != n_mat):
+        got = "None" if mats is None else mats.shape[-1]
+        raise ValueError(
+            f"mats last dim {got} != {n_mat} (schedule {schedule.name} "
+            "streams its affine matrices)"
         )
     if schedule.init == "key":
         x = jnp.broadcast_to(key, rc.shape[:-1] + (params.n,))
@@ -535,7 +659,23 @@ def execute_schedule(params: "CipherParams", schedule: Schedule, key, rc,
                 rcs, k = rcs[..., tp], key[..., tp]
             x = R.ark(params, x, k, rcs)
         elif isinstance(op, MRMC):
-            x = _mrmc_flat(params, x, op.orientation != op.out_orientation)
+            if op.streams_matrix:
+                a, b = op.mat_slice
+                m = mats[..., a:b]
+                perm = dense_mat_perm(schedule.v, op.orientation,
+                                      op.out_orientation)
+                if not np.array_equal(perm, np.arange(len(perm))):
+                    nb, tt = schedule.branches, len(perm)
+                    idx = np.concatenate([perm + br * tt
+                                          for br in range(nb)])
+                    m = m[..., idx]
+                t = schedule.v * schedule.v
+                M = m.reshape(m.shape[:-1] + (schedule.branches, t, t))
+                X = x.reshape(x.shape[:-1] + (schedule.branches, t))
+                x = params.mod.matvec_dense(M, X).reshape(x.shape)
+            else:
+                x = _mrmc_flat(params, x,
+                               op.orientation != op.out_orientation)
             if op.has_rc:
                 a, b = op.rc_slice
                 rcs = rc[..., a:b]

@@ -118,7 +118,19 @@ def evaluate_decryption_circuit(cipher: Cipher, block_ctrs):
             x = cm.add(x, DepthTracked(
                 mod.mul(kt.value, rc[..., a:b]), kt.depth))
         elif isinstance(op, S.MRMC):
-            val = R.mrmc(p, x.value)             # plaintext linear
+            if op.streams_matrix:
+                # stream-sourced dense affine layer: the matrix is *public*
+                # per-block randomness (plaintext), so the t×t matvec is
+                # plaintext-multiply + adds — depth-free, exactly like the
+                # static circulant path
+                ma, mb = op.mat_slice
+                m = consts["mats"][..., ma:mb]
+                t = p.n // p.branches
+                M = m.reshape(m.shape[:-1] + (p.branches, t, t))
+                X = x.value.reshape(x.value.shape[:-1] + (p.branches, t))
+                val = mod.matvec_dense(M, X).reshape(x.value.shape)
+            else:
+                val = R.mrmc(p, x.value)         # plaintext linear
             if op.has_rc:
                 a, b = op.rc_slice
                 val = mod.add(val, rc[..., a:b])  # plaintext add: depth-free

@@ -1,4 +1,5 @@
-"""Measured StreamPlan autotuner: producer × engine × variant × window × depth.
+"""Measured StreamPlan autotuner: producer × engine × variant × window ×
+depth × matrix_depth.
 
 The ROADMAP's named follow-up to the engine registry — "latency-measured
 autotuning of (engine, variant)" — generalized to the full pipeline tuple
@@ -61,8 +62,10 @@ CACHE_VERSION = 1
 #: an unchanged name (a plan measured against the old semantics must not
 #: steer the new code) — the ROADMAP's plan-invalidation follow-up.
 #: History: 1 = PR 4 entries (implicit, no schema field);
-#:          2 = branch-aware schedule executors (PASTA introduction).
-PLAN_SCHEMA = 2
+#:          2 = branch-aware schedule executors (PASTA introduction);
+#:          3 = stream-sourced matrix planes (PASTA's dense affine
+#:              matrices; plans gain the farm's matrix_depth knob).
+PLAN_SCHEMA = 3
 _ENV_CACHE = "REPRO_TUNER_CACHE"
 
 
@@ -80,6 +83,7 @@ class StreamPlan:
     variant: str       # schedule orientation (core/schedule.py)
     window: int        # lanes per farm window
     depth: int         # producer->consumer FIFO depth (farm)
+    matrix_depth: int = 1  # matrix-plane prefetch depth (farm; PASTA only)
 
     def to_json(self) -> dict:
         return {
@@ -88,6 +92,7 @@ class StreamPlan:
             "variant": self.variant,
             "window": int(self.window),
             "depth": int(self.depth),
+            "matrix_depth": int(self.matrix_depth),
         }
 
     @classmethod
@@ -98,12 +103,13 @@ class StreamPlan:
             variant=str(d["variant"]),
             window=int(d["window"]),
             depth=int(d["depth"]),
+            matrix_depth=int(d.get("matrix_depth", 1)),
         )
 
     def describe(self) -> str:
         return (f"producer={self.producer} engine={self.engine} "
                 f"variant={self.variant} window={self.window} "
-                f"depth={self.depth}")
+                f"depth={self.depth} matrix_depth={self.matrix_depth}")
 
 
 # ==========================================================================
@@ -174,7 +180,8 @@ def _plan_is_valid(plan: StreamPlan, params: CipherParams, *,
         return False
     if plan.variant not in ecaps.schedule_variants:
         return False
-    return plan.window >= 1 and plan.depth >= 1
+    return (plan.window >= 1 and plan.depth >= 1
+            and plan.matrix_depth >= 1)
 
 
 def save_plan(params: Union[CipherParams, str], lanes: int, plan: StreamPlan,
@@ -327,14 +334,19 @@ def candidate_plans(params: Union[CipherParams, str], lanes: int, *,
                     engines: Optional[Sequence[str]] = None,
                     variants: Optional[Sequence[str]] = None,
                     windows: Optional[Sequence[int]] = None,
-                    depths: Optional[Sequence[int]] = None) -> List[StreamPlan]:
+                    depths: Optional[Sequence[int]] = None,
+                    matrix_depths: Optional[Sequence[int]] = None
+                    ) -> List[StreamPlan]:
     """The default candidate grid for one (preset, lanes) workload shape.
 
     Producers: every stream-preserving registered backend.  Engines: every
     available backend except the oracles ("ref") and interpret-mode Pallas
     (correctness tools, not serving paths).  Windows: the full batch and a
     half-batch split (more pipelining); depths: double and triple
-    buffering.  Pass explicit sequences to override any dimension.
+    buffering.  Matrix depths: no-prefetch vs double-prefetch of the
+    matrix plane — only a real dimension for stream-sourced-MRMC presets
+    (PASTA); otherwise pinned at 1.  Pass explicit sequences to override
+    any dimension.
     """
     params = _coerce_params(params)
     if producers is None:
@@ -352,14 +364,17 @@ def candidate_plans(params: Union[CipherParams, str], lanes: int, *,
         windows = sorted({lanes, half} - {0})
     if depths is None:
         depths = (2, 3)
+    if matrix_depths is None:
+        matrix_depths = (1, 2) if params.n_matrix_constants else (1,)
     plans = []
     for prod in producers:
         for eng in engines:
             for var in variants:
                 for win in windows:
                     for dep in depths:
-                        plans.append(StreamPlan(prod, eng, var, int(win),
-                                                int(dep)))
+                        for mdep in matrix_depths:
+                            plans.append(StreamPlan(prod, eng, var, int(win),
+                                                    int(dep), int(mdep)))
     return plans
 
 
@@ -378,7 +393,8 @@ def measure_plan(params: Union[CipherParams, str], plan: StreamPlan,
     batch = CipherBatch(params, seed=seed, producer=plan.producer)
     batch.add_sessions(sessions)
     farm = KeystreamFarm(batch, engine=plan.engine, variant=plan.variant,
-                         depth=plan.depth, mesh=mesh, axis=axis)
+                         depth=plan.depth, matrix_depth=plan.matrix_depth,
+                         mesh=mesh, axis=axis)
 
     total = plan.window * n_windows
     sids = np.resize(np.arange(sessions, dtype=np.int64), total)
@@ -473,7 +489,7 @@ def describe(cache_path=None) -> str:
     fp = host_fingerprint()
     lines = ["=== cached StreamPlans (this host) ==="]
     rows = [("key", "producer", "engine", "variant", "window", "depth",
-             "p50 ms")]
+             "mdepth", "p50 ms")]
     for key in sorted(plans):
         if f"|host={fp}" not in key:
             continue
@@ -483,14 +499,15 @@ def describe(cache_path=None) -> str:
             f"  [STALE schema {schema} != {PLAN_SCHEMA}: ignored]"
         rows.append((key.split("|host=")[0], e["producer"], e["engine"],
                      e["variant"], str(e["window"]), str(e["depth"]),
+                     str(e.get("matrix_depth", 1)),
                      f"{e.get('p50_ms', float('nan')):.3f}" + stale))
     if len(rows) == 1:
         lines.append(f"  (none at {path}; run --autotune, or serve with "
                      "--autotune)")
     else:
-        widths = [max(len(r[i]) for r in rows) for i in range(7)]
+        widths = [max(len(r[i]) for r in rows) for i in range(8)]
         for i, r in enumerate(rows):
-            lines.append("  ".join(r[j].ljust(widths[j]) for j in range(7)))
+            lines.append("  ".join(r[j].ljust(widths[j]) for j in range(8)))
             if i == 0:
                 lines.append("  ".join("-" * w for w in widths))
     lines += ["", "=== producer registry ===", producer_mod.describe(),

@@ -254,7 +254,67 @@ class Modulus:
         y = jnp.stack(outs, axis=-1)
         return jnp.moveaxis(y, -1, axis)
 
+    def dense_chunk(self) -> int:
+        """How many products < q the dense-matvec accumulator can sum in
+        uint32 before it must reduce — the ONE policy constant shared by
+        :meth:`matvec_dense`, the Pallas kernel's dense path
+        (`kernels/mrmc/mrmc.py:mrmc_dense_apply`), and the overflow proof
+        (:meth:`dense_accumulate_sites`).  For the shipped PASTA modulus
+        (q = 2^26 - 2^12 + 1) this is 64, so a whole t=64 branch row sums
+        in one pass.
+        """
+        return (2**32 - 1) // self.q
+
+    def matvec_dense(self, mat, x):
+        """y = mat @ x mod q for a *dense* uint32 matrix with entries in
+        [0, q) — PASTA's stream-sourced affine layer (no shift-add
+        structure to exploit, unlike :meth:`matvec_small`).
+
+        mat: (..., t, t) uint32; x: (..., t) uint32; returns (..., t).
+        Every product from :meth:`mul` is < q, so chunks of up to
+        :meth:`dense_chunk` products are summed in raw uint32 and reduced
+        once per chunk; cross-chunk accumulation stays < 2q.
+        """
+        t = x.shape[-1]
+        prods = self.mul(mat, x[..., None, :])       # (..., t, t), each < q
+        chunk = self.dense_chunk()
+        acc = None
+        for a in range(0, t, chunk):
+            b = min(t, a + chunk)
+            s = jnp.sum(prods[..., a:b], axis=-1, dtype=U32)
+            s = self.reduce(s, (b - a) * self.q)
+            acc = s if acc is None else self.reduce(acc + s, 2 * self.q)
+        return acc
+
     # ---- static bound enumeration (repro.analysis substrate) -----------
+    def dense_accumulate_sites(self, t: int,
+                               site: str = "dense-matvec") -> tuple:
+        """Proof obligations for one dense t-term matvec row — replays the
+        EXACT chunked accumulation of :meth:`matvec_dense` /
+        ``mrmc_dense_apply``: per-chunk uint32 sums of < q products, one
+        reduce per chunk, cross-chunk adds bounded by 2q.
+        """
+        chunk = self.dense_chunk()
+        sites = []
+        done = 0
+        while done < t:
+            c = min(chunk, t - done)
+            b = c * self.q
+            sites.append(BoundSite(site=f"{site}:chunk sum of {c} products",
+                                   bound=b, limit=2**32))
+            sites.append(BoundSite(site=f"{site}:chunk residual",
+                                   bound=self.reduce_residual_bound(b),
+                                   limit=self.q))
+            if done:
+                sites.append(BoundSite(site=f"{site}:cross-chunk add",
+                                       bound=2 * self.q, limit=2**32))
+                sites.append(BoundSite(
+                    site=f"{site}:cross-chunk residual",
+                    bound=self.reduce_residual_bound(2 * self.q),
+                    limit=self.q))
+            done += c
+        return tuple(sites)
+
     def mul_bound_sites(self) -> tuple:
         """Every static intermediate bound `mul` (and thus square/cube)
         reaches, as :class:`BoundSite` records — the uint32-overflow proof

@@ -55,7 +55,7 @@ from repro.core import schedule as S
 from repro.core.params import CipherParams
 from repro.core.schedule import Schedule, build_schedule, state_transpose_perm
 from repro.crypto.modmath import Modulus
-from repro.kernels.mrmc.mrmc import mrmc_matrix_apply
+from repro.kernels.mrmc.mrmc import mrmc_dense_apply, mrmc_matrix_apply
 
 BLK = 128  # keystream lanes per grid step
 
@@ -80,13 +80,14 @@ def _feistel_transposed(mod: Modulus, v: int, x):
 
 
 def _keystream_kernel(params: CipherParams, sched: Schedule,
-                      with_noise: bool, *refs):
+                      with_noise: bool, with_mats: bool, *refs):
     """One grid step: interpret the schedule program on a (n, BLK) block."""
-    if with_noise:
-        key_ref, rc_ref, noise_ref, o_ref = refs
-    else:
-        key_ref, rc_ref, o_ref = refs
-        noise_ref = None
+    refs = list(refs)
+    key_ref, rc_ref = refs[:2]
+    o_ref = refs[-1]
+    extra = refs[2:-1]
+    noise_ref = extra.pop(0) if with_noise else None
+    mats_ref = extra.pop(0) if with_mats else None
 
     p = params
     mod = p.mod
@@ -114,16 +115,32 @@ def _keystream_kernel(params: CipherParams, sched: Schedule,
             k = key2[:, col : col + 1][: op.key_len]
             x = mod.add(x, mod.mul(k, rc[a:b]))
         elif isinstance(op, S.MRMC):
-            flip = op.orientation != op.out_orientation
-            x = jnp.concatenate([
-                mrmc_matrix_apply(
-                    mod, mat, x[i * t : (i + 1) * t].reshape(v, v, -1),
-                    transpose_out=flip,
-                ).reshape(t, -1)
-                for i in range(nb)
-            ], axis=0) if nb > 1 else mrmc_matrix_apply(
-                mod, mat, x.reshape(v, v, -1), transpose_out=flip,
-            ).reshape(n, -1)
+            if op.streams_matrix:
+                # dense per-lane matrix plane, delivered storage-permuted
+                # (`mat_storage_perm`): stored-state in -> stored-state out,
+                # so there is no flip handling here at all
+                ma, _ = op.mat_slice
+                mats = mats_ref[...]
+                x = jnp.concatenate([
+                    mrmc_dense_apply(
+                        mod,
+                        mats[ma + i * t * t : ma + (i + 1) * t * t].reshape(
+                            t, t, -1),
+                        x[i * t : (i + 1) * t],
+                    )
+                    for i in range(nb)
+                ], axis=0)
+            else:
+                flip = op.orientation != op.out_orientation
+                x = jnp.concatenate([
+                    mrmc_matrix_apply(
+                        mod, mat, x[i * t : (i + 1) * t].reshape(v, v, -1),
+                        transpose_out=flip,
+                    ).reshape(t, -1)
+                    for i in range(nb)
+                ], axis=0) if nb > 1 else mrmc_matrix_apply(
+                    mod, mat, x.reshape(v, v, -1), transpose_out=flip,
+                ).reshape(n, -1)
             if op.has_rc:
                 a, b = op.rc_slice
                 x = mod.add(x, rc[a:b])   # storage order: already oriented
@@ -155,10 +172,13 @@ def _keystream_kernel(params: CipherParams, sched: Schedule,
 
 
 def keystream_pallas(params: CipherParams, key_n1, rc_cl, noise_ll=None, *,
-                     interpret: bool, schedule: Schedule | None = None):
+                     interpret: bool, schedule: Schedule | None = None,
+                     mats_ml=None):
     """key_n1: (n, 1) u32; rc_cl: (n_consts, lanes) u32 in logical order;
-    noise_ll: (l, lanes) int32 or None.  Returns (l, lanes) u32 keystream
-    (lane-major).
+    noise_ll: (l, lanes) int32 or None; mats_ml: (n_matrix_constants,
+    lanes) u32 or None — dense matrix planes in logical order for
+    stream-sourced MRMC schedules (PASTA).  Returns (l, lanes) u32
+    keystream (lane-major).
 
     Ragged lane counts are padded up to a BLK multiple and trimmed on the
     way out, so any farm window size compiles (the pad lanes compute junk
@@ -168,12 +188,21 @@ def keystream_pallas(params: CipherParams, key_n1, rc_cl, noise_ll=None, *,
     p = params
     if schedule is None:
         schedule = build_schedule(p)
+    n_mat = schedule.n_matrix_constants
+    if n_mat and (mats_ml is None or mats_ml.shape[0] != n_mat):
+        got = None if mats_ml is None else mats_ml.shape[0]
+        raise ValueError(
+            f"schedule {schedule.name} streams its affine matrices: "
+            f"mats_ml first dim {got} != {n_mat}"
+        )
     lanes = rc_cl.shape[-1]
     pad = (-lanes) % BLK
     if pad:
         rc_cl = jnp.pad(rc_cl, ((0, 0), (0, pad)))
         if noise_ll is not None:
             noise_ll = jnp.pad(noise_ll, ((0, 0), (0, pad)))
+        if n_mat:
+            mats_ml = jnp.pad(mats_ml, ((0, 0), (0, pad)))
     padded = lanes + pad
     nc = p.n_round_constants
 
@@ -184,6 +213,12 @@ def keystream_pallas(params: CipherParams, key_n1, rc_cl, noise_ll=None, *,
     rc_perm = schedule.rc_storage_perm()
     if rc_perm is not None:
         rc_cl = rc_cl[rc_perm]
+    # matrix planes ride the same storage-order FIFO: each stream op's
+    # (t, t) blocks are pre-permuted so stored-state in -> stored-state out
+    if n_mat:
+        mat_perm = schedule.mat_storage_perm()
+        if mat_perm is not None:
+            mats_ml = mats_ml[mat_perm]
     key_n2 = jnp.concatenate(
         [key_n1,
          key_n1[np.asarray(state_transpose_perm(p.v, schedule.branches))]],
@@ -191,6 +226,7 @@ def keystream_pallas(params: CipherParams, key_n1, rc_cl, noise_ll=None, *,
     )
 
     with_noise = noise_ll is not None
+    with_mats = bool(n_mat)
     grid = (padded // BLK,)
 
     in_specs = [
@@ -201,8 +237,14 @@ def keystream_pallas(params: CipherParams, key_n1, rc_cl, noise_ll=None, *,
     if with_noise:
         in_specs.append(pl.BlockSpec((p.l, BLK), lambda i: (0, i)))
         args.append(noise_ll)
+    if with_mats:
+        # matrix planes: streamed per grid step exactly like rc — the
+        # double-buffered constants FIFO, ~t× deeper
+        in_specs.append(pl.BlockSpec((n_mat, BLK), lambda i: (0, i)))
+        args.append(mats_ml)
 
-    kernel = functools.partial(_keystream_kernel, p, schedule, with_noise)
+    kernel = functools.partial(_keystream_kernel, p, schedule, with_noise,
+                               with_mats)
     out = pl.pallas_call(
         kernel,
         grid=grid,

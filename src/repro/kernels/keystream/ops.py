@@ -39,9 +39,11 @@ def _auto_interpret() -> bool:
 @functools.partial(jax.jit, static_argnames=("params", "interpret", "variant"))
 def keystream_kernel_apply(params: CipherParams, key, rc, noise=None,
                            interpret: bool | None = None,
-                           variant: str = "normal"):
+                           variant: str = "normal", mats=None):
     """key: (n,) u32; rc: (lanes, n_round_constants) u32; noise: (lanes, l)
-    int32 or None.  Returns (lanes, l) u32 keystream blocks.
+    int32 or None; mats: (lanes, n_matrix_constants) u32 or None (dense
+    matrix planes for stream-sourced MRMC schedules).  Returns (lanes, l)
+    u32 keystream blocks.
 
     ``variant`` selects the schedule orientation plan ("normal" |
     "alternating", see core/schedule.py) — bit-exact either way.  Ragged
@@ -54,9 +56,12 @@ def keystream_kernel_apply(params: CipherParams, key, rc, noise=None,
     noise_p = None
     if noise is not None and params.n_noise:
         noise_p = noise.T                             # (l, lanes)
+    mats_p = None
+    if mats is not None and sched.n_matrix_constants:
+        mats_p = mats.T                               # (n_mat, lanes)
     out = keystream_pallas(
         params, key[:, None], rc_p, noise_p, interpret=interpret,
-        schedule=sched,
+        schedule=sched, mats_ml=mats_p,
     )
     return out.T
 
@@ -64,8 +69,8 @@ def keystream_kernel_apply(params: CipherParams, key, rc, noise=None,
 def keystream_kernel_sharded(params: CipherParams, key, rc, noise=None, *,
                              mesh=None, axis: str = "data",
                              interpret: bool | None = None,
-                             variant: str = "normal"):
-    """Lane-sharded fused consumer: rc/noise split over ``mesh[axis]``.
+                             variant: str = "normal", mats=None):
+    """Lane-sharded fused consumer: rc/noise/mats split over ``mesh[axis]``.
 
     Same signature/semantics as :func:`keystream_kernel_apply`; lanes are
     padded to a multiple of the axis size, each device runs the fused kernel
@@ -74,21 +79,30 @@ def keystream_kernel_sharded(params: CipherParams, key, rc, noise=None, *,
     """
     if mesh is None or mesh.shape.get(axis, 1) == 1:
         return keystream_kernel_apply(params, key, rc, noise,
-                                      interpret=interpret, variant=variant)
+                                      interpret=interpret, variant=variant,
+                                      mats=mats)
     ndev = mesh.shape[axis]
     lanes = rc.shape[0]
     pad = (-lanes) % ndev
     rc_p = jnp.pad(rc, ((0, pad), (0, 0)))
     args = [key, rc_p]
     in_specs = [P(), P(axis, None)]
-    if noise is not None and params.n_noise:
+    with_noise = noise is not None and params.n_noise
+    if with_noise:
         args.append(jnp.pad(noise, ((0, pad), (0, 0))))
         in_specs.append(P(axis, None))
+    with_mats = mats is not None and params.n_matrix_constants
+    if with_mats:
+        args.append(jnp.pad(mats, ((0, pad), (0, 0))))
+        in_specs.append(P(axis, None))
 
-    def shard_fn(key_s, rc_s, *noise_s):
+    def shard_fn(key_s, rc_s, *extra):
+        extra = list(extra)
+        noise_s = extra.pop(0) if with_noise else None
+        mats_s = extra.pop(0) if with_mats else None
         return keystream_kernel_apply(
-            params, key_s, rc_s, noise_s[0] if noise_s else None,
-            interpret=interpret, variant=variant,
+            params, key_s, rc_s, noise_s,
+            interpret=interpret, variant=variant, mats=mats_s,
         )
 
     out = shard_map(
@@ -112,4 +126,5 @@ def presto_keystream(cipher: Cipher, block_ctrs, interpret: bool | None = None):
     eng = make_engine("pallas-interpret" if interpret else "pallas",
                       cipher.params, cipher.key)
     consts = cipher.round_constant_stream(block_ctrs)
-    return eng.keystream_from_constants(consts["rc"], consts["noise"])
+    return eng.keystream_from_constants(consts["rc"], consts["noise"],
+                                        consts.get("mats"))

@@ -12,13 +12,15 @@ from repro.core.schedule import build_schedule, execute_schedule
 
 
 def keystream_ref(params: CipherParams, key, rc, noise=None,
-                  variant: str = "normal"):
+                  variant: str = "normal", mats=None):
     """key: (n,) u32; rc: (lanes, n_round_constants) u32; noise: (lanes, l)
-    int32 or None.  Returns (lanes, l) u32 keystream blocks.
+    int32 or None; mats: (lanes, n_matrix_constants) u32 or None (the
+    stream-sourced dense affine matrices of a matrix-plane schedule).
+    Returns (lanes, l) u32 keystream blocks.
 
     ``variant`` picks the schedule orientation plan ("normal" |
     "alternating") — bit-exact by Eq. 2, property-tested in
     tests/test_schedule.py.
     """
     sched = build_schedule(params, variant)
-    return execute_schedule(params, sched, key, rc, noise)
+    return execute_schedule(params, sched, key, rc, noise, mats=mats)

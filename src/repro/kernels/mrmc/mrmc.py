@@ -83,6 +83,35 @@ def mrmc_matrix_apply(mod: Modulus, mat: np.ndarray, x,
     return jnp.stack(y, axis=0 if transpose_out else 1)
 
 
+def mrmc_dense_apply(mod: Modulus, m_ttl, x_tl):
+    """Per-lane dense matvec: y[i, lane] = Σ_j M[i, j, lane]·x[j, lane] mod q.
+
+    The stream-sourced MRMC datapath (PASTA's per-block random affine
+    matrices, docs/DESIGN.md §8.7): each keystream lane carries its own
+    (t, t) matrix, delivered through the constants FIFO in storage order
+    (`Schedule.mat_storage_perm`), so unlike the circulant path there is
+    no shared host matrix and the multiplies are full modmuls.
+
+    m_ttl: (t, t, lanes) uint32 matrix plane, entries < q;
+    x_tl:  (t, lanes) uint32 state, entries < q.  Returns (t, lanes).
+
+    Accumulation mirrors `Modulus.matvec_dense` (the lane-minor sibling):
+    products < q sum raw in uint32 in chunks of `Modulus.dense_chunk()`
+    with one reduce per chunk — the ONE shared overflow policy
+    `Modulus.dense_accumulate_sites` proves safe.
+    """
+    t = x_tl.shape[0]
+    prods = mod.mul(m_ttl, x_tl[None, :, :])          # (t, t, lanes), < q
+    chunk = mod.dense_chunk()
+    acc = None
+    for a in range(0, t, chunk):
+        b = min(t, a + chunk)
+        s = jnp.sum(prods[:, a:b], axis=1, dtype=jnp.uint32)
+        s = mod.reduce(s, (b - a) * mod.q)
+        acc = s if acc is None else mod.reduce(acc + s, 2 * mod.q)
+    return acc
+
+
 def _mrmc_kernel(mat: np.ndarray, q: int, x_ref, o_ref):
     mod = Modulus(q)
     o_ref[...] = mrmc_matrix_apply(mod, mat, x_ref[...])

@@ -94,6 +94,24 @@ def branch_mix_without_branches():
     return broken, "SA107", "mixes branches"
 
 
+def mat_slice_gap():
+    """First stream-matrix layer skips the start of the matrix plane."""
+    sched = build_schedule(get_params("pasta-128s"))
+    i = next(i for i, op in enumerate(sched.ops)
+             if isinstance(op, S.MRMC) and op.streams_matrix)
+    a, b = sched.ops[i].mat_slice
+    broken = _replace_op(sched, i, mat_slice=(a + 16, b + 16))
+    return broken, "SA110", "mat_slice .* inconsistent"
+
+
+def static_op_with_mat_slice():
+    """A static-matrix (HERA) op claiming a streamed matrix-plane slice."""
+    sched = build_schedule(get_params("hera-128a"))
+    i = next(i for i, op in enumerate(sched.ops) if isinstance(op, S.MRMC))
+    broken = _replace_op(sched, i, mat_slice=(0, 16))
+    return broken, "SA110", "carries mat_slice"
+
+
 def unknown_init():
     """init must be 'ic' (public constant) or 'key' (PASTA)."""
     sched = build_schedule(get_params("pasta-128s"))
@@ -111,5 +129,7 @@ ALL = [
     (ends_transposed, "ends-transposed"),
     (truncate_transposed, "truncate-transposed"),
     (branch_mix_without_branches, "branch-mix-without-branches"),
+    (mat_slice_gap, "mat-slice-gap"),
+    (static_op_with_mat_slice, "static-op-with-mat-slice"),
     (unknown_init, "unknown-init"),
 ]

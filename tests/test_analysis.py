@@ -94,7 +94,7 @@ def test_unknown_suppression_code_rejected():
 def test_rule_catalog_registered():
     codes = {r.code for r in registered_rules()}
     assert {"SA101", "SA102", "SA103", "SA104", "SA105", "SA106",
-            "SA107", "SA108", "SA109", "SA201"} <= codes
+            "SA107", "SA108", "SA109", "SA110", "SA201"} <= codes
 
 
 # ==========================================================================

@@ -40,7 +40,7 @@ def _constants(name, with_noise):
     ci = make_cipher(name, seed=17)
     consts = ci.round_constant_stream(jnp.arange(LANES, dtype=jnp.uint32))
     noise = consts["noise"] if with_noise else None
-    return ci, consts["rc"], noise
+    return ci, consts["rc"], noise, consts.get("mats")
 
 
 # ---------------------------------------------------------------------------
@@ -54,11 +54,11 @@ def test_engine_matrix_bit_exact(engine, name, with_noise, variant):
     p = get_params(name)
     if with_noise and not p.n_noise:
         pytest.skip("preset has no AGN noise (HERA)")
-    ci, rc, noise = _constants(name, with_noise)
-    want = np.array(keystream_ref(p, ci.key, rc, noise))
+    ci, rc, noise, mats = _constants(name, with_noise)
+    want = np.array(keystream_ref(p, ci.key, rc, noise, mats=mats))
     eng = make_engine(engine, p, ci.key, variant=variant)
     assert eng.variant == variant
-    got = np.array(eng.keystream_from_constants(rc, noise))
+    got = np.array(eng.keystream_from_constants(rc, noise, mats))
     np.testing.assert_array_equal(got, want)
     assert got.shape == (LANES, p.l)
 
@@ -75,7 +75,7 @@ def test_sharded_engine_matches_ref_on_host_mesh():
 
 
 def test_engines_consume_constants_dict():
-    ci, rc, noise = _constants("rubato-128s", True)
+    ci, rc, noise, _ = _constants("rubato-128s", True)
     eng = make_engine("jax", ci.params, ci.key)
     np.testing.assert_array_equal(
         np.array(eng({"rc": rc, "noise": noise})),

@@ -310,6 +310,73 @@ def test_farm_depth3_overlaps_more_windows_in_flight():
     assert events.count("p") == 5 and events.count("c") == 5
 
 
+@pytest.mark.parametrize("mdepth", [1, 2, 3, 4])
+def test_farm_matrix_depth_bit_exact(mdepth):
+    """The matrix-plane prefetch FIFO is pure scheduling: every
+    matrix_depth (split pipeline or fused produce) yields keystream
+    bit-identical to the per-session oracle, in order."""
+    cb = CipherBatch("pasta-128s", seed=23)
+    sess = cb.add_sessions(3)
+    farm = KeystreamFarm(cb, engine="jax", depth=2, matrix_depth=mdepth)
+    assert farm.matrix_depth == mdepth
+    assert farm._splits_planes == (mdepth > 1)
+    plans = plan_windows(sess, blocks_per_session=4, window=6)
+    seen = 0
+    for plan, z in farm.run(plans):
+        np.testing.assert_array_equal(
+            np.array(z), _oracle(cb, plan.session_ids, plan.block_ctrs))
+        seen += plan.lanes
+    assert seen == 12
+
+
+def test_farm_matrix_depth_validation():
+    cb = CipherBatch("pasta-128s", seed=1)
+    cb.add_session()
+    with pytest.raises(ValueError, match="matrix prefetch depth"):
+        KeystreamFarm(cb, engine="jax", matrix_depth=0)
+
+
+def test_farm_matrix_fifo_runs_ahead_of_vector_pipeline():
+    """Behavioral check on the split pipeline: with matrix_depth=m, the
+    heavy matrix plane for m windows is dispatched before the FIRST
+    vector-plane produce, and the vector FIFO still buffers ``depth``
+    windows before the first consume — the two FIFOs are decoupled."""
+    cb = CipherBatch("pasta-128s", seed=24)
+    cb.add_session()
+    farm = KeystreamFarm(cb, engine="jax", depth=2, matrix_depth=3)
+    events = []
+    om, op, oc = farm.produce_matrix, farm.produce, farm.consume
+    farm.produce_matrix = lambda p: (events.append("m"), om(p))[1]
+    farm.produce = lambda p, plane="all": (
+        events.append(plane[0]), op(p, plane))[1]
+    farm.consume = lambda c: (events.append("c"), oc(c))[1]
+    plans = [WindowPlan(np.zeros(2, np.int64), np.arange(2) + 2 * i)
+             for i in range(5)]
+    list(farm.run(plans))
+    # 3 matrix planes in flight before any vector produce; first consume
+    # only after 2 vector windows (depth=2) are buffered
+    assert events[:7] == ["m", "m", "m", "v", "m", "v", "c"]
+    assert events.count("m") == 5
+    assert events.count("v") == 5 and events.count("c") == 5
+
+
+def test_farm_matrix_depth_noop_without_matrix_planes():
+    """Presets without stream-sourced matrices (HERA) ignore the knob:
+    no split pipeline, no matrix-plane dispatches, same keystream."""
+    cb = CipherBatch("hera-128a", seed=2)
+    cb.add_session()
+    farm = KeystreamFarm(cb, engine="jax", matrix_depth=4)
+    assert not farm._splits_planes
+    calls = []
+    om = farm.produce_matrix
+    farm.produce_matrix = lambda p: (calls.append(p), om(p))[1]
+    plan = WindowPlan(np.zeros(4, np.int64), np.arange(4))
+    [(p, z)] = list(farm.run([plan]))
+    assert not calls
+    np.testing.assert_array_equal(
+        np.array(z), _oracle(cb, plan.session_ids, plan.block_ctrs))
+
+
 def test_farm_run_double_buffered_bit_exact():
     cb = CipherBatch("rubato-128s", seed=9)
     sess = cb.add_sessions(4)

@@ -49,8 +49,10 @@ def _check_keystream_parity(name, lanes):
     ctrs = jnp.arange(lanes, dtype=jnp.uint32)
     consts = ci.round_constant_stream(ctrs)
     got = np.array(keystream_kernel_apply(
-        p, ci.key, consts["rc"], consts["noise"], interpret=True))
-    want = np.array(keystream_ref(p, ci.key, consts["rc"], consts["noise"]))
+        p, ci.key, consts["rc"], consts["noise"], interpret=True,
+        mats=consts.get("mats")))
+    want = np.array(keystream_ref(p, ci.key, consts["rc"], consts["noise"],
+                                  mats=consts.get("mats")))
     np.testing.assert_array_equal(got, want)
     assert got.shape == (lanes, p.l)
 

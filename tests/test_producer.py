@@ -156,6 +156,38 @@ def test_single_stream_cipher_matches_batched_producer():
 
 
 # ---------------------------------------------------------------------------
+# Constants-plane splitting (the farm's matrix-prefetch producer half)
+# ---------------------------------------------------------------------------
+def test_producer_plane_split_bit_exact():
+    """Producing the vector and matrix planes separately must yield exactly
+    the planes a fused "all" pass materializes — the stream is one stream,
+    the split is pure scheduling."""
+    cb = CipherBatch("pasta-128s", seed=40)
+    cb.add_sessions(2)
+    sids = np.array([0, 1, 1, 0])
+    ctrs = np.array([0, 0, 5, 9])
+    tables = cb.xof_tables()
+    full = cb.producer.produce(tables, sids, ctrs, "all")
+    vec = cb.producer.produce(tables, sids, ctrs, "vector")
+    mat = cb.producer.produce(tables, sids, ctrs, "matrix")
+    assert set(vec) == {"rc", "noise"} and set(mat) == {"mats"}
+    np.testing.assert_array_equal(np.array(vec["rc"]), np.array(full["rc"]))
+    assert vec["noise"] is None is full["noise"]      # PASTA: no noise plane
+    assert mat["mats"].shape == (
+        4, cb.params.n_matrix_constants)
+    np.testing.assert_array_equal(np.array(mat["mats"]),
+                                  np.array(full["mats"]))
+
+
+def test_producer_unknown_plane_rejected():
+    cb = CipherBatch("pasta-128s", seed=40)
+    cb.add_session()
+    with pytest.raises(ValueError, match="unknown constants plane"):
+        cb.producer.produce(cb.xof_tables(), np.zeros(1, np.int64),
+                            np.zeros(1, np.uint32), "diagonal")
+
+
+# ---------------------------------------------------------------------------
 # The cached producer's memoization semantics
 # ---------------------------------------------------------------------------
 def test_cached_producer_hits_on_repeat_window():
@@ -187,6 +219,51 @@ def test_cached_producer_invalidates_on_rotation():
         np.array(cb.session_cipher(s.index).keystream(
             jnp.asarray(ctrs, jnp.uint32))))
     assert cb.producer.cache_stats()["misses"] == 2   # no stale hit
+
+
+def test_cached_producer_keys_on_plane_kind():
+    """Plane kind is part of the cache identity: a vector-plane request and
+    a matrix-plane request for the SAME (nonces, ctrs) window are distinct
+    entries — a shared cache must never serve one where the other is
+    expected."""
+    p = get_params("pasta-128s")
+    prod = CachedProducer(p)
+    cb = CipherBatch(p, seed=41, producer=prod)
+    cb.add_session()
+    sids, ctrs = np.zeros(2, np.int64), np.arange(2)
+    tables = cb.xof_tables()
+    prod.produce(tables, sids, ctrs, "vector")
+    m1 = prod.produce(tables, sids, ctrs, "matrix")
+    stats = prod.cache_stats()
+    assert stats["misses"] == 2 and stats["hits"] == 0    # no cross-plane hit
+    assert stats["entries"] == 2
+    v2 = prod.produce(tables, sids, ctrs, "vector")
+    m2 = prod.produce(tables, sids, ctrs, "matrix")
+    assert prod.cache_stats()["hits"] == 2                # repeats DO hit
+    assert "mats" not in v2 and set(m2) == {"mats"}
+    np.testing.assert_array_equal(np.array(m2["mats"]), np.array(m1["mats"]))
+
+
+def test_cached_matrix_plane_invalidates_on_rotation():
+    """Rotation replaces the nonce — the cache key — so a repeated
+    matrix-plane window after rotation must MISS and produce the new
+    generation's matrices, never a stale plane."""
+    p = get_params("pasta-128s")
+    prod = CachedProducer(p)
+    cb = CipherBatch(p, seed=42, producer=prod)
+    s = cb.add_session()
+    sids, ctrs = np.zeros(2, np.int64), np.arange(2)
+    m_old = np.array(
+        prod.produce(cb.xof_tables(), sids, ctrs, "matrix")["mats"])
+    cb.rotate_session(s.index)
+    m_new = np.array(
+        prod.produce(cb.xof_tables(), sids, ctrs, "matrix")["mats"])
+    assert prod.cache_stats()["misses"] == 2              # no stale hit
+    assert not np.array_equal(m_old, m_new)
+    # the post-rotation plane is the fused pass's plane for the new nonce
+    np.testing.assert_array_equal(
+        m_new,
+        np.array(prod.produce(cb.xof_tables(), sids, ctrs, "all")["mats"]))
 
 
 def test_cached_producer_lru_eviction():

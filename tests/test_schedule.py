@@ -51,8 +51,8 @@ GOLDEN = {
     ("rubato-128m", "noise"): "37acf76c4ab8438e866e6ee38f69c32170fb09462d6012991e3787953921b9ee",
     ("rubato-128l", "plain"): "286453548ffff0abc2231c2603cd895410bab849f334f58b6eff6276d74a5471",
     ("rubato-128l", "noise"): "f89adf017a718905d2e7c40eaac8aebb014111ecba24975b52b75ac7cfca2099",
-    ("pasta-128s", "plain"): "2b6424b72d45f3318692d63b4ba23067c5ccd42f6e7dc38a45cc471d16f7fe85",
-    ("pasta-128l", "plain"): "92c38b46a71f4a65724f5ee11ff8fa7dc5569e92e861df139b9fd4a99f5c0de9",
+    ("pasta-128s", "plain"): "021dbc05a9e7b35b06bf077da4d1b657558fdb1156173d6c1ccb69e5e58ff586",
+    ("pasta-128l", "plain"): "5d8b9aec6b5d50f63d64477d3ff1e45078047c98ed92c4473fc4d0dabcf92331",
 }
 # --- GOLDEN-END ---
 
@@ -78,7 +78,8 @@ def test_golden_keystream_digest(name, with_noise):
         pytest.skip("preset has no AGN noise (HERA)")
     ci, consts = _constants(name)
     noise = consts["noise"] if with_noise else None
-    z = keystream_ref(p, ci.key, consts["rc"], noise)
+    z = keystream_ref(p, ci.key, consts["rc"], noise,
+                      mats=consts.get("mats"))
     assert _digest(z) == GOLDEN[(name, "noise" if with_noise else "plain")]
 
 
@@ -88,7 +89,7 @@ def test_golden_digest_alternating_variant(name):
     p = get_params(name)
     ci, consts = _constants(name)
     z = keystream_ref(p, ci.key, consts["rc"], consts["noise"],
-                      variant="alternating")
+                      variant="alternating", mats=consts.get("mats"))
     assert _digest(z) == GOLDEN[(name, "noise" if p.n_noise else "plain")]
 
 
@@ -100,9 +101,11 @@ def test_alternating_bit_exact_pure_jax(name):
     p = get_params(name)
     ci, consts = _constants(name)
     a = execute_schedule(p, build_schedule(p, "normal"), ci.key,
-                         consts["rc"], consts["noise"])
+                         consts["rc"], consts["noise"],
+                         mats=consts.get("mats"))
     b = execute_schedule(p, build_schedule(p, "alternating"), ci.key,
-                         consts["rc"], consts["noise"])
+                         consts["rc"], consts["noise"],
+                         mats=consts.get("mats"))
     np.testing.assert_array_equal(np.array(a), np.array(b))
 
 
@@ -115,9 +118,11 @@ def test_alternating_bit_exact_kernel(name):
     p = get_params(name)
     ci, consts = _constants(name)
     a = keystream_kernel_apply(p, ci.key, consts["rc"], consts["noise"],
-                               interpret=True, variant="normal")
+                               interpret=True, variant="normal",
+                               mats=consts.get("mats"))
     b = keystream_kernel_apply(p, ci.key, consts["rc"], consts["noise"],
-                               interpret=True, variant="alternating")
+                               interpret=True, variant="alternating",
+                               mats=consts.get("mats"))
     np.testing.assert_array_equal(np.array(a), np.array(b))
 
 

@@ -56,6 +56,29 @@ def test_candidate_plans_are_stream_preserving():
     assert {p.depth for p in plans} == {2, 3}
 
 
+def test_stream_plan_matrix_depth_roundtrip():
+    """matrix_depth rides the plan through JSON bit-identically, and
+    legacy entries without the field load as the fused default (1)."""
+    plan = StreamPlan("aes", "jax", "normal", 8, 2, 3)
+    d = plan.to_json()
+    assert d["matrix_depth"] == 3
+    assert StreamPlan.from_json(json.loads(json.dumps(d))) == plan
+    legacy = {k: v for k, v in d.items() if k != "matrix_depth"}
+    assert StreamPlan.from_json(legacy).matrix_depth == 1
+    # positional construction keeps matrix_depth last (schema history)
+    assert StreamPlan("aes", "jax", "normal", 8, 2) == \
+        StreamPlan.from_json(legacy)
+
+
+def test_candidate_plans_matrix_depth_grid():
+    """The grid explores matrix prefetch only where it can matter: PASTA
+    (stream-sourced matrices) gets {1, 2}, matrix-free presets stay at 1."""
+    pasta = candidate_plans("pasta-128s", 8, engines=["jax"])
+    assert {p.matrix_depth for p in pasta} == {1, 2}
+    hera = candidate_plans("hera-128a", 8, engines=["jax"])
+    assert {p.matrix_depth for p in hera} == {1}
+
+
 # ---------------------------------------------------------------------------
 # Cache persistence + deterministic reload
 # ---------------------------------------------------------------------------
@@ -219,6 +242,37 @@ def test_farm_applies_stream_plan():
     base.add_sessions(2)
     ref = KeystreamFarm(base, engine="ref")
     np.testing.assert_array_equal(z, np.array(ref.keystream(sids, ctrs)))
+
+
+def test_save_load_plan_preserves_matrix_depth(tmp_path):
+    """Persisted plans carry matrix_depth through the cache round trip
+    (the PLAN_SCHEMA=3 field)."""
+    cache = tmp_path / "plans.json"
+    plan = StreamPlan("aes", "jax", "normal", 8, 2, 2)
+    save_plan("pasta-128s", 8, plan, 1.0, cache)
+    got = load_plan("pasta-128s", 8, cache)
+    assert got == plan and got.matrix_depth == 2
+
+
+def test_farm_applies_plan_matrix_depth():
+    """A plan carrying matrix_depth>=2 switches the farm onto the split
+    plane pipeline — and stays bit-exact with the reference farm."""
+    plan = StreamPlan("aes", "jax", "normal", 4, 2, 2)
+    cb = CipherBatch("pasta-128s", seed=24)
+    cb.add_sessions(2)
+    farm = KeystreamFarm(cb, plan=plan)
+    assert farm.matrix_depth == 2 and farm._splits_planes
+    sids = np.array([0, 1, 0, 1, 1, 0, 0, 1])
+    ctrs = np.array([0, 0, 1, 1, 2, 2, 3, 3])
+    z = np.array(farm.keystream(sids, ctrs))    # windowed by plan.window
+    base = CipherBatch("pasta-128s", seed=24)
+    base.add_sessions(2)
+    ref = KeystreamFarm(base, engine="ref")
+    np.testing.assert_array_equal(z, np.array(ref.keystream(sids, ctrs)))
+    # explicit argument still overrides the plan's knob
+    farm1 = KeystreamFarm(CipherBatch("pasta-128s", seed=25),
+                          matrix_depth=1, plan=plan)
+    assert farm1.matrix_depth == 1 and not farm1._splits_planes
 
 
 def test_farm_explicit_args_override_plan():
