@@ -6,6 +6,7 @@
 #
 #   scripts/ci.sh                         # every stage (full tier-1)
 #   scripts/ci.sh --fast                  # all but the slow interpret lap
+#   scripts/ci.sh --strict                # bench/analyze timing drift errors
 #   scripts/ci.sh --list                  # enumerate stages
 #   scripts/ci.sh --stage schedule-drift  # one stage in isolation
 #   scripts/ci.sh --stage tuner-smoke --stage bench-smoke   # several
@@ -25,6 +26,7 @@ STAGES=(
   "engine-matrix|engine x preset x noise x variant bit-exactness (tests/test_engine.py)"
   "schedule-drift|golden keystream vectors + orientation property (tests/test_schedule.py)"
   "golden-regen|regen_goldens.py --check: regeneration reproduces checked-in digests"
+  "reduction-plan|lazy==eager parity + terminal-reduction law + plan shape (tests/test_redplan.py)"
   "engine-availability|registered engines stay available, with reasons, on every preset"
   "producer-availability|registered producers + stream-preserving sets per preset"
   "tuner-smoke|StreamPlan measure -> persist -> deterministic reload -> auto consult"
@@ -92,6 +94,15 @@ assert not drifted, (
 print(f"HERA/Rubato goldens byte-identical across the matrix-plane "
       f"change ({len(PINNED)} digests)")
 PYEOF
+}
+
+stage_reduction_plan() {
+  # the reduction-scheduling pass's own gate (docs/DESIGN.md §14): plan
+  # derivation shape, lazy == eager bit-exactness across presets x
+  # variants x noise x engines, the two-sided terminal-reduction-law
+  # can-fail fixtures (SA111), and the relaxed modmath primitives; the
+  # lazy-plan overflow proof itself is discharged by the analyze stage
+  python -m pytest -x -q -m "not slow" tests/test_redplan.py
 }
 
 stage_engine_availability() {
@@ -214,11 +225,12 @@ stage_lint() {
 }
 
 stage_analyze() {
-  # full preset x variant matrix: lint errors, unproven overflow bounds,
-  # and static/paper/measured depth mismatches all fail; the checked-in
-  # snapshot gates analytic drift (measured-timing drift only warns, so a
-  # clean checkout with an empty plan cache still passes)
-  python -m repro.analysis --all --check
+  # full preset x variant matrix: lint errors, unproven overflow bounds
+  # (eager AND lazy-plan obligations), and static/paper/measured depth
+  # mismatches all fail; the checked-in snapshot gates analytic drift
+  # (measured-timing drift only warns — unless --strict, the nightly
+  # mode — so a clean checkout with an empty plan cache still passes)
+  python -m repro.analysis --all --check "${STRICT_ARGS[@]}"
 }
 
 stage_bench_smoke() {
@@ -232,15 +244,17 @@ stage_bench_smoke() {
 stage_bench_gate() {
   # fresh trajectory lap vs benchmarks/BENCH_farm_trajectory.json: entry
   # set (preset x engine x producer x matrix_depth) must match exactly;
-  # >20% p50/p99 regressions are flagged (warnings here — timings are
-  # host-dependent; run with --strict locally to make them errors)
-  python benchmarks/keystream_farm_bench.py --check
+  # >20% p50/p99 regressions are flagged (warnings by default — timings
+  # are host-dependent; the nightly lap runs ci.sh --strict to make them
+  # errors on the quiet scheduled runner)
+  python benchmarks/keystream_farm_bench.py --check "${STRICT_ARGS[@]}"
 }
 
 stage_fast_lap() {
-  # engine/schedule suites have their own stages; everything else not slow
+  # engine/schedule/redplan suites have their own stages; everything else
+  # not slow
   python -m pytest -x -q -m "not slow" --ignore=tests/test_engine.py \
-    --ignore=tests/test_schedule.py
+    --ignore=tests/test_schedule.py --ignore=tests/test_redplan.py
 }
 
 stage_slow_lap() {
@@ -263,14 +277,17 @@ run_stage() {
 # --------------------------------------------------------------------------
 SELECTED=()
 FAST=0
+STRICT_ARGS=()
 while [[ $# -gt 0 ]]; do
   case "$1" in
     --list) list_stages; exit 0 ;;
     --fast) FAST=1; shift ;;
+    --strict) STRICT_ARGS=(--strict); shift ;;
     --stage)
       [[ $# -ge 2 ]] || { echo "--stage needs a name (--list)" >&2; exit 2; }
       SELECTED+=("$2"); shift 2 ;;
-    *) echo "unknown argument: $1 (--list | --fast | --stage <name>)" >&2
+    *) echo "unknown argument: $1" \
+       "(--list | --fast | --strict | --stage <name>)" >&2
        exit 2 ;;
   esac
 done

@@ -27,13 +27,18 @@ from repro.analysis.cost import (
     MachineModel,
     analyze_cost,
     predict_engine_times,
+    reduction_report,
     validate_measured_ordering,
 )
 from repro.analysis.lint import ERROR, lint
 from repro.core.params import REGISTRY, get_params
+from repro.core.redplan import plan_reductions
 from repro.core.schedule import VARIANTS
 
-SNAPSHOT_SCHEMA = 1
+#: 1 = initial analytic matrix; 2 = reduction-scheduling pass (per-variant
+#: "reduction" eager-vs-lazy cond-subtract deltas + lazy-plan overflow
+#: proofs; lint now runs against the shipped lazy plan so SA111 is live)
+SNAPSHOT_SCHEMA = 2
 DEFAULT_SNAPSHOT = (pathlib.Path(__file__).resolve().parents[3]
                     / "benchmarks" / "BENCH_schedule_analysis.json")
 #: relative drift in measured per-lane p50 that --check flags
@@ -44,10 +49,24 @@ def analyze_one(name: str, variant: str, measure: bool = True) -> dict:
     """Run all three analyzers on one (preset, variant); JSON-able dict."""
     params = get_params(name)
     sched = params.schedule(variant)
-    findings = lint(sched)
-    proof = prove_overflow_safety(params, sched)
+    lazy_plan = plan_reductions(params, sched, "lazy")
+    findings = lint(sched, plan=lazy_plan)
+    proof = prove_overflow_safety(params, sched, reduction="eager")
+    lazy_proof = prove_overflow_safety(params, sched, plan=lazy_plan)
     depth = depth_report(params, variant, measure=measure)
     cost = analyze_cost(params, sched)
+    red = reduction_report(params, sched)
+
+    def proof_json(p):
+        return {
+            "proved": p.proved,
+            "n_checks": len(p.checks),
+            "min_margin_bits": round(p.min_margin_bits, 4),
+            "tightest": (f"{p.tightest.provenance} :: "
+                         f"{p.tightest.site}"),
+            "failures": [c.render() for c in p.failures()],
+        }
+
     return {
         "preset": name,
         "variant": variant,
@@ -57,14 +76,8 @@ def analyze_one(name: str, variant: str, measure: bool = True) -> dict:
             "warnings": [f.render() for f in findings
                          if f.severity != ERROR],
         },
-        "overflow": {
-            "proved": proof.proved,
-            "n_checks": len(proof.checks),
-            "min_margin_bits": round(proof.min_margin_bits, 4),
-            "tightest": (f"{proof.tightest.provenance} :: "
-                         f"{proof.tightest.site}"),
-            "failures": [c.render() for c in proof.failures()],
-        },
+        "overflow": proof_json(proof),
+        "overflow_lazy": proof_json(lazy_proof),
         "depth": {
             "static": depth.static,
             "paper": depth.paper,
@@ -72,9 +85,10 @@ def analyze_one(name: str, variant: str, measure: bool = True) -> dict:
             "ok": depth.ok,
         },
         "cost": cost.to_json(),
+        "reduction": red.to_json(),
         "ok": (not findings or all(f.severity != ERROR
                                    for f in findings))
-        and proof.proved and depth.ok,
+        and proof.proved and lazy_proof.proved and depth.ok,
     }
 
 
@@ -84,12 +98,14 @@ def render_table(res: dict) -> str:
     le, lw = res["lint"]["errors"], res["lint"]["warnings"]
     lines.append(f"  lint: {len(le)} error(s), {len(lw)} warning(s)")
     lines += [f"    {m}" for m in le + lw]
-    ov = res["overflow"]
-    lines.append(
-        f"  overflow: {'PROVED' if ov['proved'] else 'UNPROVEN'} "
-        f"({ov['n_checks']} obligations, min margin "
-        f"{ov['min_margin_bits']:+.2f} bits at {ov['tightest']})")
-    lines += [f"    {m}" for m in ov["failures"]]
+    for mode in ("overflow", "overflow_lazy"):
+        ov = res[mode]
+        tag = "overflow[lazy]" if mode == "overflow_lazy" else "overflow"
+        lines.append(
+            f"  {tag}: {'PROVED' if ov['proved'] else 'UNPROVEN'} "
+            f"({ov['n_checks']} obligations, min margin "
+            f"{ov['min_margin_bits']:+.2f} bits at {ov['tightest']})")
+        lines += [f"    {m}" for m in ov["failures"]]
     d = res["depth"]
     m = "-" if d["measured"] is None else d["measured"]
     lines.append(f"  depth: static={d['static']} paper={d['paper']} "
@@ -101,6 +117,11 @@ def render_table(res: dict) -> str:
         f"{c['bytes_per_lane']} B moved "
         f"(intensity {c['modmul_intensity']:.4f} modmul/B), "
         f"{c['call_sites']} call sites")
+    r = res["reduction"]
+    lines.append(
+        f"  reduction: eager {r['eager_steps']} -> lazy {r['lazy_steps']} "
+        f"cond-subtract steps/lane (-{r['saved_steps']}, "
+        f"{r['saved_pct']:.1f}% saved)")
     return "\n".join(lines)
 
 
@@ -177,6 +198,13 @@ def check_snapshot(snapshot: dict, current: dict, strict: bool) -> list:
                 ("overflow n_checks", lambda r: r["overflow"]["n_checks"]),
                 ("overflow min_margin_bits",
                  lambda r: r["overflow"]["min_margin_bits"]),
+                ("overflow_lazy proved",
+                 lambda r: r["overflow_lazy"]["proved"]),
+                ("overflow_lazy n_checks",
+                 lambda r: r["overflow_lazy"]["n_checks"]),
+                ("overflow_lazy min_margin_bits",
+                 lambda r: r["overflow_lazy"]["min_margin_bits"]),
+                ("reduction", lambda r: r["reduction"]),
                 ("depth static", lambda r: r["depth"]["static"]),
                 ("depth paper", lambda r: r["depth"]["paper"]),
                 ("cost", lambda r: {k: v for k, v in r["cost"].items()

@@ -97,9 +97,20 @@ def _site(mod, provenance: str, name: str, bound: int) -> list:
     ))
 
 
+def _fit(provenance: str, name: str, bound: int) -> list:
+    """A u32-fit-ONLY obligation: no reduce fires at this site (the value
+    flows raw into a downstream accumulator that owns the reduce)."""
+    from repro.crypto.modmath import BoundSite
+
+    return _wrap(provenance, (BoundSite(site=name, bound=bound,
+                                        limit=2**32),))
+
+
 def prove_overflow_safety(params: CipherParams,
                           schedule: Optional[Schedule] = None,
-                          variant: str = "normal") -> OverflowProof:
+                          variant: str = "normal",
+                          reduction: str = "eager",
+                          plan=None) -> OverflowProof:
     """Prove every intermediate of ``schedule`` fits uint32 and reduces.
 
     The walk visits each op once; MRMC obligations use the preset's actual
@@ -109,11 +120,27 @@ def prove_overflow_safety(params: CipherParams,
     flip is a relabeling), so one proof covers what both orientations of
     an op compute — but the variant is still walked op-for-op so
     provenance matches the program that ships.
+
+    ``reduction`` selects which reduction schedule (`core/redplan.py`) the
+    proof discharges: "eager" replays the legacy everything-reduced
+    datapath; "lazy" replays every deferral the shipped plan makes — the
+    relaxed ARK sum, the lazy shift-add accumulators at their raw term
+    bounds, the deferred dense products at 3q in narrowed chunks, and the
+    folded branch-mix terminal reduce — one obligation per deferred site.
+    An explicit ``plan`` overrides the mode (the can-fail path: an
+    over-deferred plan yields *undischarged* obligations here, including
+    the terminal-reduction-law sites, rather than an exception).
     """
     if schedule is None:
         schedule = params.schedule(variant)
     mod = params.mod
     q = mod.q
+    if plan is None:
+        from repro.core.redplan import plan_reductions
+
+        plan = plan_reductions(params, schedule, reduction)
+    from repro.core import redplan as RP
+
     checks: list = []
 
     # Modulus-level obligations: limb products, shift-reduce, add/sub.
@@ -123,32 +150,80 @@ def prove_overflow_safety(params: CipherParams,
     mat = params.mix_matrix()
     rows = {tuple(int(c) for c in row) for row in mat}
 
-    for info in schedule.op_table():
+    for i, info in enumerate(schedule.op_table()):
         op = info.op
         prov = info.provenance
+        p = plan.ops[i] if i < len(plan.ops) else RP.OpPlan(i, q, q)
+        in_b = p.in_bound
         if isinstance(op, S.ARK):
-            # x + (k (.) rc): both mul output and x are < q
-            checks += _site(mod, prov, "ark: x + k*rc operands", 2 * q)
+            if p.has(RP.DEFER_OUT):
+                # x (< in_b) + (k (.) rc) (< q) stays RAW: fit-only — the
+                # next op's lazy accumulator owns the reduce
+                checks += _fit(prov, "ark: x + k*rc (deferred, raw out)",
+                               in_b + q)
+            else:
+                # x + (k (.) rc): mul output < q, x < in_b
+                checks += _site(mod, prov, "ark: x + k*rc operands",
+                                in_b + q)
         elif isinstance(op, S.MRMC):
             if op.streams_matrix:
                 # stream-sourced dense affine layer: one t-term dense
                 # matvec row per output element, accumulated under the
                 # chunked policy matvec_dense / mrmc_dense_apply execute
                 t = info.in_width // schedule.branches
-                checks += _wrap(prov, mod.dense_accumulate_sites(
-                    t, site=f"dense matvec t={t}"))
+                if p.has(RP.LAZY_DENSE):
+                    # relaxed limb multiply (state operand < in_b) with the
+                    # per-product final reduce deferred: raw products < 3q
+                    checks += _wrap(
+                        prov + " [lazy-dense mul]",
+                        mod.mul_bound_sites(x_bound=q, y_bound=in_b,
+                                            reduce_out=False))
+                    checks += _wrap(prov, mod.dense_accumulate_sites(
+                        t, site=f"dense matvec t={t} (lazy)",
+                        prod_bound=3 * q))
+                else:
+                    checks += _wrap(prov, mod.dense_accumulate_sites(
+                        t, site=f"dense matvec t={t}"))
             else:
                 # two shift-add matvec passes (MixColumns then MixRows)
                 # per branch run the same row set; bounds are per-row
+                lazy_a = p.has(RP.LAZY_ACCUMULATE)
                 for row in sorted(rows):
-                    checks += _wrap(prov, mod.accumulate_sites(
-                        row, site=f"mrmc row {list(row)}"))
+                    if lazy_a:
+                        # first pass accepts operands < in_b; its rows are
+                        # terminally reduced, so the second pass relaxes
+                        # from q — both replayed at their true bounds
+                        checks += _wrap(prov, mod.accumulate_sites(
+                            row, site=f"mrmc row {list(row)} (lazy cols)",
+                            in_bound=in_b, lazy=True))
+                        checks += _wrap(prov, mod.accumulate_sites(
+                            row, site=f"mrmc row {list(row)} (lazy rows)",
+                            lazy=True))
+                    else:
+                        checks += _wrap(prov, mod.accumulate_sites(
+                            row, site=f"mrmc row {list(row)}"))
+            fold = p.has(RP.FOLD_MIX)
+            mix_in = 2 * q if op.has_rc else q
             if op.has_rc:
-                checks += _site(mod, prov, "affine: matrix_out + rc", 2 * q)
+                if fold:
+                    checks += _fit(prov,
+                                   "affine: matrix_out + rc (deferred, raw)",
+                                   2 * q)
+                else:
+                    checks += _site(mod, prov, "affine: matrix_out + rc",
+                                    2 * q)
             if op.mix_branches:
-                checks += _site(mod, prov, "branch mix: s = L + R", 2 * q)
-                checks += _site(mod, prov, "branch mix: s + L (and s + R)",
-                                2 * q)
+                if fold:
+                    checks += _fit(prov, "branch mix: s = L + R (raw)",
+                                   2 * mix_in)
+                    checks += _site(mod, prov,
+                                    "branch mix: s + L (and s + R), "
+                                    "one terminal reduce", 3 * mix_in)
+                else:
+                    checks += _site(mod, prov, "branch mix: s = L + R",
+                                    2 * q)
+                    checks += _site(mod, prov,
+                                    "branch mix: s + L (and s + R)", 2 * q)
         elif isinstance(op, S.NONLINEAR):
             if op.kind == "cube":
                 # x^3 = mul(mul(x, x), x): both muls take [0, q) operands,
@@ -157,12 +232,25 @@ def prove_overflow_safety(params: CipherParams,
                 checks += _site(mod, prov,
                                 "cube: mul(mul(x,x),x) final sum", 3 * q)
             else:
-                checks += _site(mod, prov, "feistel: x + shift(x^2)", 2 * q)
+                checks += _site(mod, prov, "feistel: x + shift(x^2)",
+                                in_b + q)
         elif isinstance(op, S.AGN):
             # signed noise e with |e| < q folded to [0, 2q) then reduced,
             # then added to the state
             checks += _site(mod, prov, "agn: signed fold e + q", 2 * q)
-            checks += _site(mod, prov, "agn: x + e_folded", 2 * q)
+            checks += _site(mod, prov, "agn: x + e_folded", in_b + q)
+    # Terminal-reduction law (lint rule SA111): state must be fully
+    # reduced before every TRUNCATE/AGN input and at program end.  Under
+    # the shipped plans these discharge trivially; an over-deferred custom
+    # plan surfaces here as an UNDISCHARGED obligation.
+    from repro.crypto.modmath import BoundSite
+
+    for idx, what, bound in plan.terminal_sites(schedule):
+        where = f"ops[{idx}]" if idx is not None else "program end"
+        checks += _wrap(
+            f"terminal-reduction law (SA111) [{plan.mode}]",
+            (BoundSite(site=f"{where}: {what} fully reduced", bound=bound,
+                       limit=q),))
     return OverflowProof(schedule=schedule.name, q=q, checks=tuple(checks))
 
 

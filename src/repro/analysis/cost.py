@@ -137,19 +137,17 @@ def analyze_cost(params: CipherParams,
             # stream-sourced dense affine layer: one t x t matvec per
             # branch under the chunked-accumulate policy of
             # Modulus.matvec_dense (products < q sum raw in uint32 per
-            # chunk, one reduce per chunk, cross-chunk adds bounded 2q)
+            # divisor chunk, one reduce per chunk, then one raw fold of
+            # the reduced partials — Modulus.dense_chunk_schedule)
             t = w // nb
-            chunk = mod.dense_chunk()
-            nchunks = -(-t // chunk)
-            chunk_steps = sum(
-                len(mod.reduce_steps(min(chunk, t - a) * mod.q))
-                for a in range(0, t, chunk))
+            ch, nch = mod.dense_chunk_schedule(t)
             muls += nb * t * t
-            adds += nb * t * (t - nchunks)        # raw in-chunk sums
-            adds += nb * t * (nchunks - 1)        # cross-chunk accumulate
-            steps += nb * t * chunk_steps
-            steps += nb * t * (nchunks - 1) * add_steps
-            sites += 1 + 2 * nchunks + 2 * (nchunks - 1)
+            adds += nb * t * (t - nch)            # raw in-chunk sums
+            adds += nb * t * (nch - 1)            # partial-sum fold
+            steps += nb * t * nch * len(mod.reduce_steps(ch * mod.q))
+            if nch > 1:
+                steps += nb * t * len(mod.reduce_steps(nch * mod.q))
+            sites += 3 + (2 if nch > 1 else 0)
             if op.has_rc:
                 adds += w
                 steps += w * add_steps
@@ -189,9 +187,11 @@ def analyze_cost(params: CipherParams,
                 steps += nb * t * add_steps
                 sites += 2 * nb
         elif isinstance(op, S.AGN):
-            adds += 2 * w
-            steps += w * (add_steps + len(mod.reduce_steps(2 * mod.q)))
-            sites += 3
+            # signed fold is a where-select (lands in [0, q), no reduce);
+            # the one reduced add is the only reduce this path needs
+            adds += w
+            steps += w * add_steps
+            sites += 2
     noise_bytes = 4 * params.l if params.n_noise else 0
     mat_bytes = 4 * schedule.n_matrix_constants   # streamed matrix planes
     return CostReport(
@@ -204,6 +204,157 @@ def analyze_cost(params: CipherParams,
         + mat_bytes,
         bytes_out_per_lane=4 * params.l,
     )
+
+
+# ==========================================================================
+# Reduction-schedule accounting: eager vs lazy conditional-subtract steps
+# ==========================================================================
+def _row_reduce_steps(mod, row, in_bound: int, lazy: bool) -> int:
+    """Conditional-subtract steps ONE shift-add matvec row fires under the
+    eager or lazy accumulate policy — a steps-only replay of the walk
+    `Modulus.matvec_small` / `accumulate_sites` share."""
+    steps = 0
+    bound = 0
+    for c in row:
+        c = int(c)
+        if c == 0:
+            continue
+        if lazy:
+            tb = c * in_bound          # raw add chain, no per-term reduce
+        else:
+            tb = mod.q
+            if c > 1:
+                steps += len(mod.reduce_steps(c * mod.q))
+        if bound == 0:
+            bound = tb
+        else:
+            if bound + tb >= 2**32:
+                steps += len(mod.reduce_steps(bound))
+                bound = mod.q
+            bound += tb
+    steps += len(mod.reduce_steps(bound))   # terminal row reduce
+    return steps
+
+
+def count_reduce_steps(params: CipherParams, schedule: Schedule,
+                       plan) -> int:
+    """Total conditional-subtract select steps per keystream lane when the
+    program executes under ``plan`` (a `core.redplan.ReductionPlan`) —
+    including the limb-internal reduces of every modular multiply
+    (`Modulus.mul_reduce_steps`), replayed from the same static step
+    schedules the datapath fires."""
+    from repro.core import redplan as RP
+
+    mod = params.mod
+    q = mod.q
+    add_steps = len(mod.reduce_steps(2 * q))
+    mat = params.mix_matrix()
+    v, nb = params.v, schedule.branches
+    total = 0
+    for i, info in enumerate(schedule.op_table()):
+        op, w = info.op, info.in_width
+        p = plan.ops[i]
+        in_b = p.in_bound
+        if isinstance(op, S.ARK):
+            m = op.key_len
+            total += m * mod.mul_reduce_steps()       # k (.) rc limb mul
+            if not p.has(RP.DEFER_OUT):
+                total += m * len(mod.reduce_steps(in_b + q))
+        elif isinstance(op, S.MRMC) and op.streams_matrix:
+            t = w // nb
+            lazy_d = p.has(RP.LAZY_DENSE)
+            per_mul = mod.mul_reduce_steps(
+                None, in_b if lazy_d else None, reduce_out=not lazy_d)
+            total += nb * t * t * per_mul
+            pb = 3 * q if lazy_d else q
+            ch, nch = mod.dense_chunk_schedule(t, pb)
+            total += nb * t * nch * len(mod.reduce_steps(ch * pb))
+            if nch > 1:
+                total += nb * t * len(mod.reduce_steps(nch * q))
+            fold = p.has(RP.FOLD_MIX)
+            if op.has_rc and not fold:
+                total += w * add_steps
+            if op.mix_branches:
+                t2 = w // 2
+                if fold:
+                    mix_in = 2 * q if op.has_rc else q
+                    total += 2 * t2 * len(mod.reduce_steps(3 * mix_in))
+                else:
+                    total += 3 * t2 * add_steps
+        elif isinstance(op, S.MRMC):
+            lazy_a = p.has(RP.LAZY_ACCUMULATE)
+            for row in mat:
+                # first pass sees operands < in_b; its rows reduce
+                # terminally, so the second pass runs from q
+                total += nb * v * (
+                    _row_reduce_steps(mod, row, in_b, lazy_a)
+                    + _row_reduce_steps(mod, row, q, lazy_a))
+            if op.has_rc:
+                total += w * add_steps
+            if op.mix_branches:
+                total += 3 * (w // 2) * add_steps
+        elif isinstance(op, S.NONLINEAR):
+            if op.kind == "cube":
+                total += 2 * w * mod.mul_reduce_steps()
+            else:
+                t = w // nb
+                total += nb * (t - 1) * mod.mul_reduce_steps()
+                total += nb * t * len(mod.reduce_steps(in_b + q))
+        elif isinstance(op, S.AGN):
+            total += w * add_steps
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class ReductionReport:
+    """Eager vs lazy conditional-subtract totals for one program — the
+    reduction-scheduling pass's measurable static win, surfaced in the
+    analysis snapshot (`repro.analysis.__main__`)."""
+
+    schedule: str
+    eager_steps: int        # per lane, everything-reduced plan
+    lazy_steps: int         # per lane, shipped lazy plan
+
+    @property
+    def saved_steps(self) -> int:
+        return self.eager_steps - self.lazy_steps
+
+    @property
+    def saved_pct(self) -> float:
+        return 100.0 * self.saved_steps / max(1, self.eager_steps)
+
+    def to_json(self) -> dict:
+        return {
+            "schedule": self.schedule,
+            "eager_steps": self.eager_steps,
+            "lazy_steps": self.lazy_steps,
+            "saved_steps": self.saved_steps,
+            "saved_pct": round(self.saved_pct, 3),
+        }
+
+    def render(self) -> str:
+        return (f"reduction {self.schedule}: eager {self.eager_steps} -> "
+                f"lazy {self.lazy_steps} cond-subtract steps/lane "
+                f"(-{self.saved_steps}, {self.saved_pct:.1f}% saved)")
+
+
+def reduction_report(params: CipherParams,
+                     schedule: Optional[Schedule] = None,
+                     variant: str = "normal") -> ReductionReport:
+    """Count the program's conditional-subtract steps under the eager and
+    lazy reduction plans (`core/redplan.py`) and report the delta.  The
+    lazy plan is the shipped default datapath, so ``saved_steps`` is the
+    static reduce-work the pass actually removed."""
+    from repro.core.redplan import plan_reductions
+
+    if schedule is None:
+        schedule = params.schedule(variant)
+    eager = count_reduce_steps(
+        params, schedule, plan_reductions(params, schedule, "eager"))
+    lazy = count_reduce_steps(
+        params, schedule, plan_reductions(params, schedule, "lazy"))
+    return ReductionReport(schedule=schedule.name, eager_steps=eager,
+                           lazy_steps=lazy)
 
 
 # ==========================================================================

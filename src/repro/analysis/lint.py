@@ -21,16 +21,24 @@ Rule catalog (docs/DESIGN.md §13 — keep in sync):
   SA108  rc-storage-perm   FIFO reorder is a slice-local, branch-local perm
   SA109  op-fields         enum fields (orientation, nonlinearity) in range
   SA110  mat-plane-shape   stream ops carry a well-formed matrix-plane slice
+  SA111  terminal-reduction state fully reduced at TRUNCATE/AGN/program end
+                           under the active reduction plan (core/redplan.py)
   SA201  vacuous-variant   (warning) alternating plan that never flips
 
 Suppression: a rule code listed in ``Schedule.suppress`` (the program's
 own ``# noqa`` escape hatch) or passed via ``lint(sched, suppress=...)``
 is skipped.  Errors gate CI; warnings are reported but never fail.
+
+Plan-aware rules: checkers declaring a third parameter receive the
+``ReductionPlan`` passed to ``lint(sched, plan=...)`` (None when the
+caller lints the schedule alone) — the linter threads reduction-schedule
+context without changing the two-argument rule contract.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -92,12 +100,18 @@ def registered_rules() -> Tuple[Rule, ...]:
     return tuple(_RULES[c] for c in sorted(_RULES))
 
 
-def lint(sched: Schedule, suppress: Iterable[str] = ()) -> List[Finding]:
+def lint(sched: Schedule, suppress: Iterable[str] = (),
+         plan=None) -> List[Finding]:
     """Run every registered rule over ``sched``; return all findings.
 
     Rules named in ``suppress`` or in ``sched.suppress`` are skipped
     entirely (the noqa mechanism).  Unknown codes in either set raise —
     a suppression that matches nothing is a stale escape hatch.
+
+    ``plan`` (a `core.redplan.ReductionPlan`, optional) is handed to
+    plan-aware rules — checkers whose signature declares a third
+    parameter (SA111) — so reduction-schedule laws lint alongside the
+    structural ones; with ``plan=None`` those rules have nothing to check.
     """
     muted = set(suppress) | set(sched.suppress)
     unknown = muted - set(_RULES)
@@ -111,7 +125,10 @@ def lint(sched: Schedule, suppress: Iterable[str] = ()) -> List[Finding]:
     for r in registered_rules():
         if r.code in muted:
             continue
-        for op_index, message in r.check(sched, table):
+        takes_plan = len(inspect.signature(r.check).parameters) >= 3
+        results = r.check(sched, table, plan) if takes_plan \
+            else r.check(sched, table)
+        for op_index, message in results:
             prov = (table[op_index].provenance
                     if op_index is not None and op_index < len(table)
                     else sched.name)
@@ -386,6 +403,27 @@ def _check_mat_plane_shape(sched, table):
                 f"mat_slice starts at {a} but the matrix FIFO cursor is "
                 f"at {cursor} — planes must be consumed in stream order")
         cursor = max(cursor, b)
+
+
+@rule("SA111", "terminal-reduction")
+def _check_terminal_reduction(sched, table, plan=None):
+    """The terminal-reduction law (docs/DESIGN.md §14): under ANY
+    reduction plan the state must be fully reduced (< q) entering every
+    TRUNCATE and AGN and at program end — keystream bytes are defined as
+    canonical residues, so a reduce deferred past an output boundary
+    emits wrong answers, not just different scheduling.  Plan-aware: only
+    checks when `lint(sched, plan=...)` supplies the active plan."""
+    if plan is None:
+        return
+    if len(plan.ops) != len(sched.ops):
+        yield None, (f"reduction plan has {len(plan.ops)} op entries for a "
+                     f"{len(sched.ops)}-op program (stale plan)")
+        return
+    for idx, what, bound in plan.terminal_sites(sched):
+        if bound > plan.q:
+            yield idx, (f"{what} bound {bound} > q={plan.q} under the "
+                        f"{plan.mode!r} plan — a reduce is deferred past "
+                        f"the output boundary (terminal-reduction law)")
 
 
 @rule("SA201", "vacuous-variant", severity=WARNING)

@@ -242,16 +242,19 @@ class CipherBatch:
 
     def make_engine(self, spec: EngineSpec = "auto", *, mesh=None,
                     axis: str = "data", interpret=None,
-                    variant: Optional[str] = None):
+                    variant: Optional[str] = None,
+                    reduction: Optional[str] = None):
         """Bind a consumer engine to this pool's (params, key).
 
         The farm, serving loop, and data plane all get their consumers
         here, so backend policy stays in `repro.core.engine`.  ``variant``
         picks the schedule orientation plan (core/schedule.py; "auto" =
-        the backend's preferred one) — bit-exact either way.
+        the backend's preferred one) and ``reduction`` the reduction-
+        scheduling mode (core/redplan.py) — bit-exact either way.
         """
         return make_engine(spec, self.params, self.key, mesh=mesh,
-                           axis=axis, interpret=interpret, variant=variant)
+                           axis=axis, interpret=interpret, variant=variant,
+                           reduction=reduction)
 
     # ---------------- producer plumbing -----------------------------------
     def set_producer(self, spec: ProducerSpec) -> ConstantsProducer:

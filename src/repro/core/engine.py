@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.params import CipherParams
+from repro.core.redplan import DEFAULT_REDUCTION, REDUCTION_MODES
 from repro.core.schedule import VARIANTS, build_schedule
 from repro.kernels.keystream.keystream import BLK
 from repro.kernels.keystream.ops import (
@@ -97,7 +98,8 @@ class KeystreamEngine:
 
     def __init__(self, params: CipherParams, key, *, mesh=None,
                  axis: str = "data", interpret: Optional[bool] = None,
-                 variant: str = "normal"):
+                 variant: str = "normal",
+                 reduction: str = DEFAULT_REDUCTION):
         self.params = params
         self.key = jnp.asarray(key, jnp.uint32)
         self.mesh = mesh
@@ -112,6 +114,15 @@ class KeystreamEngine:
                 f"{variant!r} (supports {self.caps.schedule_variants})"
             )
         self.variant = variant
+        if reduction not in REDUCTION_MODES:
+            raise ValueError(
+                f"unknown reduction mode {reduction!r}; expected one of "
+                f"{REDUCTION_MODES}"
+            )
+        #: reduction-scheduling mode ("lazy" | "eager") — bit-exact either
+        #: way (core/redplan.py); engines thread the mode string and the
+        #: executors rebuild the cached plan inside their traces
+        self.reduction = reduction
         #: the declarative round program this engine executes
         self.schedule = build_schedule(params, variant)
 
@@ -252,7 +263,8 @@ EngineSpec = Union[str, KeystreamEngine]
 
 def make_engine(spec: EngineSpec, params: CipherParams, key, *, mesh=None,
                 axis: str = "data", interpret: Optional[bool] = None,
-                variant: Optional[str] = None) -> KeystreamEngine:
+                variant: Optional[str] = None,
+                reduction: Optional[str] = None) -> KeystreamEngine:
     """Resolve ``spec`` and bind it to (params, key).
 
     ``spec`` may already be a KeystreamEngine instance (passed through —
@@ -271,6 +283,11 @@ def make_engine(spec: EngineSpec, params: CipherParams, key, *, mesh=None,
     with whatever plan it already executes; an *explicit* variant that
     contradicts a pre-bound instance raises instead of being silently
     ignored.
+
+    ``reduction`` picks the reduction-scheduling mode ("lazy" | "eager",
+    core/redplan.py) with the same None-means-unspecified semantics —
+    newly constructed engines default to "lazy"; an explicit mode that
+    contradicts a pre-bound instance raises.  Both modes are bit-exact.
     """
     if isinstance(spec, KeystreamEngine):
         if spec.params != params or not bool(
@@ -287,6 +304,12 @@ def make_engine(spec: EngineSpec, params: CipherParams, key, *, mesh=None,
                 f"{spec.variant!r} schedule variant; requested {variant!r} "
                 "— rebind with make_engine instead of passing the instance"
             )
+        if reduction is not None and reduction != spec.reduction:
+            raise ValueError(
+                f"engine {spec.name!r} already runs the {spec.reduction!r} "
+                f"reduction schedule; requested {reduction!r} — rebind "
+                "with make_engine instead of passing the instance"
+            )
         return spec
     name = resolve_engine(spec, interpret=interpret, mesh=mesh,
                           params=params, axis=axis)
@@ -299,7 +322,9 @@ def make_engine(spec: EngineSpec, params: CipherParams, key, *, mesh=None,
             "table)"
         )
     return cls(params, key, mesh=mesh, axis=axis, interpret=interpret,
-               variant=variant if variant is not None else "normal")
+               variant=variant if variant is not None else "normal",
+               reduction=reduction if reduction is not None
+               else DEFAULT_REDUCTION)
 
 
 # ==========================================================================
@@ -322,7 +347,8 @@ class RefEngine(KeystreamEngine):
 
     def _run(self, rc, noise, mats):
         return keystream_ref(self.params, self.key, rc, noise,
-                             variant=self.variant, mats=mats)
+                             variant=self.variant, mats=mats,
+                             reduction=self.reduction)
 
 
 @register_engine
@@ -332,14 +358,17 @@ class JaxEngine(KeystreamEngine):
     name = "jax"
 
     def __init__(self, params, key, *, mesh=None, axis="data",
-                 interpret=None, variant="normal"):
+                 interpret=None, variant="normal",
+                 reduction=DEFAULT_REDUCTION):
         super().__init__(params, key, mesh=mesh, axis=axis,
-                         interpret=interpret, variant=variant)
-        # params/variant via partial => static; key/rc/noise traced
-        # (noise=None is a valid empty pytree, so one jit covers both
-        # arities)
+                         interpret=interpret, variant=variant,
+                         reduction=reduction)
+        # params/variant/reduction via partial => static; key/rc/noise
+        # traced (noise=None is a valid empty pytree, so one jit covers
+        # both arities)
         self._fn = jax.jit(functools.partial(keystream_ref, params,
-                                             variant=self.variant))
+                                             variant=self.variant,
+                                             reduction=self.reduction))
 
     @classmethod
     def query_caps(cls, *, mesh=None, axis="data") -> EngineCaps:
@@ -361,7 +390,7 @@ class _PallasBase(KeystreamEngine):
             noise = None    # kernel's 2-input variant
         return keystream_kernel_apply(
             self.params, self.key, rc, noise, interpret=self._interpret,
-            variant=self.variant, mats=mats,
+            variant=self.variant, mats=mats, reduction=self.reduction,
         )
 
 
@@ -459,7 +488,7 @@ class ShardedEngine(KeystreamEngine):
         return keystream_kernel_sharded(
             self.params, self.key, rc, noise, mesh=self.mesh,
             axis=self.axis, interpret=self.interpret, variant=self.variant,
-            mats=mats,
+            mats=mats, reduction=self.reduction,
         )
 
 

@@ -165,15 +165,16 @@ class KeystreamFarm:
 
     ``plan`` applies a measured :class:`repro.core.tuner.StreamPlan` in
     one shot — producer (rebound on the pool), engine, variant, depth,
-    and matrix_depth — with any explicitly-passed argument taking
-    precedence.
+    matrix_depth, and reduction mode — with any explicitly-passed
+    argument taking precedence.
     """
 
     def __init__(self, batch: CipherBatch, engine: Optional[EngineSpec] = None,
                  *, consumer: Optional[str] = None, mesh=None,
                  axis: str = "data", interpret: Optional[bool] = None,
                  variant: Optional[str] = None, depth: Optional[int] = None,
-                 matrix_depth: Optional[int] = None, plan=None):
+                 matrix_depth: Optional[int] = None,
+                 reduction: Optional[str] = None, plan=None):
         if engine is not None and consumer is not None:
             raise ValueError("pass engine= or the legacy consumer=, not both")
         self.plan = plan
@@ -187,6 +188,8 @@ class KeystreamFarm:
                 depth = plan.depth
             if matrix_depth is None:
                 matrix_depth = getattr(plan, "matrix_depth", 1)
+            if reduction is None:
+                reduction = getattr(plan, "reduction", None)
             self.window = plan.window
             batch.set_producer(plan.producer)
         spec = consumer if engine is None else engine
@@ -203,7 +206,8 @@ class KeystreamFarm:
         self.matrix_depth = matrix_depth
         self.batch = batch
         self.engine = batch.make_engine(spec, mesh=mesh, axis=axis,
-                                        interpret=interpret, variant=variant)
+                                        interpret=interpret, variant=variant,
+                                        reduction=reduction)
         self.consumer = self.engine.name     # backwards-compatible attr
         self.mesh = mesh
         self.axis = axis

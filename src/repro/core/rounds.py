@@ -40,14 +40,18 @@ def ic_vector(params: CipherParams) -> np.ndarray:
     )
 
 
-def ark(params: CipherParams, x, key, rc):
+def ark(params: CipherParams, x, key, rc, reduce_out: bool = True):
     """Add-round-key with randomized key schedule: x + k ⊙ rc (mod q).
 
     x: (..., m) state; key: (..., m) or (m,); rc: (..., m) round constants.
     m may be n (normal) or l (the truncated final ARK of Rubato).
+    ``reduce_out=False`` (the reduction plan's defer-out flag,
+    core/redplan.py) skips the output reduce: the raw sum, bounded by
+    x's bound + q, flows into the next op's lazy accumulator.
     """
     mod = params.mod
-    return mod.add(x, mod.mul(key, rc))
+    m = mod.mul(key, rc)
+    return mod.add(x, m) if reduce_out else x + m
 
 
 def _branch_view(params: CipherParams, x):
@@ -72,14 +76,18 @@ def mix_rows(params: CipherParams, x):
     return Y.reshape(x.shape)
 
 
-def mrmc(params: CipherParams, x):
+def mrmc(params: CipherParams, x, in_bound: int | None = None,
+         lazy: bool = False):
     """Fused MixRows∘MixColumns = M_v X M_v^T per branch, no transpose
-    materialized."""
+    materialized.  ``lazy=True`` (the reduction plan's lazy-accumulate
+    flag) runs both shift-add passes with raw terms and one terminal
+    reduce per row, accepting operands up to ``in_bound`` on the first
+    pass (its output is reduced, so the second pass relaxes from q)."""
     mod = params.mod
     M = params.mix_matrix()
     X = _branch_view(params, x)
-    Y = mod.matvec_small(M, X, axis=-2)   # M X
-    Z = mod.matvec_small(M, Y, axis=-1)   # (M X) M^T
+    Y = mod.matvec_small(M, X, axis=-2, in_bound=in_bound, lazy=lazy)  # M X
+    Z = mod.matvec_small(M, Y, axis=-1, lazy=lazy)   # (M X) M^T
     return Z.reshape(x.shape)
 
 
@@ -103,34 +111,53 @@ def cube(params: CipherParams, x):
     return params.mod.cube(x)
 
 
-def feistel(params: CipherParams, x):
+def feistel(params: CipherParams, x, in_bound: int | None = None):
     """Rubato/PASTA nonlinearity (type-3 Feistel, parallel form):
 
         y_1 = x_1;  y_i = x_i + x_{i-1}^2   (original x values — not chained)
 
     Applied independently per branch (PASTA's chain restarts at the branch
     boundary; with one branch this is the plain Rubato layer).
+    ``in_bound`` relaxes the operand contract: the square runs the
+    bound-carrying limb multiply (`Modulus.mul_fits` must hold) and the
+    output add reduces from in_bound + q instead of 2q.
     """
     mod = params.mod
     b = params.branches
+    in_b = mod.q if in_bound is None else in_bound
     X = x.reshape(x.shape[:-1] + (b, x.shape[-1] // b))
-    sq = mod.square(X[..., :-1])
+    if in_b <= mod.q:
+        sq = mod.square(X[..., :-1])
+        shifted = jnp.concatenate(
+            [jnp.zeros_like(X[..., :1]), sq], axis=-1
+        )
+        return mod.add(X, shifted).reshape(x.shape)
+    sq = mod.mul(X[..., :-1], X[..., :-1], x_bound=in_b, y_bound=in_b)
     shifted = jnp.concatenate(
         [jnp.zeros_like(X[..., :1]), sq], axis=-1
     )
-    return mod.add(X, shifted).reshape(x.shape)
+    return mod.reduce(X + shifted, in_b + mod.q).reshape(x.shape)
 
 
-def branch_mix(params: CipherParams, x):
+def branch_mix(params: CipherParams, x, in_bound: int | None = None,
+               lazy: bool = False):
     """PASTA branch mixing: (y_L, y_R) <- (2·y_L + y_R, y_L + 2·y_R) mod q.
 
     Linear and elementwise across the two branches, so it is orientation-
     agnostic (the same flat-index lanes combine in either storage order).
     Computed as s = y_L + y_R; (s + y_L, s + y_R) — two adds per output.
+    ``lazy=True`` (the reduction plan's fold-mix flag) folds the three
+    eager reduces into ONE terminal reduce from 3·in_bound, accepting
+    operands up to ``in_bound`` (e.g. the raw matrix_out + rc sum < 2q).
     """
     mod = params.mod
     t = x.shape[-1] // 2
     L, R_ = x[..., :t], x[..., t:]
+    if lazy:
+        in_b = mod.q if in_bound is None else in_bound
+        s = L + R_                                           # < 2·in_b
+        out = jnp.concatenate([s + L, s + R_], axis=-1)      # < 3·in_b
+        return mod.reduce(out, 3 * in_b)
     s = mod.add(L, R_)
     return jnp.concatenate([mod.add(s, L), mod.add(s, R_)], axis=-1)
 

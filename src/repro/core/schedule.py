@@ -583,12 +583,14 @@ def build_schedule(params: "CipherParams", variant: str = "normal") -> Schedule:
 # ==========================================================================
 # Pure-JAX interpreter (the reference executor)
 # ==========================================================================
-def _mrmc_flat(params: "CipherParams", x, flip_out: bool):
+def _mrmc_flat(params: "CipherParams", x, flip_out: bool,
+               in_bound: int | None = None, lazy: bool = False):
     """M_v·X·M_vᵀ per branch on flat (..., n) state; flip_out transposes
     the output (free by Eq. 2 — the stored-state compute is orientation-
     independent, which is also why the no-flip transposed case is plain
-    R.mrmc)."""
-    out = R.mrmc(params, x)
+    R.mrmc).  in_bound/lazy thread the reduction plan's lazy-accumulate
+    policy into the shift-add passes."""
+    out = R.mrmc(params, x, in_bound=in_bound, lazy=lazy)
     if flip_out:
         v, b = params.v, params.branches
         O = out.reshape(out.shape[:-1] + (b, v, v))
@@ -613,8 +615,17 @@ def _feistel_transposed(params: "CipherParams", x):
 
 
 def execute_schedule(params: "CipherParams", schedule: Schedule, key, rc,
-                     noise_signed=None, ic=None, mats=None):
+                     noise_signed=None, ic=None, mats=None,
+                     reduction: str = "lazy", plan=None):
     """Interpret ``schedule`` in pure JAX — the oracle all backends match.
+
+    ``reduction`` selects the reduction-scheduling mode ("lazy" — the
+    default, provably bit-exact — or "eager", the legacy
+    reduce-everything graphs); ``plan`` overrides it with an explicit
+    `core.redplan.ReductionPlan` (validated against the terminal-
+    reduction law before any op executes).  Either way the output is the
+    same canonical keystream — the plan only moves *where* the
+    conditional-subtract chains fire.
 
     key: (..., n) u32 in Z_q; rc: (..., n_round_constants) u32 in *logical*
     (producer) order; noise_signed: (..., l) i32 or None; mats:
@@ -642,6 +653,12 @@ def execute_schedule(params: "CipherParams", schedule: Schedule, key, rc,
             f"mats last dim {got} != {n_mat} (schedule {schedule.name} "
             "streams its affine matrices)"
         )
+    from repro.core import redplan as RP
+
+    if plan is None:
+        plan = RP.plan_reductions(params, schedule, reduction)
+    plan.validate(schedule)
+
     if schedule.init == "key":
         x = jnp.broadcast_to(key, rc.shape[:-1] + (params.n,))
     else:
@@ -650,14 +667,16 @@ def execute_schedule(params: "CipherParams", schedule: Schedule, key, rc,
         x = jnp.broadcast_to(ic, rc.shape[:-1] + (params.n,))
     tp = state_transpose_perm(schedule.v, schedule.branches)
 
-    for op in schedule.ops:
+    for i, op in enumerate(schedule.ops):
+        p_i = plan.ops[i]
         if isinstance(op, ARK):
             a, b = op.rc_slice
             rcs = rc[..., a:b]
             k = key[..., : op.key_len]
             if op.orientation == TRANSPOSED:
                 rcs, k = rcs[..., tp], key[..., tp]
-            x = R.ark(params, x, k, rcs)
+            x = R.ark(params, x, k, rcs,
+                      reduce_out=not p_i.has(RP.DEFER_OUT))
         elif isinstance(op, MRMC):
             if op.streams_matrix:
                 a, b = op.mat_slice
@@ -672,18 +691,28 @@ def execute_schedule(params: "CipherParams", schedule: Schedule, key, rc,
                 t = schedule.v * schedule.v
                 M = m.reshape(m.shape[:-1] + (schedule.branches, t, t))
                 X = x.reshape(x.shape[:-1] + (schedule.branches, t))
-                x = params.mod.matvec_dense(M, X).reshape(x.shape)
+                if p_i.has(RP.LAZY_DENSE):
+                    y = params.mod.matvec_dense(M, X, x_bound=p_i.in_bound,
+                                                lazy=True)
+                else:
+                    y = params.mod.matvec_dense(M, X)
+                x = y.reshape(x.shape)
             else:
                 x = _mrmc_flat(params, x,
-                               op.orientation != op.out_orientation)
+                               op.orientation != op.out_orientation,
+                               in_bound=p_i.in_bound,
+                               lazy=p_i.has(RP.LAZY_ACCUMULATE))
+            fold = p_i.has(RP.FOLD_MIX)
             if op.has_rc:
                 a, b = op.rc_slice
                 rcs = rc[..., a:b]
                 if op.out_orientation == TRANSPOSED:
                     rcs = rcs[..., tp]
-                x = params.mod.add(x, rcs)
+                # fold-mix: the raw sum (< 2q) defers into the mix reduce
+                x = x + rcs if fold else params.mod.add(x, rcs)
             if op.mix_branches:
-                x = R.branch_mix(params, x)
+                mix_in = params.mod.q * (2 if op.has_rc else 1)
+                x = R.branch_mix(params, x, in_bound=mix_in, lazy=fold)
         elif isinstance(op, NONLINEAR):
             if op.kind == "cube":
                 x = R.cube(params, x)            # orientation-agnostic

@@ -1,5 +1,5 @@
 """Measured StreamPlan autotuner: producer × engine × variant × window ×
-depth × matrix_depth.
+depth × matrix_depth × reduction.
 
 The ROADMAP's named follow-up to the engine registry — "latency-measured
 autotuning of (engine, variant)" — generalized to the full pipeline tuple
@@ -64,8 +64,11 @@ CACHE_VERSION = 1
 #: History: 1 = PR 4 entries (implicit, no schema field);
 #:          2 = branch-aware schedule executors (PASTA introduction);
 #:          3 = stream-sourced matrix planes (PASTA's dense affine
-#:              matrices; plans gain the farm's matrix_depth knob).
-PLAN_SCHEMA = 3
+#:              matrices; plans gain the farm's matrix_depth knob);
+#:          4 = reduction-scheduling pass (core/redplan.py; plans gain
+#:              the lazy/eager reduction mode as a measured dimension,
+#:              and the executors' default datapath moved to lazy).
+PLAN_SCHEMA = 4
 _ENV_CACHE = "REPRO_TUNER_CACHE"
 
 
@@ -84,6 +87,7 @@ class StreamPlan:
     window: int        # lanes per farm window
     depth: int         # producer->consumer FIFO depth (farm)
     matrix_depth: int = 1  # matrix-plane prefetch depth (farm; PASTA only)
+    reduction: str = "lazy"  # reduction-scheduling mode (core/redplan.py)
 
     def to_json(self) -> dict:
         return {
@@ -93,6 +97,7 @@ class StreamPlan:
             "window": int(self.window),
             "depth": int(self.depth),
             "matrix_depth": int(self.matrix_depth),
+            "reduction": self.reduction,
         }
 
     @classmethod
@@ -104,12 +109,14 @@ class StreamPlan:
             window=int(d["window"]),
             depth=int(d["depth"]),
             matrix_depth=int(d.get("matrix_depth", 1)),
+            reduction=str(d.get("reduction", "lazy")),
         )
 
     def describe(self) -> str:
         return (f"producer={self.producer} engine={self.engine} "
                 f"variant={self.variant} window={self.window} "
-                f"depth={self.depth} matrix_depth={self.matrix_depth}")
+                f"depth={self.depth} matrix_depth={self.matrix_depth} "
+                f"reduction={self.reduction}")
 
 
 # ==========================================================================
@@ -179,6 +186,10 @@ def _plan_is_valid(plan: StreamPlan, params: CipherParams, *,
     if ecaps is None or not ecaps.available:
         return False
     if plan.variant not in ecaps.schedule_variants:
+        return False
+    from repro.core.redplan import REDUCTION_MODES
+
+    if plan.reduction not in REDUCTION_MODES:
         return False
     return (plan.window >= 1 and plan.depth >= 1
             and plan.matrix_depth >= 1)
@@ -335,7 +346,8 @@ def candidate_plans(params: Union[CipherParams, str], lanes: int, *,
                     variants: Optional[Sequence[str]] = None,
                     windows: Optional[Sequence[int]] = None,
                     depths: Optional[Sequence[int]] = None,
-                    matrix_depths: Optional[Sequence[int]] = None
+                    matrix_depths: Optional[Sequence[int]] = None,
+                    reductions: Optional[Sequence[str]] = None
                     ) -> List[StreamPlan]:
     """The default candidate grid for one (preset, lanes) workload shape.
 
@@ -345,8 +357,10 @@ def candidate_plans(params: Union[CipherParams, str], lanes: int, *,
     half-batch split (more pipelining); depths: double and triple
     buffering.  Matrix depths: no-prefetch vs double-prefetch of the
     matrix plane — only a real dimension for stream-sourced-MRMC presets
-    (PASTA); otherwise pinned at 1.  Pass explicit sequences to override
-    any dimension.
+    (PASTA); otherwise pinned at 1.  Reductions: the lazy reduction
+    schedule vs the eager baseline (core/redplan.py; bit-exact, so like
+    variant it is purely a latency dimension).  Pass explicit sequences
+    to override any dimension.
     """
     params = _coerce_params(params)
     if producers is None:
@@ -366,6 +380,8 @@ def candidate_plans(params: Union[CipherParams, str], lanes: int, *,
         depths = (2, 3)
     if matrix_depths is None:
         matrix_depths = (1, 2) if params.n_matrix_constants else (1,)
+    if reductions is None:
+        reductions = ("lazy", "eager")
     plans = []
     for prod in producers:
         for eng in engines:
@@ -373,8 +389,10 @@ def candidate_plans(params: Union[CipherParams, str], lanes: int, *,
                 for win in windows:
                     for dep in depths:
                         for mdep in matrix_depths:
-                            plans.append(StreamPlan(prod, eng, var, int(win),
-                                                    int(dep), int(mdep)))
+                            for red in reductions:
+                                plans.append(StreamPlan(
+                                    prod, eng, var, int(win), int(dep),
+                                    int(mdep), str(red)))
     return plans
 
 
@@ -394,7 +412,7 @@ def measure_plan(params: Union[CipherParams, str], plan: StreamPlan,
     batch.add_sessions(sessions)
     farm = KeystreamFarm(batch, engine=plan.engine, variant=plan.variant,
                          depth=plan.depth, matrix_depth=plan.matrix_depth,
-                         mesh=mesh, axis=axis)
+                         reduction=plan.reduction, mesh=mesh, axis=axis)
 
     total = plan.window * n_windows
     sids = np.resize(np.arange(sessions, dtype=np.int64), total)
@@ -429,6 +447,7 @@ def autotune(params: Union[CipherParams, str], lanes: int, *,
              variants: Optional[Sequence[str]] = None,
              windows: Optional[Sequence[int]] = None,
              depths: Optional[Sequence[int]] = None,
+             reductions: Optional[Sequence[str]] = None,
              cache_path=None, force: bool = False,
              verbose: bool = False) -> StreamPlan:
     """Measure every candidate plan and return (and persist) the winner.
@@ -451,7 +470,7 @@ def autotune(params: Union[CipherParams, str], lanes: int, *,
     plans = candidate_plans(params, lanes, mesh=mesh, axis=axis,
                             producers=producers, engines=engines,
                             variants=variants, windows=windows,
-                            depths=depths)
+                            depths=depths, reductions=reductions)
     if not plans:
         raise RuntimeError("no candidate StreamPlans (empty grid?)")
     best: Optional[StreamPlan] = None
@@ -489,7 +508,7 @@ def describe(cache_path=None) -> str:
     fp = host_fingerprint()
     lines = ["=== cached StreamPlans (this host) ==="]
     rows = [("key", "producer", "engine", "variant", "window", "depth",
-             "mdepth", "p50 ms")]
+             "mdepth", "reduction", "p50 ms")]
     for key in sorted(plans):
         if f"|host={fp}" not in key:
             continue
@@ -500,14 +519,15 @@ def describe(cache_path=None) -> str:
         rows.append((key.split("|host=")[0], e["producer"], e["engine"],
                      e["variant"], str(e["window"]), str(e["depth"]),
                      str(e.get("matrix_depth", 1)),
+                     str(e.get("reduction", "lazy")),
                      f"{e.get('p50_ms', float('nan')):.3f}" + stale))
     if len(rows) == 1:
         lines.append(f"  (none at {path}; run --autotune, or serve with "
                      "--autotune)")
     else:
-        widths = [max(len(r[i]) for r in rows) for i in range(8)]
+        widths = [max(len(r[i]) for r in rows) for i in range(9)]
         for i, r in enumerate(rows):
-            lines.append("  ".join(r[j].ljust(widths[j]) for j in range(8)))
+            lines.append("  ".join(r[j].ljust(widths[j]) for j in range(9)))
             if i == 0:
                 lines.append("  ".join("-" * w for w in widths))
     lines += ["", "=== producer registry ===", producer_mod.describe(),

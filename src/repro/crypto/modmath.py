@@ -185,18 +185,80 @@ class Modulus:
         bound = (1 << self.L) * self.R + (1 << (2 * self.L))
         return self.reduce(t, bound)
 
-    def mul(self, x, y):
-        """x*y mod q via 2x2 limb decomposition; inputs in [0, q)."""
+    def _limb_high_bound(self, bound: int) -> int:
+        """Exclusive bound on the high limb of values < ``bound``."""
+        return ((bound - 1) >> self.L) + 1
+
+    def _mul_limb_bounds(self, x_bound: int, y_bound: int) -> tuple:
+        """Static (p0, p1, p2) partial-product bounds for `mul` operands
+        < ``x_bound`` / < ``y_bound``.  Reduced operands (both <= q) get
+        the legacy constants, so default call graphs are unchanged."""
+        two_l = 1 << (2 * self.L)
+        if x_bound <= self.q and y_bound <= self.q:
+            return two_l, 2 * two_l, two_l
+        xh = self._limb_high_bound(x_bound)
+        yh = self._limb_high_bound(y_bound)
+        return two_l, (1 << self.L) * (xh + yh), xh * yh
+
+    def mul_fits(self, x_bound: int | None = None,
+                 y_bound: int | None = None) -> bool:
+        """True iff :meth:`mul` on operands < ``x_bound`` / < ``y_bound``
+        keeps every partial product inside uint32 — the feasibility test
+        the reduction-scheduling pass (`core/redplan.py`) consults before
+        relaxing an input bound."""
+        xb = self.q if x_bound is None else x_bound
+        yb = self.q if y_bound is None else y_bound
+        if max(xb, yb) > 2**32:
+            return False
+        _, p1, p2 = self._mul_limb_bounds(xb, yb)
+        return p1 < 2**32 and p2 < 2**32
+
+    def mul_reduce_steps(self, x_bound: int | None = None,
+                         y_bound: int | None = None,
+                         reduce_out: bool = True) -> int:
+        """Conditional-subtract steps ONE :meth:`mul` call fires under the
+        given bounds — replayed from the same step schedules the datapath
+        executes (`repro.analysis.cost` uses this for the eager-vs-lazy
+        reduction delta)."""
+        xb = self.q if x_bound is None else x_bound
+        yb = self.q if y_bound is None else y_bound
+        p0b, p1b, p2b = self._mul_limb_bounds(xb, yb)
+        shift_b = (1 << self.L) * self.R + (1 << (2 * self.L))
+        steps = sum(len(self.reduce_steps(b)) for b in (p0b, p1b, p2b))
+        steps += 3 * len(self.reduce_steps(shift_b))   # shiftL(p1), 2x shiftL(p2)
+        if reduce_out:
+            steps += len(self.reduce_steps(3 * self.q))
+        return steps
+
+    def mul(self, x, y, *, x_bound: int | None = None,
+            y_bound: int | None = None, reduce_out: bool = True):
+        """x*y mod q via 2x2 limb decomposition.
+
+        Default: inputs in [0, q), fully reduced output — the legacy
+        datapath, graph-identical to before the reduction-scheduling pass
+        existed.  ``x_bound``/``y_bound`` relax the input contract (the
+        limb recombination recomputes its partial-product bounds; caller
+        must have checked :meth:`mul_fits`); ``reduce_out=False`` defers
+        the final reduce, returning a raw value < 3q.
+        """
+        xb = self.q if x_bound is None else x_bound
+        yb = self.q if y_bound is None else y_bound
+        if not self.mul_fits(xb, yb):
+            raise ValueError(
+                f"mul operand bounds ({xb}, {yb}) overflow the uint32 limb "
+                "scheme; reduce an input first (see Modulus.mul_fits)"
+            )
+        p0b, p1b, p2b = self._mul_limb_bounds(xb, yb)
         m = jnp.uint32(self.mask)
         xl, xh = x & m, x >> self.L
         yl, yh = y & m, y >> self.L
-        two_l = 1 << (2 * self.L)
-        p0 = self.reduce(xl * yl, two_l)
-        p1 = self.reduce(xl * yh + xh * yl, 2 * two_l)
-        p2 = self.reduce(xh * yh, two_l)
+        p0 = self.reduce(xl * yl, p0b)
+        p1 = self.reduce(xl * yh + xh * yl, p1b)
+        p2 = self.reduce(xh * yh, p2b)
         t1 = self._shiftL(p1)                    # p1 * 2^L
         t2 = self._shiftL(self._shiftL(p2))      # p2 * 2^(2L)
-        return self.reduce(p0 + t1 + t2, 3 * self.q)
+        s = p0 + t1 + t2                         # < 3q
+        return self.reduce(s, 3 * self.q) if reduce_out else s
 
     def square(self, x):
         return self.mul(x, x)
@@ -204,25 +266,30 @@ class Modulus:
     def cube(self, x):
         return self.mul(self.mul(x, x), x)
 
-    def mul_small(self, x, c: int):
+    def mul_small(self, x, c: int, *, in_bound: int | None = None,
+                  reduce_out: bool = True):
         """x * c mod q for a small static constant c (shift-add datapath).
 
         This is the paper's T4: the MixColumns/MixRows matrix has entries in
         {1, 2, 3}, so products are realized as adds, never multiplies.
-        Requires c * q < 2^32.
+        Requires c * in_bound < 2^32 (``in_bound`` defaults to q — reduced
+        input).  ``reduce_out=False`` returns the raw add chain (< c·in_bound)
+        for a lazy accumulator to fold into ONE terminal reduce.
         """
-        if c * self.q >= 2**32:
+        b = self.q if in_bound is None else in_bound
+        if c * b >= 2**32:
             raise ValueError("constant too large for shift-add path")
         if c == 0:
             return jnp.zeros_like(x)
-        if c == 1:
+        if c == 1 and (b <= self.q or not reduce_out):
             return x
         acc = x
         for _ in range(c - 1):
             acc = acc + x
-        return self.reduce(acc, c * self.q)
+        return self.reduce(acc, c * b) if reduce_out else acc
 
-    def matvec_small(self, mat: np.ndarray, x, axis: int = -1):
+    def matvec_small(self, mat: np.ndarray, x, axis: int = -1, *,
+                     in_bound: int | None = None, lazy: bool = False):
         """y = mat @ x mod q along ``axis`` where mat has small int entries.
 
         mat: (v, v) numpy int array with entries in {0..3}.  x: uint32 array
@@ -230,8 +297,19 @@ class Modulus:
         with partial-sum bounds checked statically: accumulator stays < 2^32
         because v * 3 * q is verified at trace time (reduce interleaved when
         it would not be).
+
+        ``lazy=True`` is the reduction-scheduling pass's lazy-accumulate
+        policy (`core/redplan.py`): terms stay *raw* (no per-term reduce),
+        operands may be unreduced up to ``in_bound`` (default q), and each
+        row fires ONE terminal reduce — proven safe per row by
+        :meth:`accumulate_sites`.  Output is fully reduced either way.
         """
         v = mat.shape[0]
+        in_b = self.q if in_bound is None else in_bound
+        if not lazy and in_b > self.q:
+            raise ValueError(
+                "matvec_small eager path needs reduced operands; pass "
+                "lazy=True to accept relaxed input bounds")
         x = jnp.moveaxis(x, axis, -1)
         outs = []
         for i in range(v):
@@ -241,120 +319,189 @@ class Modulus:
                 c = int(mat[i, j])
                 if c == 0:
                     continue
-                term = self.mul_small(x[..., j], c)  # < q
-                if acc is None:
-                    acc, bound = term, self.q
+                if lazy:
+                    term = self.mul_small(x[..., j], c, in_bound=in_b,
+                                          reduce_out=False)
+                    tb = c * in_b
                 else:
-                    if bound + self.q >= 2**32:
+                    term = self.mul_small(x[..., j], c)  # < q
+                    tb = self.q
+                if acc is None:
+                    acc, bound = term, tb
+                else:
+                    if bound + tb >= 2**32:
                         acc = self.reduce(acc, bound)
                         bound = self.q
                     acc = acc + term
-                    bound += self.q
+                    bound += tb
             outs.append(self.reduce(acc, bound))
         y = jnp.stack(outs, axis=-1)
         return jnp.moveaxis(y, -1, axis)
 
-    def dense_chunk(self) -> int:
-        """How many products < q the dense-matvec accumulator can sum in
-        uint32 before it must reduce — the ONE policy constant shared by
-        :meth:`matvec_dense`, the Pallas kernel's dense path
-        (`kernels/mrmc/mrmc.py:mrmc_dense_apply`), and the overflow proof
-        (:meth:`dense_accumulate_sites`).  For the shipped PASTA modulus
-        (q = 2^26 - 2^12 + 1) this is 64, so a whole t=64 branch row sums
-        in one pass.
+    def dense_chunk(self, prod_bound: int | None = None) -> int:
+        """How many products < ``prod_bound`` (default q) the dense-matvec
+        accumulator can sum in uint32 before it must reduce — the ONE
+        policy constant shared by :meth:`matvec_dense`, the Pallas kernel's
+        dense path (`kernels/mrmc/mrmc.py:mrmc_dense_apply`), and the
+        overflow proof (:meth:`dense_accumulate_sites`).  For the shipped
+        PASTA modulus (q = 2^26 - 2^12 + 1) this is 64, so a whole t=64
+        branch row sums in one pass; under the lazy plan's deferred
+        products (< 3q) it shrinks to 21.
         """
-        return (2**32 - 1) // self.q
+        return (2**32 - 1) // (self.q if prod_bound is None else prod_bound)
 
-    def matvec_dense(self, mat, x):
+    def dense_chunk_schedule(self, t: int,
+                             prod_bound: int | None = None) -> tuple:
+        """(chunk, n_chunks) for a t-term dense row of products <
+        ``prod_bound``: chunk is the LARGEST DIVISOR of t that still sums
+        raw in uint32 (:meth:`dense_chunk`), so the accumulator splits by
+        a reshape — one fused sum per level — instead of ragged
+        sequential slices that defeat XLA fusion.  The n_chunks reduced
+        partials (< q each) then fold in one raw sum < n_chunks·q.  For
+        the shipped PASTA modulus: eager t=64 → (64, 1) (whole row, one
+        pass, graph-identical to the pre-pass datapath); lazy deferred
+        products < 3q shrink the cap to 21, so t=64 → (16, 4) and
+        t=16 → (16, 1).
+        """
+        cap = max(1, self.dense_chunk(prod_bound))
+        ch = max(d for d in range(1, min(cap, t) + 1) if t % d == 0)
+        nch = t // ch
+        if nch * self.q >= 2**32:
+            raise ValueError(
+                f"dense chunk schedule ({ch}, {nch}) for t={t}: "
+                f"{nch} reduced partials overflow the uint32 fold")
+        return ch, nch
+
+    def matvec_dense(self, mat, x, *, x_bound: int | None = None,
+                     lazy: bool = False):
         """y = mat @ x mod q for a *dense* uint32 matrix with entries in
         [0, q) — PASTA's stream-sourced affine layer (no shift-add
         structure to exploit, unlike :meth:`matvec_small`).
 
         mat: (..., t, t) uint32; x: (..., t) uint32; returns (..., t).
-        Every product from :meth:`mul` is < q, so chunks of up to
-        :meth:`dense_chunk` products are summed in raw uint32 and reduced
-        once per chunk; cross-chunk accumulation stays < 2q.
+        Every product from :meth:`mul` is < q, so chunks of
+        :meth:`dense_chunk_schedule` products are summed in raw uint32
+        (a reshape, one fused sum), reduced once per chunk, and the
+        reduced partials fold in one final raw sum + reduce.
+
+        ``lazy=True`` (the reduction-scheduling pass's lazy-dense policy)
+        defers each product's final reduce — t² fewer 3q-reduces per
+        matrix — accumulating raw values < 3q in proportionally narrower
+        chunks; ``x_bound`` additionally relaxes the operand contract
+        through the limb multiply.  Output is fully reduced either way.
         """
         t = x.shape[-1]
-        prods = self.mul(mat, x[..., None, :])       # (..., t, t), each < q
-        chunk = self.dense_chunk()
-        acc = None
-        for a in range(0, t, chunk):
-            b = min(t, a + chunk)
-            s = jnp.sum(prods[..., a:b], axis=-1, dtype=U32)
-            s = self.reduce(s, (b - a) * self.q)
-            acc = s if acc is None else self.reduce(acc + s, 2 * self.q)
-        return acc
+        if lazy:
+            prods = self.mul(mat, x[..., None, :], y_bound=x_bound,
+                             reduce_out=False)   # (..., t, t), each < 3q
+            pb = 3 * self.q
+        else:
+            if x_bound is not None and x_bound > self.q:
+                raise ValueError(
+                    "matvec_dense eager path needs reduced operands; pass "
+                    "lazy=True to accept relaxed input bounds")
+            prods = self.mul(mat, x[..., None, :])   # (..., t, t), each < q
+            pb = self.q
+        ch, nch = self.dense_chunk_schedule(t, pb)
+        s = jnp.sum(prods.reshape(prods.shape[:-1] + (nch, ch)),
+                    axis=-1, dtype=U32)              # (..., t, nch)
+        s = self.reduce(s, ch * pb)                  # each < q
+        if nch == 1:
+            return s[..., 0]
+        return self.reduce(jnp.sum(s, axis=-1, dtype=U32), nch * self.q)
 
     # ---- static bound enumeration (repro.analysis substrate) -----------
-    def dense_accumulate_sites(self, t: int,
-                               site: str = "dense-matvec") -> tuple:
+    def dense_accumulate_sites(self, t: int, site: str = "dense-matvec",
+                               prod_bound: int | None = None) -> tuple:
         """Proof obligations for one dense t-term matvec row — replays the
         EXACT chunked accumulation of :meth:`matvec_dense` /
-        ``mrmc_dense_apply``: per-chunk uint32 sums of < q products, one
-        reduce per chunk, cross-chunk adds bounded by 2q.
+        ``mrmc_dense_apply``: ``n_chunks`` identical uint32 sums of
+        ``chunk`` products < ``prod_bound`` (q eager; 3q under the lazy
+        plan's deferred products), one reduce per chunk, then one raw
+        fold of the reduced partials (:meth:`dense_chunk_schedule`).
         """
-        chunk = self.dense_chunk()
-        sites = []
-        done = 0
-        while done < t:
-            c = min(chunk, t - done)
-            b = c * self.q
-            sites.append(BoundSite(site=f"{site}:chunk sum of {c} products",
-                                   bound=b, limit=2**32))
-            sites.append(BoundSite(site=f"{site}:chunk residual",
-                                   bound=self.reduce_residual_bound(b),
-                                   limit=self.q))
-            if done:
-                sites.append(BoundSite(site=f"{site}:cross-chunk add",
-                                       bound=2 * self.q, limit=2**32))
-                sites.append(BoundSite(
-                    site=f"{site}:cross-chunk residual",
-                    bound=self.reduce_residual_bound(2 * self.q),
-                    limit=self.q))
-            done += c
+        pb = self.q if prod_bound is None else prod_bound
+        ch, nch = self.dense_chunk_schedule(t, pb)
+        b = ch * pb
+        sites = [
+            BoundSite(site=f"{site}:chunk sum of {ch} products (x{nch})",
+                      bound=b, limit=2**32),
+            BoundSite(site=f"{site}:chunk residual",
+                      bound=self.reduce_residual_bound(b),
+                      limit=self.q),
+        ]
+        if nch > 1:
+            fb = nch * self.q
+            sites.append(BoundSite(
+                site=f"{site}:partial-sum fold of {nch} chunks",
+                bound=fb, limit=2**32))
+            sites.append(BoundSite(
+                site=f"{site}:fold residual",
+                bound=self.reduce_residual_bound(fb),
+                limit=self.q))
         return tuple(sites)
 
-    def mul_bound_sites(self) -> tuple:
+    def mul_bound_sites(self, x_bound: int | None = None,
+                        y_bound: int | None = None,
+                        reduce_out: bool = True) -> tuple:
         """Every static intermediate bound `mul` (and thus square/cube)
         reaches, as :class:`BoundSite` records — the uint32-overflow proof
         obligations of the limb scheme, enumerated from the same constants
-        the datapath uses.
+        the datapath uses.  Relaxed ``x_bound``/``y_bound`` and
+        ``reduce_out=False`` replay the partial-product bounds a
+        plan-relaxed :meth:`mul` actually runs with.
 
         For each reduce call two obligations are emitted: the operand
         bound must fit uint32, and the conditional-subtract chain must
         fully reduce it (worst-case residual <= q,
-        :meth:`reduce_residual_bound`).
+        :meth:`reduce_residual_bound`).  A deferred output emits a
+        fit-only obligation (no reduce fires there — downstream owns it).
         """
+        xb = self.q if x_bound is None else x_bound
+        yb = self.q if y_bound is None else y_bound
+        p0b, p1b, p2b = self._mul_limb_bounds(xb, yb)
         two_l = 1 << (2 * self.L)
         shift_t = (1 << self.L) * self.R + two_l
-        sites = []
-        for name, bound in (
-            ("mul:p0 = xl*yl", two_l),
-            ("mul:p1 = xl*yh + xh*yl", 2 * two_l),
-            ("mul:p2 = xh*yh", two_l),
+        entries = [
+            ("mul:p0 = xl*yl", p0b),
+            ("mul:p1 = xl*yh + xh*yl", p1b),
+            ("mul:p2 = xh*yh", p2b),
             ("mul:shiftL t = a*R + (b<<L)", shift_t),
-            ("mul:p0 + p1*2^L + p2*2^2L", 3 * self.q),
+        ]
+        if reduce_out:
+            entries.append(("mul:p0 + p1*2^L + p2*2^2L", 3 * self.q))
+        entries += [
             ("add:x + y", 2 * self.q),
             ("sub:x + q - y", 2 * self.q),
-        ):
+        ]
+        sites = []
+        for name, bound in entries:
             sites.append(BoundSite(site=name, bound=bound, limit=2**32))
             sites.append(BoundSite(site=name + " (residual)",
                                    bound=self.reduce_residual_bound(bound),
                                    limit=self.q))
+        if not reduce_out:
+            sites.append(BoundSite(
+                site="mul:p0 + p1*2^L + p2*2^2L (deferred, unreduced out)",
+                bound=3 * self.q, limit=2**32))
         return tuple(sites)
 
-    def accumulate_sites(self, coeffs, site: str = "matvec") -> tuple:
+    def accumulate_sites(self, coeffs, site: str = "matvec",
+                         in_bound: int | None = None,
+                         lazy: bool = False) -> tuple:
         """Worst-case accumulator bound walk for one shift-add row sum.
 
         ``coeffs`` is one row of a small-constant mix matrix.  Mirrors the
         EXACT interleaved-reduce policy shared by :meth:`matvec_small` and
         the mrmc kernels' ``_combine``: each term is ``mul_small``-scaled
         (an add chain bounded by c*q, then reduced), and the running sum
-        reduces to < q whenever the next add could reach 2^32.  Returns
-        one :class:`BoundSite` per scaled term, one for the accumulator
-        peak, and one for the final residual.
+        reduces to < q whenever the next add could reach 2^32.  With
+        ``lazy=True`` (and operands < ``in_bound``, default q) the terms
+        stay raw at c·in_bound each, matching the lazy-accumulate policy.
+        Returns one :class:`BoundSite` per scaled term, one for the
+        accumulator peak, and one for the final residual.
         """
+        in_b = self.q if in_bound is None else in_bound
         sites = []
         bound = 0
         peak = 0
@@ -362,16 +509,22 @@ class Modulus:
             c = int(c)
             if c == 0:
                 continue
-            if c > 1:
+            tb = c * in_b if lazy else self.q
+            if lazy:
+                if c > 1 or in_b > self.q:
+                    sites.append(BoundSite(site=f"{site}:term[{j}] {c}*x "
+                                                f"raw chain", bound=tb,
+                                           limit=2**32))
+            elif c > 1:
                 sites.append(BoundSite(site=f"{site}:term[{j}] {c}*x add "
                                             f"chain", bound=c * self.q,
                                        limit=2**32))
             if bound == 0:
-                bound = self.q
+                bound = tb
             else:
-                if bound + self.q >= 2**32:
+                if bound + tb >= 2**32:
                     bound = self.q    # interleaved reduce fires
-                bound += self.q
+                bound += tb
             peak = max(peak, bound)
         sites.append(BoundSite(site=f"{site}:accumulator peak",
                                bound=peak, limit=2**32))

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core import redplan as RP
 from repro.core import schedule as S
 from repro.core.params import CipherParams
 from repro.core.schedule import Schedule, build_schedule, state_transpose_perm
@@ -79,9 +80,14 @@ def _feistel_transposed(mod: Modulus, v: int, x):
     return mod.add(x, shifted)
 
 
-def _keystream_kernel(params: CipherParams, sched: Schedule,
+def _keystream_kernel(params: CipherParams, sched: Schedule, plan,
                       with_noise: bool, with_mats: bool, *refs):
-    """One grid step: interpret the schedule program on a (n, BLK) block."""
+    """One grid step: interpret the schedule program on a (n, BLK) block.
+
+    ``plan`` is the `core.redplan.ReductionPlan` for this program — the
+    kernel honors the same per-op reduce deferrals the pure-JAX
+    interpreter does (bit-exact either way; only the conditional-subtract
+    placement moves)."""
     refs = list(refs)
     key_ref, rc_ref = refs[:2]
     o_ref = refs[-1]
@@ -108,12 +114,16 @@ def _keystream_kernel(params: CipherParams, sched: Schedule,
             jnp.uint32, (n, rc.shape[-1]), 0
         ) + jnp.uint32(1)
 
-    for op in sched.ops:
+    for oi, op in enumerate(sched.ops):
+        p_i = plan.ops[oi]
         if isinstance(op, S.ARK):
             a, b = op.rc_slice
             col = 1 if op.orientation == S.TRANSPOSED else 0
             k = key2[:, col : col + 1][: op.key_len]
-            x = mod.add(x, mod.mul(k, rc[a:b]))
+            m_ = mod.mul(k, rc[a:b])
+            # defer-out: the raw sum (< in_bound + q) flows into the next
+            # MRMC's lazy shift-add accumulator
+            x = x + m_ if p_i.has(RP.DEFER_OUT) else mod.add(x, m_)
         elif isinstance(op, S.MRMC):
             if op.streams_matrix:
                 # dense per-lane matrix plane, delivered storage-permuted
@@ -121,33 +131,50 @@ def _keystream_kernel(params: CipherParams, sched: Schedule,
                 # so there is no flip handling here at all
                 ma, _ = op.mat_slice
                 mats = mats_ref[...]
+                lazy_d = p_i.has(RP.LAZY_DENSE)
                 x = jnp.concatenate([
                     mrmc_dense_apply(
                         mod,
                         mats[ma + i * t * t : ma + (i + 1) * t * t].reshape(
                             t, t, -1),
                         x[i * t : (i + 1) * t],
+                        x_bound=p_i.in_bound if lazy_d else None,
+                        lazy=lazy_d,
                     )
                     for i in range(nb)
                 ], axis=0)
             else:
                 flip = op.orientation != op.out_orientation
+                lazy_a = p_i.has(RP.LAZY_ACCUMULATE)
                 x = jnp.concatenate([
                     mrmc_matrix_apply(
                         mod, mat, x[i * t : (i + 1) * t].reshape(v, v, -1),
-                        transpose_out=flip,
+                        transpose_out=flip, in_bound=p_i.in_bound,
+                        lazy=lazy_a,
                     ).reshape(t, -1)
                     for i in range(nb)
                 ], axis=0) if nb > 1 else mrmc_matrix_apply(
                     mod, mat, x.reshape(v, v, -1), transpose_out=flip,
+                    in_bound=p_i.in_bound, lazy=lazy_a,
                 ).reshape(n, -1)
+            fold = p_i.has(RP.FOLD_MIX)
             if op.has_rc:
                 a, b = op.rc_slice
-                x = mod.add(x, rc[a:b])   # storage order: already oriented
+                # storage order: already oriented; fold-mix keeps the sum
+                # raw (< 2q) and defers into the mix's terminal reduce
+                x = x + rc[a:b] if fold else mod.add(x, rc[a:b])
             if op.mix_branches:
                 L, R_ = x[:t], x[t:]
-                s = mod.add(L, R_)        # (2L + R, L + 2R) = (s + L, s + R)
-                x = jnp.concatenate([mod.add(s, L), mod.add(s, R_)], axis=0)
+                if fold:
+                    mix_in = mod.q * (2 if op.has_rc else 1)
+                    s = L + R_                      # < 2·mix_in
+                    x = mod.reduce(
+                        jnp.concatenate([s + L, s + R_], axis=0),
+                        3 * mix_in)                 # ONE terminal reduce
+                else:
+                    s = mod.add(L, R_)  # (2L + R, L + 2R) = (s + L, s + R)
+                    x = jnp.concatenate([mod.add(s, L), mod.add(s, R_)],
+                                        axis=0)
         elif isinstance(op, S.NONLINEAR):
             if op.kind == "cube":
                 x = mod.cube(x)
@@ -163,17 +190,18 @@ def _keystream_kernel(params: CipherParams, sched: Schedule,
         elif isinstance(op, S.TRUNCATE):
             x = x[: op.keep]
         elif isinstance(op, S.AGN) and noise_ref is not None:
+            # the signed->canonical fold already lands in [0, q) (|e| < q),
+            # so the one bounded add is the only reduce this path needs
             e = noise_ref[...]
-            x = mod.add(x, mod.reduce(
-                jnp.where(e < 0, e + jnp.int32(mod.q), e).astype(jnp.uint32),
-                2 * mod.q,
-            ))
+            x = mod.add(x, jnp.where(
+                e < 0, e + jnp.int32(mod.q), e).astype(jnp.uint32))
     o_ref[...] = x
 
 
 def keystream_pallas(params: CipherParams, key_n1, rc_cl, noise_ll=None, *,
                      interpret: bool, schedule: Schedule | None = None,
-                     mats_ml=None):
+                     mats_ml=None, reduction: str = RP.DEFAULT_REDUCTION,
+                     plan=None):
     """key_n1: (n, 1) u32; rc_cl: (n_consts, lanes) u32 in logical order;
     noise_ll: (l, lanes) int32 or None; mats_ml: (n_matrix_constants,
     lanes) u32 or None — dense matrix planes in logical order for
@@ -183,11 +211,17 @@ def keystream_pallas(params: CipherParams, key_n1, rc_cl, noise_ll=None, *,
     Ragged lane counts are padded up to a BLK multiple and trimmed on the
     way out, so any farm window size compiles (the pad lanes compute junk
     keystream that is discarded).  ``schedule`` defaults to the normal
-    variant of ``build_schedule(params)``.
+    variant of ``build_schedule(params)``.  ``reduction`` picks the
+    reduction-scheduling mode ("lazy"/"eager", core/redplan.py; bit-exact
+    either way); an explicit ``plan`` overrides it and is validated
+    against the terminal-reduction law first.
     """
     p = params
     if schedule is None:
         schedule = build_schedule(p)
+    if plan is None:
+        plan = RP.plan_reductions(p, schedule, reduction)
+    plan.validate(schedule)
     n_mat = schedule.n_matrix_constants
     if n_mat and (mats_ml is None or mats_ml.shape[0] != n_mat):
         got = None if mats_ml is None else mats_ml.shape[0]
@@ -243,8 +277,8 @@ def keystream_pallas(params: CipherParams, key_n1, rc_cl, noise_ll=None, *,
         in_specs.append(pl.BlockSpec((n_mat, BLK), lambda i: (0, i)))
         args.append(mats_ml)
 
-    kernel = functools.partial(_keystream_kernel, p, schedule, with_noise,
-                               with_mats)
+    kernel = functools.partial(_keystream_kernel, p, schedule, plan,
+                               with_noise, with_mats)
     out = pl.pallas_call(
         kernel,
         grid=grid,

@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.params import CipherParams
+from repro.core.redplan import DEFAULT_REDUCTION
 from repro.core.schedule import build_schedule
 from repro.kernels.keystream.keystream import keystream_pallas
 
@@ -36,18 +37,23 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("params", "interpret", "variant"))
+@functools.partial(jax.jit, static_argnames=("params", "interpret", "variant",
+                                             "reduction"))
 def keystream_kernel_apply(params: CipherParams, key, rc, noise=None,
                            interpret: bool | None = None,
-                           variant: str = "normal", mats=None):
+                           variant: str = "normal", mats=None,
+                           reduction: str = DEFAULT_REDUCTION):
     """key: (n,) u32; rc: (lanes, n_round_constants) u32; noise: (lanes, l)
     int32 or None; mats: (lanes, n_matrix_constants) u32 or None (dense
     matrix planes for stream-sourced MRMC schedules).  Returns (lanes, l)
     u32 keystream blocks.
 
     ``variant`` selects the schedule orientation plan ("normal" |
-    "alternating", see core/schedule.py) — bit-exact either way.  Ragged
-    lane counts are padded/trimmed inside :func:`keystream_pallas`.
+    "alternating", see core/schedule.py) — bit-exact either way.
+    ``reduction`` selects the reduction-scheduling mode ("lazy" | "eager",
+    core/redplan.py) — also bit-exact; it is a static jit argument, so the
+    plan is rebuilt (cached) inside the trace.  Ragged lane counts are
+    padded/trimmed inside :func:`keystream_pallas`.
     """
     if interpret is None:
         interpret = _auto_interpret()
@@ -61,7 +67,7 @@ def keystream_kernel_apply(params: CipherParams, key, rc, noise=None,
         mats_p = mats.T                               # (n_mat, lanes)
     out = keystream_pallas(
         params, key[:, None], rc_p, noise_p, interpret=interpret,
-        schedule=sched, mats_ml=mats_p,
+        schedule=sched, mats_ml=mats_p, reduction=reduction,
     )
     return out.T
 
@@ -69,7 +75,8 @@ def keystream_kernel_apply(params: CipherParams, key, rc, noise=None,
 def keystream_kernel_sharded(params: CipherParams, key, rc, noise=None, *,
                              mesh=None, axis: str = "data",
                              interpret: bool | None = None,
-                             variant: str = "normal", mats=None):
+                             variant: str = "normal", mats=None,
+                             reduction: str = DEFAULT_REDUCTION):
     """Lane-sharded fused consumer: rc/noise/mats split over ``mesh[axis]``.
 
     Same signature/semantics as :func:`keystream_kernel_apply`; lanes are
@@ -80,7 +87,7 @@ def keystream_kernel_sharded(params: CipherParams, key, rc, noise=None, *,
     if mesh is None or mesh.shape.get(axis, 1) == 1:
         return keystream_kernel_apply(params, key, rc, noise,
                                       interpret=interpret, variant=variant,
-                                      mats=mats)
+                                      mats=mats, reduction=reduction)
     ndev = mesh.shape[axis]
     lanes = rc.shape[0]
     pad = (-lanes) % ndev
@@ -103,6 +110,7 @@ def keystream_kernel_sharded(params: CipherParams, key, rc, noise=None, *,
         return keystream_kernel_apply(
             params, key_s, rc_s, noise_s,
             interpret=interpret, variant=variant, mats=mats_s,
+            reduction=reduction,
         )
 
     out = shard_map(

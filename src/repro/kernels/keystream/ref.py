@@ -8,11 +8,13 @@ because they execute one shared cipher description.
 from __future__ import annotations
 
 from repro.core.params import CipherParams
+from repro.core.redplan import DEFAULT_REDUCTION
 from repro.core.schedule import build_schedule, execute_schedule
 
 
 def keystream_ref(params: CipherParams, key, rc, noise=None,
-                  variant: str = "normal", mats=None):
+                  variant: str = "normal", mats=None,
+                  reduction: str = DEFAULT_REDUCTION):
     """key: (n,) u32; rc: (lanes, n_round_constants) u32; noise: (lanes, l)
     int32 or None; mats: (lanes, n_matrix_constants) u32 or None (the
     stream-sourced dense affine matrices of a matrix-plane schedule).
@@ -20,7 +22,9 @@ def keystream_ref(params: CipherParams, key, rc, noise=None,
 
     ``variant`` picks the schedule orientation plan ("normal" |
     "alternating") — bit-exact by Eq. 2, property-tested in
-    tests/test_schedule.py.
+    tests/test_schedule.py.  ``reduction`` picks the reduction-scheduling
+    mode ("lazy" | "eager", core/redplan.py) — bit-exact as well.
     """
     sched = build_schedule(params, variant)
-    return execute_schedule(params, sched, key, rc, noise, mats=mats)
+    return execute_schedule(params, sched, key, rc, noise, mats=mats,
+                            reduction=reduction)

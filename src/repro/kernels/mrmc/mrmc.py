@@ -29,33 +29,45 @@ from repro.crypto.modmath import Modulus
 BLK = 128  # keystream lanes per grid step (one full vector-lane width)
 
 
-def _scale_small(mod: Modulus, x, c: int):
-    """c·x mod q for c ∈ {0..3} as adds + conditional subtract (no multiply)."""
+def _scale_small(mod: Modulus, x, c: int, in_bound: int | None = None,
+                 reduce_out: bool = True):
+    """c·x mod q for c ∈ {0..3} as adds + conditional subtract (no multiply).
+
+    ``reduce_out=False`` keeps the raw add chain (< c·in_bound) for a lazy
+    accumulator; ``in_bound`` (default q) is the operand's exclusive bound.
+    """
+    b = mod.q if in_bound is None else in_bound
     if c == 0:
         return jnp.zeros_like(x)
     acc = x
     for _ in range(c - 1):
         acc = acc + x
-    return mod.reduce(acc, c * mod.q)
+    return mod.reduce(acc, c * b) if reduce_out else acc
 
 
-def _combine(mod: Modulus, terms):
-    """Sum of already-reduced terms (< q each) with interleaved reduction."""
+def _combine(mod: Modulus, terms, bounds=None):
+    """Sum of terms with interleaved reduction and ONE terminal reduce.
+
+    ``bounds`` gives each term's exclusive static bound (default: already
+    reduced, < q each — the eager policy; the reduction plan's lazy
+    policy passes the raw c·in_bound term bounds instead)."""
     acc, bound = None, 0
-    for t in terms:
+    for i, t in enumerate(terms):
+        tb = mod.q if bounds is None else bounds[i]
         if acc is None:
-            acc, bound = t, mod.q
+            acc, bound = t, tb
         else:
-            if bound + mod.q >= 2**32:
+            if bound + tb >= 2**32:
                 acc = mod.reduce(acc, bound)
                 bound = mod.q
             acc = acc + t
-            bound += mod.q
+            bound += tb
     return mod.reduce(acc, bound)
 
 
 def mrmc_matrix_apply(mod: Modulus, mat: np.ndarray, x,
-                      transpose_out: bool = False):
+                      transpose_out: bool = False,
+                      in_bound: int | None = None, lazy: bool = False):
     """Apply M·X·Mᵀ to x of shape (v, v, ...) — shared by this kernel and
     the fused keystream kernel (state stays wherever it lives; VMEM here).
 
@@ -65,8 +77,32 @@ def mrmc_matrix_apply(mod: Modulus, mat: np.ndarray, x,
     zero extra compute, no relayout — the TPU form of the paper's Eq. 2
     bubble elimination (MRMC commutes with transposition, so either
     orientation runs the identical shift-add datapath).
+
+    ``lazy=True`` is the reduction plan's lazy-accumulate policy
+    (core/redplan.py): shift-add terms stay raw and each row fires one
+    terminal reduce, with MixColumns accepting operands up to
+    ``in_bound`` (MixRows always sees the reduced MixColumns output).
+    Same policy, hence same proof, as `Modulus.matvec_small(lazy=True)`.
     """
     v = mat.shape[0]
+    if lazy:
+        ib = mod.q if in_bound is None else in_bound
+        a = [
+            _combine(mod,
+                     [_scale_small(mod, x[j], int(mat[i, j]), in_bound=ib,
+                                   reduce_out=False) for j in range(v)],
+                     bounds=[int(mat[i, j]) * ib for j in range(v)])
+            for i in range(v)
+        ]
+        a = jnp.stack(a, axis=0)  # (v, v, ...), reduced
+        y = [
+            _combine(mod,
+                     [_scale_small(mod, a[:, j], int(mat[c, j]),
+                                   reduce_out=False) for j in range(v)],
+                     bounds=[int(mat[c, j]) * mod.q for j in range(v)])
+            for c in range(v)
+        ]
+        return jnp.stack(y, axis=0 if transpose_out else 1)
     # MixColumns: a[i] = Σ_j M[i,j] · x[j]   (x[j] is state row j: (v, ...))
     a = [
         _combine(mod, [_scale_small(mod, x[j], int(mat[i, j])) for j in range(v)])
@@ -83,7 +119,8 @@ def mrmc_matrix_apply(mod: Modulus, mat: np.ndarray, x,
     return jnp.stack(y, axis=0 if transpose_out else 1)
 
 
-def mrmc_dense_apply(mod: Modulus, m_ttl, x_tl):
+def mrmc_dense_apply(mod: Modulus, m_ttl, x_tl,
+                     x_bound: int | None = None, lazy: bool = False):
     """Per-lane dense matvec: y[i, lane] = Σ_j M[i, j, lane]·x[j, lane] mod q.
 
     The stream-sourced MRMC datapath (PASTA's per-block random affine
@@ -96,20 +133,31 @@ def mrmc_dense_apply(mod: Modulus, m_ttl, x_tl):
     x_tl:  (t, lanes) uint32 state, entries < q.  Returns (t, lanes).
 
     Accumulation mirrors `Modulus.matvec_dense` (the lane-minor sibling):
-    products < q sum raw in uint32 in chunks of `Modulus.dense_chunk()`
-    with one reduce per chunk — the ONE shared overflow policy
-    `Modulus.dense_accumulate_sites` proves safe.
+    products < q sum raw in uint32 in `Modulus.dense_chunk_schedule`
+    chunks (a reshape, one fused sum per level) with one reduce per
+    chunk, then one raw fold of the reduced partials — the ONE shared
+    overflow policy `Modulus.dense_accumulate_sites` proves safe.
+    ``lazy=True`` is the reduction plan's lazy-dense policy: each
+    product's final reduce is deferred (raw values < 3q) and the chunk
+    width shrinks to match; ``x_bound`` relaxes the state-operand
+    contract through the limb multiply.  Output is reduced either way.
     """
     t = x_tl.shape[0]
-    prods = mod.mul(m_ttl, x_tl[None, :, :])          # (t, t, lanes), < q
-    chunk = mod.dense_chunk()
-    acc = None
-    for a in range(0, t, chunk):
-        b = min(t, a + chunk)
-        s = jnp.sum(prods[:, a:b], axis=1, dtype=jnp.uint32)
-        s = mod.reduce(s, (b - a) * mod.q)
-        acc = s if acc is None else mod.reduce(acc + s, 2 * mod.q)
-    return acc
+    if lazy:
+        prods = mod.mul(m_ttl, x_tl[None, :, :], y_bound=x_bound,
+                        reduce_out=False)             # (t, t, lanes), < 3q
+        pb = 3 * mod.q
+    else:
+        prods = mod.mul(m_ttl, x_tl[None, :, :])      # (t, t, lanes), < q
+        pb = mod.q
+    ch, nch = mod.dense_chunk_schedule(t, pb)
+    lanes = prods.shape[-1]
+    s = jnp.sum(prods.reshape(t, nch, ch, lanes), axis=2,
+                dtype=jnp.uint32)                     # (t, nch, lanes)
+    s = mod.reduce(s, ch * pb)                        # each < q
+    if nch == 1:
+        return s[:, 0]
+    return mod.reduce(jnp.sum(s, axis=1, dtype=jnp.uint32), nch * mod.q)
 
 
 def _mrmc_kernel(mat: np.ndarray, q: int, x_ref, o_ref):

@@ -119,6 +119,52 @@ def unknown_init():
     return broken, "SA107", "unknown init"
 
 
+def _over_defer(preset, break_at):
+    """Clone the preset's lazy ReductionPlan with one bound pushed past q
+    at a terminal site — `break_at` maps an op list to the index whose
+    plan entry to corrupt (None = the program-output bound)."""
+    from repro.core import redplan as RP
+
+    p = get_params(preset)
+    sched = build_schedule(p)
+    base = RP.plan_reductions(p, sched, "lazy")
+    ops = list(base.ops)
+    i = break_at(sched.ops)
+    if i is None:
+        last = len(ops) - 1
+        ops[last] = dataclasses.replace(ops[last], out_bound=3 * base.q)
+    else:
+        ops[i] = dataclasses.replace(ops[i], in_bound=2 * base.q)
+    bad = dataclasses.replace(base, ops=tuple(ops))
+    return sched, bad
+
+
+def plan_unreduced_output():
+    """A plan deferring the final op's reduce past program end: output
+    would leave as raw (< 3q) values, not canonical residues."""
+    sched, bad = _over_defer("pasta-128s", lambda ops: None)
+    return sched, bad, "SA111", "terminal-reduction law violated"
+
+
+def plan_unreduced_truncate():
+    """A plan feeding TRUNCATE an unreduced (< 2q) state — the kept slice
+    would carry non-canonical residues into the keystream."""
+    sched, bad = _over_defer(
+        "pasta-128s",
+        lambda ops: next(i for i, op in enumerate(ops)
+                         if isinstance(op, S.TRUNCATE)))
+    return sched, bad, "SA111", "terminal-reduction law violated"
+
+
+#: over-deferred ReductionPlan fixtures: (builder, name) where the builder
+#: returns (schedule, bad_plan, lint_code, validate_match) — the two-sided
+#: contract is `ReductionPlan.validate()` REFUSES and `lint(sched,
+#: plan=...)` DIAGNOSES (tests/test_redplan.py parametrizes over these)
+BROKEN_PLANS = [
+    (plan_unreduced_output, "plan-unreduced-output"),
+    (plan_unreduced_truncate, "plan-unreduced-truncate"),
+]
+
 #: (builder, name) in one place so both suites parametrize identically
 ALL = [
     (rc_slice_gap, "rc-slice-gap"),

@@ -1,0 +1,287 @@
+"""Reduction-scheduling pass (src/repro/core/redplan.py, DESIGN.md §14).
+
+Claims under test:
+
+  * the PLAN derivation is deterministic, cached, and shaped by the
+    shipped policy: defer-out ARKs feeding static MRMCs, lazy-accumulate
+    static mixes, lazy-dense + fold-mix streamed PASTA affine layers,
+    everything else eager — and every plan passes its own validate();
+  * BIT-EXACTNESS: lazy ≡ eager keystream across presets x variants x
+    noise x engines — the pass moves reduces, it never moves residues
+    (this is why the golden digests do not change);
+  * the TERMINAL-REDUCTION LAW is two-sided on over-deferred plans
+    (tests/broken_schedules.py BROKEN_PLANS): ``ReductionPlan.validate``
+    REFUSES, ``lint(sched, plan=...)`` DIAGNOSES (SA111), and the
+    overflow prover leaves the terminal obligation undischarged;
+  * the RELAXED modmath primitives (deferred-output mul, lazy shift-add
+    matvec, lazy dense matvec) land on the same canonical residues as
+    the legacy eager ones;
+  * the COST model records a strictly positive saving for every preset
+    (the delta the analysis snapshot gates on).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from broken_schedules import BROKEN_PLANS
+from repro.analysis.bounds import prove_overflow_safety
+from repro.analysis.cost import reduction_report
+from repro.analysis.lint import ERROR as LINT_ERROR
+from repro.analysis.lint import lint as run_lint
+from repro.core import redplan as RP
+from repro.core import schedule as S
+from repro.core.cipher import make_cipher
+from repro.core.engine import make_engine
+from repro.core.params import REGISTRY, get_params
+from repro.core.schedule import VARIANTS
+from repro.kernels.keystream.ops import keystream_kernel_apply
+from repro.kernels.keystream.ref import keystream_ref
+
+PRESETS = sorted(REGISTRY)
+MATRIX = [(n, v) for n in PRESETS for v in VARIANTS]
+
+
+def _plan(name, variant="normal", mode="lazy"):
+    p = get_params(name)
+    sched = p.schedule(variant)
+    return p, sched, RP.plan_reductions(p, sched, mode)
+
+
+# ==========================================================================
+# Plan derivation
+# ==========================================================================
+@pytest.mark.parametrize("mode", RP.REDUCTION_MODES)
+@pytest.mark.parametrize("name,variant", MATRIX)
+def test_plans_validate_everywhere(name, variant, mode):
+    p, sched, plan = _plan(name, variant, mode)
+    assert plan.validate(sched) is plan
+    assert len(plan.ops) == len(sched.ops)
+    # terminal-reduction law holds by construction on shipped plans
+    assert all(b <= plan.q for _, _, b in plan.terminal_sites(sched))
+
+
+def test_plans_are_cached_and_deterministic():
+    p, sched, plan = _plan("pasta-128l")
+    assert RP.plan_reductions(p, sched, "lazy") is plan
+
+
+def test_unknown_mode_rejected():
+    p = get_params("hera-128a")
+    with pytest.raises(ValueError, match="unknown reduction mode"):
+        RP.plan_reductions(p, p.schedule("normal"), "sometimes")
+
+
+@pytest.mark.parametrize("name,variant", MATRIX)
+def test_eager_plan_is_the_identity_schedule(name, variant):
+    _, sched, plan = _plan(name, variant, "eager")
+    assert all(o.in_bound == plan.q and o.out_bound == plan.q
+               and not o.flags for o in plan.ops)
+
+
+@pytest.mark.parametrize("name", ["hera-128a", "rubato-128s", "rubato-128l"])
+def test_lazy_plan_shape_static_matrix(name):
+    """HERA/Rubato: every static MRMC lazy-accumulates; every ARK feeding
+    one defers its output reduce (and only those ARKs run relaxed)."""
+    _, sched, plan = _plan(name)
+    deferred = False
+    for i, op in enumerate(sched.ops):
+        o = plan.op(i)
+        if isinstance(op, S.MRMC) and not op.streams_matrix:
+            assert o.has(RP.LAZY_ACCUMULATE), o
+        elif isinstance(op, S.ARK):
+            nxt = sched.ops[i + 1] if i + 1 < len(sched.ops) else None
+            if isinstance(nxt, S.MRMC) and not nxt.streams_matrix:
+                assert o.has(RP.DEFER_OUT) and o.out_bound == 2 * plan.q
+                deferred = True
+            else:
+                assert o.out_bound == plan.q
+        else:
+            assert not o.flags, o
+    assert deferred, "no ARK ever deferred — the pass did nothing"
+
+
+@pytest.mark.parametrize("name", ["pasta-128s", "pasta-128l"])
+def test_lazy_plan_shape_pasta(name):
+    """PASTA: every streamed affine layer runs lazy-dense, and the
+    branch-mixing ones fold the rc add + mix into one terminal reduce."""
+    _, sched, plan = _plan(name)
+    streams = [(i, op) for i, op in enumerate(sched.ops)
+               if isinstance(op, S.MRMC) and op.streams_matrix]
+    assert streams
+    for i, op in streams:
+        o = plan.op(i)
+        assert o.has(RP.LAZY_DENSE), o
+        assert o.has(RP.FOLD_MIX) == bool(op.mix_branches), o
+        assert o.out_bound == plan.q  # dense path terminal-reduces inside
+
+
+# ==========================================================================
+# Bit-exactness: lazy == eager everywhere
+# ==========================================================================
+def _constants(name, lanes, with_noise):
+    ci = make_cipher(name, seed=23)
+    consts = ci.round_constant_stream(jnp.arange(lanes, dtype=jnp.uint32))
+    noise = consts["noise"] if with_noise else None
+    return ci, consts["rc"], noise, consts.get("mats")
+
+
+@pytest.mark.parametrize("with_noise", [False, True])
+@pytest.mark.parametrize("name,variant", MATRIX)
+def test_ref_lazy_matches_eager(name, variant, with_noise):
+    p = get_params(name)
+    if with_noise and not p.n_noise:
+        pytest.skip("preset has no AGN noise (HERA)")
+    ci, rc, noise, mats = _constants(name, 6, with_noise)
+    eager = np.array(keystream_ref(p, ci.key, rc, noise, variant=variant,
+                                   mats=mats, reduction="eager"))
+    lazy = np.array(keystream_ref(p, ci.key, rc, noise, variant=variant,
+                                  mats=mats, reduction="lazy"))
+    np.testing.assert_array_equal(lazy, eager)
+    assert lazy.max() < p.mod.q
+
+
+@pytest.mark.parametrize("engine", ["ref", "jax"])
+@pytest.mark.parametrize("name", PRESETS)
+def test_engine_lazy_matches_eager(engine, name):
+    p = get_params(name)
+    ci, rc, noise, mats = _constants(name, 8, bool(p.n_noise))
+    outs = {}
+    for mode in RP.REDUCTION_MODES:
+        eng = make_engine(engine, p, ci.key, reduction=mode)
+        assert eng.reduction == mode
+        outs[mode] = np.array(eng.keystream_from_constants(rc, noise, mats))
+    np.testing.assert_array_equal(outs["lazy"], outs["eager"])
+
+
+@pytest.mark.parametrize("name", ["hera-128a", "rubato-128s", "pasta-128s"])
+def test_pallas_interpret_lazy_matches_eager(name):
+    p = get_params(name)
+    ci, rc, noise, mats = _constants(name, 4, bool(p.n_noise))
+    eager = np.array(keystream_kernel_apply(
+        p, ci.key, rc, noise, interpret=True, mats=mats, reduction="eager"))
+    lazy = np.array(keystream_kernel_apply(
+        p, ci.key, rc, noise, interpret=True, mats=mats, reduction="lazy"))
+    np.testing.assert_array_equal(lazy, eager)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", PRESETS)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_pallas_interpret_lazy_matches_eager_full(name, variant):
+    p = get_params(name)
+    ci, rc, noise, mats = _constants(name, 8, bool(p.n_noise))
+    eager = np.array(keystream_kernel_apply(
+        p, ci.key, rc, noise, interpret=True, variant=variant, mats=mats,
+        reduction="eager"))
+    lazy = np.array(keystream_kernel_apply(
+        p, ci.key, rc, noise, interpret=True, variant=variant, mats=mats,
+        reduction="lazy"))
+    np.testing.assert_array_equal(lazy, eager)
+
+
+# ==========================================================================
+# Terminal-reduction law: the can-fail cases (two-sided + prover)
+# ==========================================================================
+@pytest.mark.parametrize(
+    "build", [b for b, _ in BROKEN_PLANS], ids=[n for _, n in BROKEN_PLANS])
+def test_over_deferred_plan_is_refused_and_diagnosed(build):
+    sched, bad, code, match = build()
+    with pytest.raises(ValueError, match=match):
+        bad.validate(sched)
+    findings = [f for f in run_lint(sched, plan=bad)
+                if f.severity == LINT_ERROR]
+    assert code in {f.code for f in findings}, [f.render() for f in findings]
+    # without a plan the plan-aware rule must stay silent on a clean program
+    assert not [f for f in run_lint(sched) if f.code == code]
+
+
+@pytest.mark.parametrize(
+    "build", [b for b, _ in BROKEN_PLANS], ids=[n for _, n in BROKEN_PLANS])
+def test_prover_leaves_over_deferred_obligation_undischarged(build):
+    sched, bad, _, _ = build()
+    proof = prove_overflow_safety(get_params("pasta-128s"), sched, plan=bad)
+    assert not proof.proved
+    assert any("terminal-reduction" in c.provenance for c in proof.failures())
+
+
+# ==========================================================================
+# Relaxed modmath primitives land on the same residues
+# ==========================================================================
+def test_mul_deferred_output_reduces_to_canonical(rng):
+    mod = get_params("pasta-128s").mod
+    x = jnp.asarray(rng.integers(0, mod.q, 256, dtype=np.uint32))
+    y = jnp.asarray(rng.integers(0, mod.q, 256, dtype=np.uint32))
+    raw = mod.mul(x, y, reduce_out=False)
+    np.testing.assert_array_equal(
+        np.array(mod.reduce(raw, 3 * mod.q)), np.array(mod.mul(x, y)))
+
+
+def test_mul_relaxed_input_bound(rng):
+    mod = get_params("pasta-128s").mod
+    x = jnp.asarray(rng.integers(0, mod.q, 256, dtype=np.uint32))
+    y = jnp.asarray(rng.integers(0, mod.q, 256, dtype=np.uint32))
+    assert mod.mul_fits(2 * mod.q, mod.q)
+    got = mod.mul(x + jnp.uint32(mod.q), y, x_bound=2 * mod.q)
+    np.testing.assert_array_equal(np.array(got), np.array(mod.mul(x, y)))
+
+
+def test_matvec_small_lazy_matches_eager(rng):
+    p = get_params("hera-128a")
+    mat = p.mix_matrix()
+    x = jnp.asarray(rng.integers(0, p.mod.q, (8, mat.shape[0]),
+                                 dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.array(p.mod.matvec_small(mat, x, lazy=True)),
+        np.array(p.mod.matvec_small(mat, x)))
+
+
+@pytest.mark.parametrize("t", [16, 64])
+def test_matvec_dense_lazy_matches_eager(t, rng):
+    """t=16 is the single-chunk path; t=64 exercises the multi-chunk
+    reshape + partial-sum fold (pasta-128l's shape)."""
+    mod = get_params("pasta-128s").mod
+    mat = jnp.asarray(rng.integers(0, mod.q, (t, t), dtype=np.uint32))
+    x = jnp.asarray(rng.integers(0, mod.q, t, dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.array(mod.matvec_dense(mat, x, lazy=True)),
+        np.array(mod.matvec_dense(mat, x)))
+    # deferred products shrink the chunk cap: the lazy policy's constant
+    assert mod.dense_chunk(3 * mod.q) < mod.dense_chunk()
+
+
+def test_dense_chunk_schedule_divisor_policy():
+    """The chunk is the largest DIVISOR of t under the uint32 cap — the
+    reshape form that keeps the chunk sums fused (DESIGN.md §14); eager
+    t=64 stays one whole-row pass, graph-identical to the pre-pass
+    datapath."""
+    mod = get_params("pasta-128l").mod
+    assert mod.dense_chunk_schedule(64) == (64, 1)              # eager
+    assert mod.dense_chunk_schedule(16, 3 * mod.q) == (16, 1)   # 128s lazy
+    assert mod.dense_chunk_schedule(64, 3 * mod.q) == (16, 4)   # 128l lazy
+    for t, pb in ((64, 3 * mod.q), (16, None)):
+        ch, nch = mod.dense_chunk_schedule(t, pb)
+        assert ch * nch == t and ch <= mod.dense_chunk(pb)
+
+
+# ==========================================================================
+# The static win the snapshot gates on
+# ==========================================================================
+@pytest.mark.parametrize("name", PRESETS)
+def test_reduction_report_saves_steps(name):
+    rep = reduction_report(get_params(name))
+    assert rep.lazy_steps < rep.eager_steps
+    assert rep.saved_steps == rep.eager_steps - rep.lazy_steps
+    assert 0.0 < rep.saved_pct < 100.0
+
+
+def test_tuner_plan_carries_reduction_mode():
+    from repro.core.tuner import StreamPlan
+
+    plan = StreamPlan(producer="counter", engine="jax", variant="normal",
+                      window=64, depth=2, reduction="eager")
+    assert StreamPlan.from_json(plan.to_json()) == plan
+    # pre-pass cache entries (schema < 4) default to the shipped mode
+    legacy = dict(plan.to_json())
+    legacy.pop("reduction")
+    assert StreamPlan.from_json(legacy).reduction == "lazy"

@@ -29,7 +29,8 @@ TINY = dict(sessions=2, n_windows=2, reps=1)
 
 def _tiny_autotune(cache, **kw):
     args = dict(engines=["jax"], variants=["normal"], windows=[8],
-                depths=[2], producers=["aes"], cache_path=cache, **TINY)
+                depths=[2], producers=["aes"], reductions=["lazy"],
+                cache_path=cache, **TINY)
     args.update(kw)
     return autotune("rubato-128s", 8, **args)
 
