@@ -1,0 +1,340 @@
+"""Serving-plane load bench: replayable open-loop traffic against the
+asyncio TCP front end (`repro.serve.server`).
+
+    PYTHONPATH=src python benchmarks/serve_load_bench.py [--smoke]
+    PYTHONPATH=src python benchmarks/serve_load_bench.py --snapshot
+    PYTHONPATH=src python benchmarks/serve_load_bench.py --smoke --check
+
+Each lap boots a real :class:`~repro.serve.server.ServePlane` on loopback
+and drives it with N concurrent :class:`~repro.serve.server.ServeClient`
+connections generating the serving plane's three load dimensions:
+
+  * **Poisson arrivals** — per-client exponential inter-arrival sleeps
+    (open-loop: submits pipeline, they do not wait for earlier replies),
+    so windows fill from asynchronous bursts the way real traffic fills
+    them rather than in lock-step;
+  * **session churn** — every ``churn`` requests a client live-rotates
+    its session mid-stream (`rotate` op: pending old-nonce lanes
+    materialize first), and halfway through the lap it opens a second
+    session, so the tenant's window packer sees a shifting session mix;
+  * **hot-key skew** — clients map onto tenants through a Zipf draw, so
+    one hot tenant takes most of the traffic while cold tenants exercise
+    the LRU registry's long tail.
+
+Reported per preset: sustained req/s, client-observed p50/p99 reply
+latency, and the server's scheduler counters (windows served, deadline
+fires, shed).  Requests are ``keystream`` submits of 1..4 blocks — the
+transciphering feed shape — so the lap times the scheduler and the farm,
+not client-side crypto.
+
+--snapshot writes benchmarks/BENCH_serve_trajectory.json: one entry per
+preset with req/s and p50/p99 for the fixed smoke-sized profile.
+--check replays the same profile and flags entry drift (errors) and
+>REGRESSION_TOL slowdowns — req/s drops and p50/p99 growth — as
+warnings, errors under --strict: the same contract as the farm
+trajectory gate (timings are host-dependent, structure is not).  The
+ci.sh ``serve-gate`` stage runs --smoke --check.
+"""
+
+import sys, pathlib
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import argparse
+import asyncio
+import dataclasses
+import time
+
+import numpy as np
+
+SNAPSHOT_SCHEMA = 1
+DEFAULT_SNAPSHOT = (pathlib.Path(__file__).parent
+                    / "BENCH_serve_trajectory.json")
+#: relative req/s / p50 / p99 regression --check flags
+REGRESSION_TOL = 0.20
+#: the cheapest preset plus the matrix-streaming large set — the two
+#: serving points the acceptance gate names
+SNAPSHOT_PRESETS = ("hera-80", "pasta-128l")
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadProfile:
+    """One replayable traffic shape (the snapshot pins the smoke shape)."""
+
+    clients: int = 8
+    tenants: int = 3          # Zipf-skewed assignment across these
+    requests: int = 12        # per client
+    window: int = 16
+    deadline_ms: float = 10.0
+    max_pending_lanes: int = 256
+    mean_gap_ms: float = 2.0  # Poisson inter-arrival mean per client
+    churn: int = 5            # rotate the session every N requests
+    seed: int = 0
+    reps: int = 2             # snapshot laps: keep the best-of-reps by p50
+
+
+SMOKE = LoadProfile()
+FULL = LoadProfile(clients=16, tenants=5, requests=40, window=32,
+                   mean_gap_ms=1.0)
+
+
+def _zipf_tenant(rng, n_tenants: int) -> str:
+    """Hot-key skew: tenant 0 takes the bulk of the clients."""
+    return f"t{min(int(rng.zipf(1.8)) - 1, n_tenants - 1)}"
+
+
+async def _client_load(client, sessions: list, profile: LoadProfile, rng,
+                       latencies: list, counters: dict) -> None:
+    """One connection's open-loop lap: Poisson-spaced pipelined keystream
+    submits with mid-stream rotation churn and a session switch.
+
+    ``sessions`` are pre-opened (two per client) so the timed lap never
+    grows a tenant's session pool — pool growth retraces the farm
+    producer, and a compile inside the lap would swamp the scheduling
+    latencies this bench exists to measure.  Rotation (same pool size,
+    fresh nonce) stays inside the lap: it is cheap and IS the churn under
+    test."""
+    active = sessions[:1]
+    inflight = []
+
+    async def one(session_id: int, blocks: int):
+        t0 = time.perf_counter()
+        r = await client.call({
+            "op": "submit", "tenant": client.tenant, "session": session_id,
+            "hhe_op": "keystream", "blocks": blocks,
+        })
+        if r.get("ok"):
+            latencies.append(time.perf_counter() - t0)
+            counters["ok"] += 1
+        elif r.get("shed"):
+            counters["shed"] += 1
+        else:
+            counters["failed"] += 1
+
+    for i in range(profile.requests):
+        if i and i % profile.churn == 0:
+            # live rotation under load — wait for in-flight submits on
+            # this session first so the old-nonce lanes all land
+            await asyncio.gather(*inflight)
+            inflight.clear()
+            await client.rotate(active[-1])
+            counters["rotations"] += 1
+        if i == profile.requests // 2 and len(active) == 1:
+            active.append(sessions[1])     # session churn: switch streams
+        blocks = int(rng.integers(1, 5))
+        inflight.append(asyncio.get_running_loop().create_task(
+            one(active[-1], blocks)))
+        await asyncio.sleep(float(rng.exponential(
+            profile.mean_gap_ms / 1e3)))
+    await asyncio.gather(*inflight)
+
+
+async def _run_lap(preset: str, profile: LoadProfile) -> dict:
+    from repro.serve.server import ServeClient, ServePlane
+    from repro.serve.tenants import TenantRegistry
+
+    registry = TenantRegistry(
+        preset, capacity=profile.tenants, window=profile.window,
+        deadline_s=profile.deadline_ms / 1e3,
+        max_pending_lanes=profile.max_pending_lanes, overload="shed",
+        seed=profile.seed)
+    plane = ServePlane(registry, port=0, tick_s=0.002)
+    host, port = await plane.start()
+
+    rng = np.random.default_rng(profile.seed)
+    clients = [
+        ServeClient(host, port, _zipf_tenant(rng, profile.tenants))
+        for _ in range(profile.clients)
+    ]
+    try:
+        for c in clients:
+            await c.connect()
+        # pre-open every session FIRST (each tenant's pool reaches its
+        # final size), then one awaited submit per distinct tenant
+        # compiles its farm programs — so the timed lap never traces
+        sessions = [[await c.open_session(), await c.open_session()]
+                    for c in clients]
+        warmed = set()
+        for c, sess in zip(clients, sessions):
+            if c.tenant in warmed:
+                continue
+            warmed.add(c.tenant)
+            r = await c.call({"op": "submit", "tenant": c.tenant,
+                              "session": sess[0], "hhe_op": "keystream",
+                              "blocks": profile.window})
+            assert r.get("ok"), f"warmup submit failed: {r}"
+
+        latencies: list = []
+        counters = {"ok": 0, "shed": 0, "failed": 0, "rotations": 0}
+        t0 = time.perf_counter()
+        await asyncio.gather(*[
+            _client_load(c, sess, profile,
+                         np.random.default_rng(profile.seed + 1 + i),
+                         latencies, counters)
+            for i, (c, sess) in enumerate(zip(clients, sessions))
+        ])
+        wall = time.perf_counter() - t0
+        stats = await clients[0].stats(tenant_scoped=False)
+    finally:
+        for c in clients:
+            await c.close()
+        await plane.stop()
+
+    if counters["failed"]:
+        raise RuntimeError(
+            f"{counters['failed']} submits failed outright — the plane "
+            "must serve or shed, never error, under this profile")
+    lat = np.asarray(latencies) * 1e3
+    per_tenant = stats["per_tenant"]
+    return {
+        "preset": preset,
+        "clients": profile.clients,
+        "tenants_live": stats["tenants"],
+        "requests_ok": counters["ok"],
+        "shed": counters["shed"],
+        "rotations": counters["rotations"],
+        "req_s": round(counters["ok"] / wall, 2),
+        "p50_ms": round(float(np.percentile(lat, 50)), 3),
+        "p99_ms": round(float(np.percentile(lat, 99)), 3),
+        "windows_served": sum(t["windows_served"]
+                              for t in per_tenant.values()),
+        "deadline_fires": sum(t["deadline_fires"]
+                              for t in per_tenant.values()),
+        "fill_fires": sum(t["fill_fires"] for t in per_tenant.values()),
+    }
+
+
+def run_lap(preset: str, profile: LoadProfile) -> dict:
+    return asyncio.run(_run_lap(preset, profile))
+
+
+def _print_lap(r: dict) -> None:
+    print(f"  {r['preset']:<12} {r['req_s']:>8.1f} req/s  "
+          f"p50 {r['p50_ms']:>7.2f} ms  p99 {r['p99_ms']:>7.2f} ms  "
+          f"ok={r['requests_ok']} shed={r['shed']} "
+          f"rot={r['rotations']} windows={r['windows_served']} "
+          f"(fill={r['fill_fires']}, deadline={r['deadline_fires']})")
+
+
+# ==========================================================================
+# Trajectory snapshot (benchmarks/BENCH_serve_trajectory.json)
+# ==========================================================================
+def build_serve_snapshot(presets=SNAPSHOT_PRESETS,
+                         profile: LoadProfile = SMOKE) -> dict:
+    entries = {}
+    for preset in presets:
+        # best-of-reps by p50: queueing latency under open-loop load is
+        # the most noise-amplified metric; the floor is the stable signal
+        # (same reasoning as the farm bench's best-of-reps)
+        best = None
+        for _ in range(max(1, profile.reps)):
+            r = run_lap(preset, profile)
+            if best is None or r["p50_ms"] < best["p50_ms"]:
+                best = r
+        _print_lap(best)
+        entries[f"{preset}|smoke"] = best
+    return {
+        "schema": SNAPSHOT_SCHEMA,
+        "profile": dataclasses.asdict(profile),
+        "entries": entries,
+    }
+
+
+def check_serve_snapshot(snapshot: dict, current: dict,
+                         strict: bool) -> list:
+    """Structure (schema, entry set, profile) must match exactly —
+    errors.  Throughput drops and latency growth beyond REGRESSION_TOL
+    are warnings, errors under --strict.  Returns (level, message)
+    pairs."""
+    if snapshot.get("schema") != SNAPSHOT_SCHEMA:
+        return [("error", f"snapshot schema {snapshot.get('schema')} != "
+                 f"{SNAPSHOT_SCHEMA}; regenerate with --snapshot")]
+    problems = []
+    if snapshot.get("profile") != current.get("profile"):
+        problems.append(("error", "load profile drifted from the snapshot "
+                         "(regenerate with --snapshot)"))
+    for key, snap in sorted(snapshot.get("entries", {}).items()):
+        cur = current["entries"].get(key)
+        if cur is None:
+            problems.append(("error", f"{key}: entry vanished from the "
+                             "current lap (preset wiring drifted)"))
+            continue
+        checks = (("req_s", -1), ("p50_ms", +1), ("p99_ms", +1))
+        for field, direction in checks:
+            was, now = snap[field], cur[field]
+            if was <= 0:
+                continue
+            reg = direction * (now - was) / was
+            if reg > REGRESSION_TOL:
+                level = "error" if strict else "warning"
+                what = "dropped" if direction < 0 else "regressed"
+                problems.append(
+                    (level, f"{key}: {field} {what} {reg * 100:.0f}% "
+                     f"(snapshot {was}, now {now})"))
+    for key in sorted(current.get("entries", {})):
+        if key not in snapshot.get("entries", {}):
+            problems.append(("error", f"{key}: new entry missing from the "
+                             "snapshot; regenerate with --snapshot"))
+    return problems
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--presets", nargs="*", default=None,
+                    help=f"cipher presets (default {SNAPSHOT_PRESETS})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="the small fixed profile the snapshot pins")
+    ap.add_argument("--clients", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--snapshot", action="store_true",
+                    help="write the trajectory snapshot "
+                         "(benchmarks/BENCH_serve_trajectory.json)")
+    ap.add_argument("--check", action="store_true",
+                    help="replay the snapshot profile and compare; exit 1 "
+                         "on structural drift")
+    ap.add_argument("--strict", action="store_true",
+                    help="with --check: >20%% req/s / latency regression "
+                         "is an error, not a warning")
+    ap.add_argument("--snapshot-path", type=pathlib.Path,
+                    default=DEFAULT_SNAPSHOT, metavar="PATH")
+    args = ap.parse_args()
+
+    presets = tuple(args.presets) if args.presets else SNAPSHOT_PRESETS
+
+    if args.snapshot or args.check:
+        import json
+
+        print("serve load lap (snapshot profile):")
+        current = build_serve_snapshot(presets)
+        if args.snapshot:
+            args.snapshot_path.write_text(
+                json.dumps(current, indent=1, sort_keys=True) + "\n")
+            print(f"wrote {args.snapshot_path}")
+            return 0
+        if not args.snapshot_path.exists():
+            print(f"snapshot {args.snapshot_path} missing; run --snapshot",
+                  file=sys.stderr)
+            return 1
+        snapshot = json.loads(args.snapshot_path.read_text())
+        problems = check_serve_snapshot(snapshot, current,
+                                        strict=args.strict)
+        for level, msg in problems:
+            print(f"[{level}] {msg}")
+        errors = [m for level, m in problems if level == "error"]
+        print(f"serve trajectory check: {len(errors)} error(s), "
+              f"{len(problems) - len(errors)} warning(s)")
+        return 0 if not errors else 1
+
+    profile = SMOKE if args.smoke else FULL
+    if args.clients or args.requests:
+        profile = dataclasses.replace(
+            profile, clients=args.clients or profile.clients,
+            requests=args.requests or profile.requests)
+    print(f"serve load lap ({'smoke' if args.smoke else 'full'} profile, "
+          f"{profile.clients} clients, {profile.requests} req/client):")
+    for preset in presets:
+        _print_lap(run_lap(preset, profile))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

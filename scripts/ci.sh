@@ -5,11 +5,17 @@
 # stage guards).
 #
 #   scripts/ci.sh                         # every stage (full tier-1)
-#   scripts/ci.sh --fast                  # all but the slow interpret lap
+#   scripts/ci.sh --fast                  # all but the nightly-only stages
 #   scripts/ci.sh --strict                # bench/analyze timing drift errors
 #   scripts/ci.sh --list                  # enumerate stages
+#   scripts/ci.sh --list-names [--fast]   # machine-readable stage list (the
+#                                         # GitHub workflow derives its fast
+#                                         # matrix from this — never hand-list)
 #   scripts/ci.sh --stage schedule-drift  # one stage in isolation
 #   scripts/ci.sh --stage tuner-smoke --stage bench-smoke   # several
+#
+# With CI_SUMMARY_FILE set, the per-stage timing summary is also written
+# there (the nightly workflow uploads it as an artifact).
 #
 # Preset lists inside the availability guards are DERIVED from
 # core/params.py's REGISTRY — a new cipher preset (e.g. PASTA) is covered
@@ -35,18 +41,43 @@ STAGES=(
   "analyze|schedule-IR static analysis matrix + snapshot drift (repro.analysis)"
   "bench-smoke|keystream farm bench canary: both variants + producer/depth sweep"
   "bench-gate|farm trajectory snapshot: p50/p99 regression + matrix-prefetch overlap"
+  "serve-smoke|async serving plane on loopback: 8 concurrent clients x 2 tenants, live rotation, exact recovery"
+  "serve-gate|serve trajectory snapshot: req/s + p50/p99 drift vs BENCH_serve_trajectory.json"
   "fast-lap|pytest -m 'not slow' (everything else; engine/schedule suites above)"
   "slow-lap|pytest -m slow: full-lane interpret-mode Pallas sweeps"
 )
 
+# stages the --fast lap skips (nightly/full laps run them): the interpret
+# sweep and the serve load-replay gate are the two multi-minute stages
+FAST_EXCLUDE=("slow-lap" "serve-gate")
+
+fast_excluded() {
+  local e
+  for e in "${FAST_EXCLUDE[@]}"; do [[ "$e" == "$1" ]] && return 0; done
+  return 1
+}
+
 stage_names() { local s; for s in "${STAGES[@]}"; do echo "${s%%|*}"; done; }
 
 list_stages() {
-  echo "stages (run one with --stage <name>):"
-  local s
+  echo "stages (run one with --stage <name>; * = skipped by --fast):"
+  local s name mark
   for s in "${STAGES[@]}"; do
-    printf "  %-22s %s\n" "${s%%|*}" "${s#*|}"
+    name="${s%%|*}"
+    mark=" "
+    fast_excluded "$name" && mark="*"
+    printf " %s %-22s %s\n" "$mark" "$name" "${s#*|}"
   done
+}
+
+list_stage_names() {
+  # machine-readable: one stage name per line, honoring --fast — the
+  # GitHub workflow's matrix derives from this (workflow-lint checks it)
+  local name
+  while IFS= read -r name; do
+    [[ $FAST -eq 1 ]] && fast_excluded "$name" && continue
+    echo "$name"
+  done < <(stage_names)
 }
 
 # --------------------------------------------------------------------------
@@ -190,25 +221,81 @@ PYEOF
 
 stage_workflow_lint() {
   python - <<'PYEOF'
-import pathlib, sys
+import pathlib, re, subprocess, sys
 path = pathlib.Path(".github/workflows/ci.yml")
 assert path.exists(), f"{path} missing"
 text = path.read_text()
 try:
     import yaml
-    doc = yaml.safe_load(text)
-    assert isinstance(doc, dict) and "jobs" in doc, "workflow has no jobs"
-    # 'on:' parses to the boolean True key in YAML 1.1
-    trig = doc.get("on", doc.get(True))
-    assert trig, "workflow has no triggers"
-    jobs = doc["jobs"]
-    assert any("ci.sh" in str(j) for j in jobs.values()), \
-        "no job invokes scripts/ci.sh"
-    print(f"workflow ok: jobs={sorted(jobs)} triggers={sorted(trig)}")
 except ImportError:   # offline image without pyyaml: structural fallback
-    for needle in ("jobs:", "runs-on:", "scripts/ci.sh"):
+    for needle in ("jobs:", "runs-on:", "scripts/ci.sh",
+                   "--list-names --fast", "cancel-in-progress: true",
+                   "benchmarks/BENCH_*.json"):
         assert needle in text, f"workflow missing {needle!r}"
     print("workflow ok (structural check; pyyaml unavailable)")
+    sys.exit(0)
+doc = yaml.safe_load(text)
+assert isinstance(doc, dict) and "jobs" in doc, "workflow has no jobs"
+# 'on:' parses to the boolean True key in YAML 1.1
+trig = doc.get("on", doc.get(True))
+assert trig, "workflow has no triggers"
+jobs = doc["jobs"]
+assert any("ci.sh" in str(j) for j in jobs.values()), \
+    "no job invokes scripts/ci.sh"
+# concurrency hygiene: one live run per ref, stale runs ALWAYS cancelled
+conc = doc.get("concurrency") or {}
+assert "github.ref" in str(conc.get("group", "")), \
+    "concurrency group must be per-ref"
+assert conc.get("cancel-in-progress") is True, \
+    "concurrency.cancel-in-progress must be unconditionally true"
+# the fast lap's stage list must be DERIVED from ci.sh, never hand-listed:
+# a job lists stages via --list-names --fast, and the matrix job consumes
+# that output through fromJSON — hardcoded stage arrays are the drift bug
+# this lint exists to catch
+derive_jobs = [n for n, j in jobs.items()
+               if "--list-names --fast" in str(j)]
+assert derive_jobs, "no job derives the stage list via " \
+    "'scripts/ci.sh --list-names --fast'"
+matrix_jobs = [n for n, j in jobs.items()
+               if (j.get("strategy") or {}).get("matrix")]
+assert matrix_jobs, "no matrix job runs the fast-lap stages"
+for n in matrix_jobs:
+    m = jobs[n]["strategy"]["matrix"]
+    assert isinstance(m.get("stage"), str) and "fromJSON" in m["stage"], \
+        f"job {n!r}: matrix.stage must be fromJSON(<derive job output>), " \
+        f"not a hardcoded list: {m.get('stage')!r}"
+# the derived list agrees with what ci.sh actually declares right now
+listed = subprocess.run(
+    ["bash", "scripts/ci.sh", "--list-names", "--fast"],
+    capture_output=True, text=True, check=True).stdout.split()
+assert listed, "--list-names --fast returned no stages"
+declared = subprocess.run(
+    ["bash", "scripts/ci.sh", "--list-names"],
+    capture_output=True, text=True, check=True).stdout.split()
+assert set(listed) < set(declared), \
+    "fast list must be a strict subset of all stages (nightly-only " \
+    "stages exist)"
+assert "serve-smoke" in listed, "serve-smoke must ride the fast lap"
+assert "serve-gate" in set(declared) - set(listed), \
+    "serve-gate must be nightly-only"
+# nightly artifacts: bench snapshots + the per-stage timing summary
+sched_jobs = [j for j in jobs.values()
+              if "schedule" in str(j.get("if", ""))
+              and "!=" not in str(j.get("if", ""))]
+assert sched_jobs, "no nightly (schedule-gated) job"
+arts = [s for j in sched_jobs for s in j.get("steps", [])
+        if "upload-artifact" in str(s.get("uses", ""))]
+assert arts, "nightly job uploads no artifacts"
+paths = " ".join(str(s.get("with", {}).get("path", "")) for s in arts)
+assert "benchmarks/BENCH_" in paths, \
+    "nightly artifacts must include benchmarks/BENCH_*.json"
+assert re.search(r"summary", paths), \
+    "nightly artifacts must include the stage timing summary"
+assert any("CI_SUMMARY_FILE" in str(j) for j in sched_jobs), \
+    "nightly job must set CI_SUMMARY_FILE for the timing summary"
+print(f"workflow ok: jobs={sorted(jobs)} triggers={sorted(trig)}; "
+      f"fast matrix derived from --list-names ({len(listed)} stages), "
+      f"nightly uploads bench snapshots + summary")
 PYEOF
 }
 
@@ -250,6 +337,83 @@ stage_bench_gate() {
   python benchmarks/keystream_farm_bench.py --check "${STRICT_ARGS[@]}"
 }
 
+stage_serve_smoke() {
+  # the serving plane end to end over real loopback TCP: 8 concurrent
+  # clients split across 2 tenants, both HHE directions, one mid-stream
+  # live key rotation — every recovered plaintext must be bit-exact
+  python - <<'PYEOF'
+import asyncio
+
+import numpy as np
+
+from repro.serve.server import ServeClient, ServePlane
+from repro.serve.tenants import TenantRegistry
+
+N_CLIENTS, TENANTS = 8, ("tenant-a", "tenant-b")
+
+
+async def drive(client, rng, rotate_at):
+    session = await client.open_session()
+    q, l = client.params.mod.q, client.params.l
+    for step in range(4):
+        if step == rotate_at:
+            await client.rotate(session)     # live rotation mid-stream
+        toks = rng.integers(0, q, size=(int(rng.integers(1, 5)), l),
+                            dtype=np.uint32)
+        r = await client.encrypt_to_server(session, toks)
+        assert r.get("ok"), f"inbound submit failed: {r}"
+        got = np.asarray(r["result"], np.uint32)
+        assert np.array_equal(got, toks), "inbound recovery not exact"
+        toks = rng.integers(0, q, size=(int(rng.integers(1, 5)), l),
+                            dtype=np.uint32)
+        r, back = await client.decrypt_from_server(session, toks)
+        assert r.get("ok"), f"outbound submit failed: {r}"
+        assert np.array_equal(back, toks), "outbound recovery not exact"
+    return rotate_at >= 0
+
+
+async def main():
+    registry = TenantRegistry("hera-80", capacity=4, window=8,
+                              deadline_s=0.01, max_pending_lanes=128)
+    plane = ServePlane(registry, port=0, tick_s=0.002)
+    host, port = await plane.start()
+    clients = [ServeClient(host, port, TENANTS[i % len(TENANTS)])
+               for i in range(N_CLIENTS)]
+    try:
+        for c in clients:
+            await c.connect()
+        keys = {c.tenant: c.key.tobytes() for c in clients}
+        assert len(set(keys.values())) == len(TENANTS), \
+            "tenant keys must be distinct"
+        # all clients concurrently; client 0 rotates mid-stream
+        rotated = await asyncio.gather(*[
+            drive(c, np.random.default_rng(100 + i), 2 if i == 0 else -1)
+            for i, c in enumerate(clients)
+        ])
+        assert any(rotated), "no client exercised live rotation"
+        stats = await clients[0].stats(tenant_scoped=False)
+    finally:
+        for c in clients:
+            await c.close()
+        await plane.stop()
+    served = sum(t["windows_served"] for t in stats["per_tenant"].values())
+    print(f"serve smoke ok: {N_CLIENTS} clients x {len(TENANTS)} tenants, "
+          f"{served} windows served, exact recovery both directions "
+          f"(1 live rotation)")
+
+
+asyncio.run(main())
+PYEOF
+}
+
+stage_serve_gate() {
+  # fresh load-replay lap vs benchmarks/BENCH_serve_trajectory.json: the
+  # preset entry set must match exactly; >20% req/s drops or p50/p99
+  # growth are flagged (warnings by default, errors on the nightly
+  # --strict lap — same contract as bench-gate)
+  python benchmarks/serve_load_bench.py --smoke --check "${STRICT_ARGS[@]}"
+}
+
 stage_fast_lap() {
   # engine/schedule/redplan suites have their own stages; everything else
   # not slow
@@ -277,24 +441,29 @@ run_stage() {
 # --------------------------------------------------------------------------
 SELECTED=()
 FAST=0
+LIST=0
+LIST_NAMES=0
 STRICT_ARGS=()
 while [[ $# -gt 0 ]]; do
   case "$1" in
-    --list) list_stages; exit 0 ;;
+    --list) LIST=1; shift ;;
+    --list-names) LIST_NAMES=1; shift ;;
     --fast) FAST=1; shift ;;
     --strict) STRICT_ARGS=(--strict); shift ;;
     --stage)
       [[ $# -ge 2 ]] || { echo "--stage needs a name (--list)" >&2; exit 2; }
       SELECTED+=("$2"); shift 2 ;;
     *) echo "unknown argument: $1" \
-       "(--list | --fast | --strict | --stage <name>)" >&2
+       "(--list | --list-names | --fast | --strict | --stage <name>)" >&2
        exit 2 ;;
   esac
 done
+[[ $LIST -eq 1 ]] && { list_stages; exit 0; }
+[[ $LIST_NAMES -eq 1 ]] && { list_stage_names; exit 0; }
 
 if [[ ${#SELECTED[@]} -eq 0 ]]; then
   while IFS= read -r name; do
-    [[ $FAST -eq 1 && "$name" == "slow-lap" ]] && continue
+    [[ $FAST -eq 1 ]] && fast_excluded "$name" && continue
     SELECTED+=("$name")
   done < <(stage_names)
 fi
@@ -331,16 +500,26 @@ for name in "${SELECTED[@]}"; do
   fi
 done
 
+print_summary() {
+  echo "=== ci.sh summary ==="
+  printf "%-22s %-6s %8s\n" "stage" "status" "seconds"
+  printf "%-22s %-6s %8s\n" "----------------------" "------" "-------"
+  local i
+  for i in "${!RESULT_NAMES[@]}"; do
+    printf "%-22s %-6s %8s\n" \
+      "${RESULT_NAMES[$i]}" "${RESULT_STATUS[$i]}" "${RESULT_SECS[$i]}"
+  done
+  if [[ $FAILED -ne 0 ]]; then
+    echo "overall: FAIL"
+  else
+    echo "overall: PASS"
+  fi
+}
+
 echo
-echo "=== ci.sh summary ==="
-printf "%-22s %-6s %8s\n" "stage" "status" "seconds"
-printf "%-22s %-6s %8s\n" "----------------------" "------" "-------"
-for i in "${!RESULT_NAMES[@]}"; do
-  printf "%-22s %-6s %8s\n" \
-    "${RESULT_NAMES[$i]}" "${RESULT_STATUS[$i]}" "${RESULT_SECS[$i]}"
-done
-if [[ $FAILED -ne 0 ]]; then
-  echo "overall: FAIL"
-  exit 1
+print_summary
+if [[ -n "${CI_SUMMARY_FILE:-}" ]]; then
+  print_summary > "$CI_SUMMARY_FILE"
+  echo "(summary written to $CI_SUMMARY_FILE)"
 fi
-echo "overall: PASS"
+[[ $FAILED -eq 0 ]] || exit 1

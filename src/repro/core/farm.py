@@ -242,6 +242,16 @@ class KeystreamFarm:
         return self.engine(constants)
 
     # ------------------------------------------------------------------
+    def pipeline(self) -> "FarmPipeline":
+        """A stateful push/drain view of the producer→consumer FIFO.
+
+        :meth:`run` is this object driven by an iterable; event-driven
+        callers (`serve/hhe_loop.py`'s scheduler) hold one long-lived
+        pipeline instead and push windows as traffic fires them, so the
+        FIFO overlap spans scheduling events, not just one flush call.
+        """
+        return FarmPipeline(self)
+
     def run(self, plans: Iterable[WindowPlan]
             ) -> Iterator[Tuple[WindowPlan, jnp.ndarray]]:
         """Yield (plan, keystream) per window, pipeline-depth buffered.
@@ -254,59 +264,21 @@ class KeystreamFarm:
         serialized D1 shape.
 
         For stream-sourced-MRMC presets with ``matrix_depth >= 2`` the
-        matrix plane runs through its own prefetch FIFO (see
-        :meth:`_run_split`): matrix-plane production is dispatched up to
-        ``matrix_depth`` windows ahead, decoupled from the vector-plane/
-        consumer pipeline, and the two planes are merged at consume time.
-        Lane order and keystream bits are identical either way.
+        matrix plane runs through its own prefetch FIFO: matrix-plane
+        production is dispatched up to ``matrix_depth`` windows ahead,
+        decoupled from the vector-plane/consumer pipeline, and the two
+        planes are merged at consume time.  Lane order and keystream bits
+        are identical either way.  Implemented over :meth:`pipeline`, the
+        incremental form the event-driven serving scheduler drives.
         """
-        if self._splits_planes:
-            yield from self._run_split(plans)
-            return
-        fifo: deque = deque()                 # (plan, in-flight constants)
+        pipe = self.pipeline()
         for plan in plans:
-            fifo.append((plan, self.produce(plan)))
-            if len(fifo) >= self.depth:
-                p, c = fifo.popleft()
-                yield p, self.consume(c)
-        while fifo:
-            p, c = fifo.popleft()
-            yield p, self.consume(c)
+            yield from pipe.push(plan)
+        yield from pipe.drain()
 
-    def _run_split(self, plans: Iterable[WindowPlan]
-                   ) -> Iterator[Tuple[WindowPlan, jnp.ndarray]]:
-        """Plane-split pipeline: a matrix-plane FIFO (`matrix_depth` deep)
-        feeding the vector-plane/consumer FIFO (``depth`` deep).
-
-        The matrix FIFO always runs ahead: window i's (heavy) matrix plane
-        is dispatched while window i - matrix_depth is still consuming, so
-        by the time the vector FIFO reaches window i its matrices are
-        already in flight — the paper's FIFO decoupling applied to the ~t×
-        heavier plane.
-        """
-        plan_iter = iter(plans)
-        exhausted = False
-        mfifo: deque = deque()    # (plan, in-flight matrix plane)
-        vfifo: deque = deque()    # (plan, in-flight vector consts, mats)
-        while True:
-            while not exhausted and len(mfifo) < self.matrix_depth:
-                try:
-                    plan = next(plan_iter)
-                except StopIteration:
-                    exhausted = True
-                    break
-                mfifo.append((plan, self.produce_matrix(plan)))
-            if not mfifo and not vfifo:
-                break
-            if mfifo:
-                plan, mats = mfifo.popleft()
-                vfifo.append((plan, self.produce(plan, "vector"), mats))
-            while vfifo and (len(vfifo) >= self.depth
-                             or (exhausted and not mfifo)):
-                plan, consts, mats = vfifo.popleft()
-                merged = dict(consts)
-                merged["mats"] = mats["mats"]
-                yield plan, self.consume(merged)
+    def run_one(self, plan: WindowPlan) -> jnp.ndarray:
+        """Serialized single-window convenience: produce + consume now."""
+        return self.consume(self.produce(plan))
 
     def keystream(self, session_ids, block_ctrs, window: Optional[int] = None):
         """Convenience: full keystream for per-lane pairs, windowed.
@@ -355,3 +327,70 @@ class KeystreamFarm:
         mod = self.batch.params.mod
         for plan, ct, z in self._payload_stream(plans_and_cts):
             yield plan, decode_fixed(mod, mod.sub(jnp.asarray(ct), z), delta)
+
+
+class FarmPipeline:
+    """Incremental (push-driven) form of :meth:`KeystreamFarm.run`.
+
+    ``push(plan)`` dispatches the window's producer(s) immediately and
+    returns any (plan, keystream) pairs whose consumers fired as the FIFO
+    reached its depth; ``drain()`` finishes everything in flight.  Driving
+    push over an iterable and then draining reproduces ``run()``'s
+    dispatch order *exactly* — same producer/consumer interleaving, same
+    bits — which tests/test_serve.py pins.  The point of the split: an
+    event-driven caller (the serving scheduler) can keep ONE pipeline
+    alive across scheduling events, so windows fired by different submit
+    wake-ups still overlap producer-vs-consumer like a batch flush would.
+
+    For stream-sourced-MRMC presets with ``matrix_depth >= 2`` the heavy
+    matrix plane runs through its own prefetch FIFO ahead of the
+    vector/consumer FIFO (the paper's FIFO decoupling applied to the ~t×
+    heavier plane); planes merge at consume time.
+    """
+
+    def __init__(self, farm: KeystreamFarm):
+        self.farm = farm
+        self._fifo: deque = deque()     # (plan, in-flight constants[, mats])
+        self._mfifo: deque = deque()    # (plan, in-flight matrix plane)
+
+    def in_flight(self) -> int:
+        """Windows dispatched (producer running) but not yet consumed."""
+        return len(self._fifo) + len(self._mfifo)
+
+    def _promote(self) -> None:
+        """Move the oldest matrix-FIFO window into the vector/consumer
+        FIFO, dispatching its vector-plane producer."""
+        plan, mats = self._mfifo.popleft()
+        self._fifo.append((plan, self.farm.produce(plan, "vector"), mats))
+
+    def _consume_one(self):
+        entry = self._fifo.popleft()
+        if len(entry) == 3:
+            plan, consts, mats = entry
+            merged = dict(consts)
+            merged["mats"] = mats["mats"]
+            return plan, self.farm.consume(merged)
+        plan, consts = entry
+        return plan, self.farm.consume(consts)
+
+    def push(self, plan: WindowPlan) -> List[Tuple[WindowPlan, jnp.ndarray]]:
+        out: List[Tuple[WindowPlan, jnp.ndarray]] = []
+        if self.farm._splits_planes:
+            self._mfifo.append((plan, self.farm.produce_matrix(plan)))
+            if len(self._mfifo) >= self.farm.matrix_depth:
+                self._promote()
+        else:
+            self._fifo.append((plan, self.farm.produce(plan)))
+        while len(self._fifo) >= self.farm.depth:
+            out.append(self._consume_one())
+        return out
+
+    def drain(self) -> List[Tuple[WindowPlan, jnp.ndarray]]:
+        out: List[Tuple[WindowPlan, jnp.ndarray]] = []
+        while self._mfifo:
+            self._promote()
+            while len(self._fifo) >= self.farm.depth:
+                out.append(self._consume_one())
+        while self._fifo:
+            out.append(self._consume_one())
+        return out

@@ -135,6 +135,13 @@ class CipherParams:
         return words
 
 
+# HERA 80-bit set (the paper's other benchmarked HERA point): same state,
+# one fewer round than Par-128a — the cheapest preset, which is why the
+# serving-plane load bench leans on it.
+HERA_80 = CipherParams(
+    name="hera-80", kind="hera", n=16, l=16, rounds=4, mod=Q_HERA
+)
+
 HERA_128A = CipherParams(
     name="hera-128a", kind="hera", n=16, l=16, rounds=5, mod=Q_HERA
 )
@@ -166,8 +173,8 @@ PASTA_128L = CipherParams(
 )
 
 REGISTRY = {
-    p.name: p for p in (HERA_128A, RUBATO_128S, RUBATO_128M, RUBATO_128L,
-                        PASTA_128S, PASTA_128L)
+    p.name: p for p in (HERA_80, HERA_128A, RUBATO_128S, RUBATO_128M,
+                        RUBATO_128L, PASTA_128S, PASTA_128L)
 }
 
 

@@ -158,7 +158,13 @@ class EncryptedChannel:
         return [(r.result, r.block_ctrs) for r in srv.flush()]
 
     def latency_stats(self) -> dict:
-        return self.server.latency_stats() if self.server else {"count": 0}
+        if self.server is not None:
+            return self.server.latency_stats()
+        # same zeroed shape HHEServer.latency_stats() guarantees pre-traffic
+        return {"count": 0, "p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0,
+                "queue_depth_lanes": 0, "inflight_lanes": 0,
+                "windows_served": 0, "fill_fires": 0, "deadline_fires": 0,
+                "shed": 0, "rejected": 0}
 
 
 def main(argv=None):

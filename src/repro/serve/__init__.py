@@ -1,4 +1,11 @@
 """Serving substrate: KV/SSM cache management, prefill and decode step
-factories with production shardings, and the HHE request loop
-(`hhe_loop.py`: many client sessions' encrypt/decrypt/keystream traffic
-packed into fixed windows over the double-buffered keystream farm)."""
+factories with production shardings, and the encrypted serving plane —
+
+* `hhe_loop.py`: event-driven single-key HHE scheduler (fill/deadline
+  window firing, admission control) over the double-buffered farm;
+* `tenants.py`: LRU-bounded per-tenant key registry with live session
+  rotation and eviction protection for in-flight work;
+* `server.py`: asyncio TCP front end (length-prefixed msgpack/JSON
+  frames) plus the matching :class:`~repro.serve.server.ServeClient` —
+  ``python -m repro.serve.server`` runs it standalone.
+"""

@@ -1,31 +1,51 @@
-"""HHE request loop: ragged multi-session traffic over the keystream farm.
+"""HHE request loop: event-driven window scheduling over the keystream farm.
 
 The serving shape the ROADMAP targets: many concurrent client sessions
 (HHEML-style batched PPML traffic), each submitting encrypt/decrypt/
 keystream requests of arbitrary block counts.  The server holds ONE
 symmetric key (the enclave role from `data/encrypted.py`) and a
 :class:`repro.core.cipher.CipherBatch` session pool; requests are packed
-lane-by-lane into fixed-size windows and run through the double-buffered
+lane-by-lane into fixed-size windows and run through the depth-buffered
 :class:`repro.core.farm.KeystreamFarm` pipeline — so an 11-block request
 from session A and a 3-block request from session B share one jit'd
 dispatch, and the XOF producer for the next window overlaps the current
 window's round computation.
 
-Fixed windows mean the server compiles exactly two XLA programs total, no
-matter how ragged the traffic; the tail window is padded with repeated
-lanes (recomputed keystream, discarded — never fresh counters, so the
-counter space stays dense).
+Scheduling is EVENT-DRIVEN (PR 10's refactor away from the pull-based
+`_flush_queue`): ``submit`` wakes the batcher, and a window fires the
+moment the lane buffer fills (``fire_on_fill``) or when the oldest queued
+lane crosses the ``deadline_s`` age bound (:meth:`HHEServer.service`, the
+timer edge the async front end in `serve/server.py` drives).  Fired
+windows flow through ONE long-lived :class:`repro.core.farm.FarmPipeline`,
+so producer/consumer overlap spans scheduling events — two windows fired
+by different submit wake-ups still double-buffer against each other.
+``flush()`` remains the synchronous drain for in-process callers
+(launch/serve.py) and returns responses in submission order; the window
+packing (and therefore the served bytes) is identical to the old
+whole-queue flush because both carve lanes through `core/farm.
+pack_windows`' padding rule at the same boundaries.
+
+Admission control: ``max_pending_lanes`` bounds the un-materialized lane
+backlog (buffered + in-flight).  Over the bound, policy "reject" raises
+:class:`HHEServerSaturated` (the client sees an error and can retry) and
+"shed" drops the request before reserving counters (counted, invisible
+to the farm).  Queue-depth, shed/reject, and fire-cause counters ride in
+:meth:`latency_stats`, which now always returns a fully-populated dict —
+a server that served zero windows reports zeroed percentiles instead of
+raising.
 
 Latency accounting: a request completes when the window holding its last
 lane is materialized; `latency_stats` reports p50/p99 over completed
-requests, the numbers `benchmarks/keystream_farm_bench.py` tabulates.
+requests, the numbers `benchmarks/serve_load_bench.py` replays against.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import List, Optional
+from collections import deque
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +60,15 @@ from repro.core.cipher import (
 from repro.core.farm import KeystreamFarm, WindowPlan, pack_windows
 
 OPS = ("keystream", "encrypt", "decrypt", "encrypt_tokens", "decrypt_tokens")
+
+#: admission-control policies when the pending-lane bound is hit
+OVERLOAD_POLICIES = ("reject", "shed")
+
+
+class HHEServerSaturated(RuntimeError):
+    """Raised by submit() under the "reject" overload policy: the pending
+    window queue is at its configured bound.  Clients should back off and
+    retry; nothing was reserved (no counters consumed)."""
 
 
 @dataclasses.dataclass
@@ -81,10 +110,27 @@ class HHEResponse:
     result: np.ndarray        # per-op result, (blocks, l)
     block_ctrs: np.ndarray    # counters consumed (client needs these)
     latency_s: float
+    seq: int = 0              # submission sequence (flush() sorts on it)
+
+
+@dataclasses.dataclass
+class _Entry:
+    """Book-keeping for one submitted request until its last lane lands."""
+
+    seq: int
+    req: HHERequest
+    ctrs: np.ndarray
+    t_submit: float
+    rows: np.ndarray          # (blocks, l) u32, filled window by window
+    remaining: int
+    # sessions can rotate while a request is queued on the OLD nonce; the
+    # response must report the nonce its counters were reserved under
+    nonce: bytes = b""
+    generation: int = 0
 
 
 class HHEServer:
-    """Single-key HHE endpoint: session pool + windowed farm pipeline.
+    """Single-key HHE endpoint: session pool + event-driven window scheduler.
 
     ``engine`` picks the farm's consumer backend (any registered
     `repro.core.engine` name or instance); ``consumer``/``interpret`` are
@@ -93,10 +139,25 @@ class HHEServer:
     StreamPlan` in one shot — producer, engine, variant, depth, and (when
     ``window`` is not given) window size.  With ``auto_rotate`` (default),
     a session whose counter space cannot fit an incoming request is
-    rotated to a fresh nonce (pending lanes on the old nonce are flushed
+    rotated to a fresh nonce (pending lanes on the old nonce materialize
     first), so long-running streams survive counter exhaustion without
     keystream reuse; clients observe rotations via
     ``StreamSession.generation`` and the session's current nonce.
+
+    Scheduler knobs (all optional — defaults reproduce the classic
+    submit-then-flush shape):
+
+    * ``fire_on_fill`` (default True): a full window dispatches inside the
+      submit that filled it, through the persistent farm pipeline.
+    * ``deadline_s``: age bound on the oldest un-materialized lane; when
+      it trips, :meth:`service` fires the part-full window (padded via
+      `pack_windows`) and drains the pipeline, so tail requests are never
+      parked behind an un-filled window.  None = no deadline (drain via
+      ``flush``).
+    * ``max_pending_lanes`` + ``overload``: admission control — over the
+      bound, "reject" raises :class:`HHEServerSaturated`, "shed" drops
+      the request (counted in ``latency_stats()["shed"]``) before any
+      counters are reserved.
     """
 
     DEFAULT_WINDOW = 256
@@ -105,55 +166,69 @@ class HHEServer:
                  engine=None, *, consumer: Optional[str] = None, mesh=None,
                  axis: str = "data", interpret: Optional[bool] = None,
                  variant: Optional[str] = None, depth: Optional[int] = None,
-                 plan=None, auto_rotate: bool = True):
+                 plan=None, auto_rotate: bool = True,
+                 fire_on_fill: bool = True,
+                 deadline_s: Optional[float] = None,
+                 max_pending_lanes: Optional[int] = None,
+                 overload: str = "reject"):
         if window is None:
             window = plan.window if plan is not None else self.DEFAULT_WINDOW
         if window <= 0:
             raise ValueError("window must be positive")
+        if overload not in OVERLOAD_POLICIES:
+            raise ValueError(
+                f"unknown overload policy {overload!r}; "
+                f"have {OVERLOAD_POLICIES}")
+        if max_pending_lanes is not None and max_pending_lanes < window:
+            raise ValueError(
+                f"max_pending_lanes={max_pending_lanes} below one window "
+                f"({window}): no request could ever complete")
+        if deadline_s is not None and deadline_s < 0:
+            raise ValueError("deadline_s must be >= 0")
         self.batch = batch
         self.window = window
         self.auto_rotate = auto_rotate
+        self.fire_on_fill = fire_on_fill
+        self.deadline_s = deadline_s
+        self.max_pending_lanes = max_pending_lanes
+        self.overload = overload
         self.farm = KeystreamFarm(batch, engine=engine, consumer=consumer,
                                   mesh=mesh, axis=axis, interpret=interpret,
                                   variant=variant, depth=depth, plan=plan)
-        self._queue: List[tuple] = []     # (request, ctrs, t_submit)
-        self._done: List[HHEResponse] = []   # rotation-forced early flushes
+        # ONE long-lived pipeline: windows fired by different scheduling
+        # events still overlap producer-vs-consumer across the FIFO
+        self._pipe = self.farm.pipeline()
+        # undispatched lanes: [entry, ctrs int64 array, consumed offset]
+        self._frags: Deque[list] = deque()
+        self._buffered = 0                # lanes in _frags
+        self._inflight = 0                # valid lanes dispatched, unmaterialized
+        self._pending_windows: Deque[WindowPlan] = deque()
+        self._completed: List[HHEResponse] = []
+        self._seq = 0
         self.latencies: List[float] = []
+        self.windows_served = 0
+        self.fill_fires = 0
+        self.deadline_fires = 0
+        self.shed_count = 0
+        self.rejected_count = 0
+        # submit may run on the event-loop thread while service/flush run
+        # in an executor (serve/server.py) — one reentrant lock serializes
+        # every scheduler mutation
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------------
     def open_session(self, nonce=None) -> StreamSession:
         return self.batch.add_session(nonce)
 
-    def submit(self, req: HHERequest) -> np.ndarray:
-        """Queue a request; counters are reserved immediately (the client
-        learns them synchronously and can pre-share them)."""
-        if not 0 <= req.session_id < len(self.batch.sessions):
-            raise KeyError(
-                f"unknown session {req.session_id} "
-                f"(pool has {len(self.batch.sessions)}; open_session() first)"
-            )
-        sess = self.batch.sessions[req.session_id]
-        # fresh-session space, via the cursor so a monkeypatched
-        # SESSION_CTR_LIMIT (tests) is honored
-        capacity = sess.next_ctr + sess.remaining()
-        # Auto-rotation is only sound for server-originated keystream:
-        # decrypt payloads are bound to the OLD (nonce, counter) space, so
-        # rotating would subtract fresh-nonce keystream and return garbage
-        # — for those, fall through and let take_window refuse loudly.
-        if (self.auto_rotate and req.blocks > sess.remaining()
-                and req.op not in ("decrypt", "decrypt_tokens")
-                and req.blocks <= capacity):
-            # old-nonce lanes must materialize before the table row is
-            # replaced — rotation is a flush boundary.  The forced flush's
-            # responses are buffered and handed out by the next flush().
-            self._done.extend(self._flush_queue())
-            sess = self.batch.rotate_session(req.session_id)
-        ctrs = sess.take_window(req.blocks)
-        self._queue.append((req, ctrs, time.perf_counter()))
-        return ctrs
-
     def pending_lanes(self) -> int:
-        return sum(req.blocks for req, _, _ in self._queue)
+        """Lanes submitted but not yet materialized (buffered + in-flight)."""
+        return self._buffered + self._inflight
+
+    def busy(self) -> bool:
+        """Whether eviction/teardown would lose work: lanes pending or
+        completed responses not yet collected."""
+        with self._lock:
+            return self.pending_lanes() > 0 or bool(self._completed)
 
     def warmup(self):
         """Compile the window-size programs before taking traffic (one dummy
@@ -164,87 +239,255 @@ class HHEServer:
             raise RuntimeError("open a session before warmup")
         plan = WindowPlan(np.zeros(self.window, np.int64),
                           np.zeros(self.window, np.int64))
-        jax.block_until_ready(self.farm.consume(self.farm.produce(plan)))
+        jax.block_until_ready(self.farm.run_one(plan))
 
     # ------------------------------------------------------------------
-    @staticmethod
-    def _pack(queue):
-        """Flatten queued requests into lane arrays + per-lane owner map."""
-        sids, ctrs, owners = [], [], []
-        for ridx, (req, rctrs, _) in enumerate(queue):
-            sids.append(np.full(req.blocks, req.session_id, np.int64))
-            ctrs.append(rctrs.astype(np.int64))
-            owners.append(
-                np.stack([np.full(req.blocks, ridx, np.int64),
-                          np.arange(req.blocks, dtype=np.int64)], axis=1))
-        return (np.concatenate(sids), np.concatenate(ctrs),
-                np.concatenate(owners))
+    def submit(self, req: HHERequest) -> Optional[np.ndarray]:
+        """Admit + queue a request; counters are reserved immediately (the
+        client learns them synchronously and can pre-share them).  Returns
+        the reserved counters, or None when the request was shed.  If the
+        request fills one or more windows and ``fire_on_fill`` is set,
+        they dispatch before submit returns — the submit IS the wake-up
+        event."""
+        with self._lock:
+            entry = self.submit_entry(req)
+            return None if entry is None else entry.ctrs
+
+    def submit_entry(self, req: HHERequest) -> Optional[_Entry]:
+        """submit(), but returns the internal entry (the async front end
+        correlates responses by ``entry.seq``)."""
+        with self._lock:
+            if not 0 <= req.session_id < len(self.batch.sessions):
+                raise KeyError(
+                    f"unknown session {req.session_id} (pool has "
+                    f"{len(self.batch.sessions)}; open_session() first)"
+                )
+            # admission control BEFORE any counter reservation: a shed or
+            # rejected request must leave no trace in the counter space
+            if (self.max_pending_lanes is not None
+                    and self.pending_lanes() + req.blocks
+                    > self.max_pending_lanes):
+                if self.overload == "shed":
+                    self.shed_count += 1
+                    return None
+                self.rejected_count += 1
+                raise HHEServerSaturated(
+                    f"pending lanes {self.pending_lanes()} + {req.blocks} "
+                    f"exceed max_pending_lanes={self.max_pending_lanes}; "
+                    "back off and retry")
+            sess = self.batch.sessions[req.session_id]
+            # fresh-session space, via the cursor so a monkeypatched
+            # SESSION_CTR_LIMIT (tests) is honored
+            capacity = sess.next_ctr + sess.remaining()
+            # Auto-rotation is only sound for server-originated keystream:
+            # decrypt payloads are bound to the OLD (nonce, counter) space,
+            # so rotating would subtract fresh-nonce keystream and return
+            # garbage — for those, fall through and let take_window refuse
+            # loudly.
+            if (self.auto_rotate and req.blocks > sess.remaining()
+                    and req.op not in ("decrypt", "decrypt_tokens")
+                    and req.blocks <= capacity):
+                # old-nonce lanes must materialize before the table row is
+                # replaced — rotation is a materialization boundary; the
+                # forced responses surface via flush()/pop_completed()
+                self._fire_full()
+                self._fire_partial()
+                self._drain()
+                sess = self.batch.rotate_session(req.session_id)
+            ctrs = sess.take_window(req.blocks)
+            entry = _Entry(
+                seq=self._seq, req=req, ctrs=ctrs,
+                t_submit=time.perf_counter(),
+                rows=np.empty((req.blocks, self.batch.params.l), np.uint32),
+                remaining=req.blocks,
+                nonce=bytes(sess.nonce), generation=sess.generation,
+            )
+            self._seq += 1
+            self._frags.append([entry, ctrs.astype(np.int64), 0])
+            self._buffered += req.blocks
+            if self.fire_on_fill:
+                self._fire_full()
+            return entry
+
+    # ------------------------------------------------------------------
+    # window carving and firing
+    # ------------------------------------------------------------------
+    def _carve(self, count: int) -> WindowPlan:
+        """Pop ``count`` buffered lanes into one WindowPlan (padded via
+        pack_windows when part-full), tagging per-lane owners in meta."""
+        sids = np.empty(count, np.int64)
+        ctrs = np.empty(count, np.int64)
+        owners = []
+        filled = 0
+        while filled < count:
+            frag = self._frags[0]
+            entry, ectrs, off = frag
+            take = min(count - filled, ectrs.shape[0] - off)
+            sids[filled:filled + take] = entry.req.session_id
+            ctrs[filled:filled + take] = ectrs[off:off + take]
+            owners.extend((entry, off + j) for j in range(take))
+            filled += take
+            if off + take == ectrs.shape[0]:
+                self._frags.popleft()
+            else:
+                frag[2] = off + take
+        self._buffered -= count
+        (plan,) = pack_windows(sids, ctrs, self.window)
+        plan.meta = owners
+        return plan
+
+    def _push(self, plan: WindowPlan) -> None:
+        self._inflight += plan.valid
+        self._pending_windows.append(plan)
+        for p, z in self._pipe.push(plan):
+            self._materialize(p, z)
+
+    def _fire_full(self) -> int:
+        """Dispatch every FULL buffered window (the fill event)."""
+        fired = 0
+        while self._buffered >= self.window:
+            self._push(self._carve(self.window))
+            self.fill_fires += 1
+            fired += 1
+        return fired
+
+    def _fire_partial(self) -> bool:
+        """Dispatch the part-full tail window, padded (deadline/flush/
+        rotation edges).  No-ops when nothing is buffered — the empty-
+        window dispatch the old pull loop could make is structurally
+        impossible here."""
+        if not self._buffered:
+            return False
+        self._push(self._carve(self._buffered))
+        return True
+
+    def _drain(self) -> None:
+        for p, z in self._pipe.drain():
+            self._materialize(p, z)
+
+    def _materialize(self, plan: WindowPlan, z) -> None:
+        z = np.asarray(jax.block_until_ready(z))
+        t_now = time.perf_counter()
+        self._pending_windows.popleft()
+        self._inflight -= plan.valid
+        self.windows_served += 1
+        for j in range(plan.valid):
+            entry, row = plan.meta[j]
+            entry.rows[row] = z[j]
+            entry.remaining -= 1
+            if entry.remaining == 0:
+                self._completed.append(self._respond(entry, t_now))
+
+    def _respond(self, entry: _Entry, t_done: float) -> HHEResponse:
+        req, z = entry.req, jnp.asarray(entry.rows)
+        mod = self.batch.params.mod
+        if req.op == "keystream":
+            result = entry.rows
+        elif req.op == "encrypt":
+            result = np.asarray(mod.add(
+                encode_fixed(mod, req.payload, req.delta), z))
+        elif req.op == "encrypt_tokens":        # exact Z_q, no encoding
+            result = np.asarray(mod.add(
+                jnp.asarray(req.payload, jnp.uint32), z))
+        elif req.op == "decrypt_tokens":
+            result = np.asarray(mod.sub(
+                jnp.asarray(req.payload, jnp.uint32), z
+            ).astype(jnp.int32))
+        else:  # decrypt
+            mq = mod.sub(jnp.asarray(req.payload, jnp.uint32), z)
+            result = np.asarray(decode_fixed(mod, mq, req.delta))
+        lat = t_done - entry.t_submit
+        self.latencies.append(lat)
+        return HHEResponse(request=req, result=result,
+                           block_ctrs=entry.ctrs, latency_s=lat,
+                           seq=entry.seq)
+
+    # ------------------------------------------------------------------
+    # scheduler edges
+    # ------------------------------------------------------------------
+    def _oldest_pending_t(self) -> Optional[float]:
+        if self._pending_windows:
+            return self._pending_windows[0].meta[0][0].t_submit
+        if self._frags:
+            return self._frags[0][0].t_submit
+        return None
+
+    def next_due(self) -> Optional[float]:
+        """perf_counter() time the deadline edge next trips, or None."""
+        with self._lock:
+            if self.deadline_s is None:
+                return None
+            t = self._oldest_pending_t()
+            return None if t is None else t + self.deadline_s
+
+    def service(self, now: Optional[float] = None) -> List[HHEResponse]:
+        """The timer edge: fire any full windows (for schedulers running
+        with ``fire_on_fill=False``), then — if the oldest un-materialized
+        lane is older than ``deadline_s`` — fire the part-full window and
+        drain the pipeline so everything pending lands.  Returns newly
+        completed responses (submission-ordered)."""
+        with self._lock:
+            self._fire_full()
+            if self.deadline_s is not None:
+                t = self._oldest_pending_t()
+                now = time.perf_counter() if now is None else now
+                if t is not None and now - t >= self.deadline_s:
+                    self._fire_partial()
+                    self._drain()
+                    self.deadline_fires += 1
+            return self.pop_completed()
 
     def flush(self) -> List[HHEResponse]:
-        """Run all queued requests through the farm; returns responses in
-        submission order (including any materialized early by a rotation-
-        forced flush)."""
-        done, self._done = self._done, []
-        return done + self._flush_queue()
+        """Force everything pending through the farm; returns responses in
+        submission order (including any materialized early by fill or
+        deadline fires).  Short-circuits the window dispatch when no lanes
+        are pending — a drained server never runs an empty window."""
+        with self._lock:
+            self.quiesce()
+            return self.pop_completed()
 
-    def _flush_queue(self) -> List[HHEResponse]:
-        if not self._queue:
-            return []
-        queue, self._queue = self._queue, []
-        sids, ctrs, owners = self._pack(queue)
+    def quiesce(self) -> None:
+        """Materialize everything pending WITHOUT collecting responses —
+        they stay queued for the next pop_completed()/flush().  The
+        rotation/eviction boundary for callers (serve/tenants.py) that
+        don't own response delivery."""
+        with self._lock:
+            if self._buffered:
+                self._fire_full()
+                self._fire_partial()
+            self._drain()
 
-        # ragged tails pad + trim in ONE place (core/farm.pack_windows);
-        # plan.valid marks where the real lanes end
-        plans = pack_windows(sids, ctrs, self.window)
-
-        l = self.batch.params.l
-        rows = [np.empty((req.blocks, l), np.uint32) for req, _, _ in queue]
-        remaining = [req.blocks for req, _, _ in queue]
-        done_t = [0.0] * len(queue)
-        for widx, (plan, z) in enumerate(self.farm.run(plans)):
-            z = np.asarray(jax.block_until_ready(z))
-            t_now = time.perf_counter()
-            lo = widx * self.window
-            for j in range(plan.valid):
-                ridx, row = owners[lo + j]
-                rows[ridx][row] = z[j]
-                remaining[ridx] -= 1
-                if remaining[ridx] == 0:
-                    done_t[ridx] = t_now
-
-        mod = self.batch.params.mod
-        out = []
-        for (req, rctrs, t_sub), zreq, t_done in zip(queue, rows, done_t):
-            z = jnp.asarray(zreq)
-            if req.op == "keystream":
-                result = zreq
-            elif req.op == "encrypt":
-                result = np.asarray(mod.add(
-                    encode_fixed(mod, req.payload, req.delta), z))
-            elif req.op == "encrypt_tokens":    # exact Z_q, no encoding
-                result = np.asarray(mod.add(
-                    jnp.asarray(req.payload, jnp.uint32), z))
-            elif req.op == "decrypt_tokens":
-                result = np.asarray(mod.sub(
-                    jnp.asarray(req.payload, jnp.uint32), z
-                ).astype(jnp.int32))
-            else:  # decrypt
-                mq = mod.sub(jnp.asarray(req.payload, jnp.uint32), z)
-                result = np.asarray(decode_fixed(mod, mq, req.delta))
-            lat = t_done - t_sub
-            self.latencies.append(lat)
-            out.append(HHEResponse(request=req, result=result,
-                                   block_ctrs=rctrs, latency_s=lat))
-        return out
+    def pop_completed(self) -> List[HHEResponse]:
+        """Collect responses completed since the last collection, in
+        submission order."""
+        with self._lock:
+            out, self._completed = self._completed, []
+            out.sort(key=lambda r: r.seq)
+            return out
 
     # ------------------------------------------------------------------
     def latency_stats(self) -> dict:
-        if not self.latencies:
-            return {"count": 0}
-        lat = np.asarray(self.latencies)
-        return {
-            "count": int(lat.size),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
-            "mean_ms": float(lat.mean() * 1e3),
-        }
+        """Always fully populated — zeroed percentiles before any window
+        has served (the empty-percentile crash is gone), plus scheduler/
+        admission counters."""
+        with self._lock:
+            stats = {"count": 0, "p50_ms": 0.0, "p99_ms": 0.0,
+                     "mean_ms": 0.0}
+            if self.latencies:
+                lat = np.asarray(self.latencies)
+                stats = {
+                    "count": int(lat.size),
+                    "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                    "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                    "mean_ms": float(lat.mean() * 1e3),
+                }
+            stats.update(
+                queue_depth_lanes=self._buffered,
+                inflight_lanes=self._inflight,
+                windows_served=self.windows_served,
+                fill_fires=self.fill_fires,
+                deadline_fires=self.deadline_fires,
+                shed=self.shed_count,
+                rejected=self.rejected_count,
+            )
+            return stats

@@ -44,6 +44,7 @@ SEED, LANES = 123, 4
 # golden-regen stage fails if regeneration would change any digest.
 # --- GOLDEN-BEGIN (scripts/regen_goldens.py) ---
 GOLDEN = {
+    ("hera-80", "plain"): "c5a66b2b098fede998837c2f7596f0279d9b44968561a3d90058713c5410e052",
     ("hera-128a", "plain"): "894abb58f75f5306e40200bc670d9e4672dd5e345d1f0ad97545c22f1b1132b2",
     ("rubato-128s", "plain"): "9c46b0244571ba344f043498875dea5576c0a6775e39676294191a7e0adf315f",
     ("rubato-128s", "noise"): "e5d632a451be7b27918ac669ef8bf177fd814b779658d28550e396eedc97ee75",
